@@ -1,0 +1,66 @@
+"""Paper Fig. 1(a)/Fig. 2: decode latency vs concurrency for TP/EP/Moebius.
+
+Two modes:
+  * target-HW (analytical): the calibrated cost model at the paper's own
+    setting (Qwen3-235B, 8xH200) and at TPU v5e G=16 — validates the
+    crossover location against the paper's B in (128, 256].
+  * measured (CPU, 8 host devices): real decode-step wall time of the tiny
+    MoE under both layouts across batch sizes (mechanism-scale).
+"""
+from __future__ import annotations
+
+
+def run(measured: bool = True):
+    rows = []
+    from repro.configs import get_config
+    from repro.core.cost_model import H200, TPU_V5E, crossover_batch, sweep
+    cfg235 = get_config("qwen3-235b-a22b")
+    for r in sweep(cfg235, [8, 32, 64, 128, 256, 512, 1024, 2048],
+                   kv_len=2048, hw=H200, G=8):
+        rows.append((f"crossover.h200.B{r['B']}.tp_ms", r["tp_ms"] * 1e3,
+                     r["winner"]))
+        rows.append((f"crossover.h200.B{r['B']}.ep_ms", r["ep_ms"] * 1e3,
+                     r["winner"]))
+    xb = crossover_batch(cfg235, 2048, H200, 8)
+    rows.append(("crossover.h200.switch_point", float(xb),
+                 "paper: between 128 and 256"))
+    xv = crossover_batch(cfg235, 2048, TPU_V5E, 16)
+    rows.append(("crossover.v5e_g16.switch_point", float(xv), ""))
+
+    if measured:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from benchmarks.common import bench_cfg, make_engine, time_call
+        from repro.core.layouts import EP, TP
+        from repro.launch.mesh import make_mesh
+        from repro.serving.steps import build_decode_pack, build_serve_step
+        from repro.core.layouts import pack_params
+        from repro.models.registry import init_params
+        from repro.serving.kvcache import CacheConfig
+
+        mesh = make_mesh((1, 8), ("data", "model"))
+        cfg = bench_cfg()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        cc = CacheConfig(page_size=16, pages_ep=256, max_pages_per_req=16)
+        key = jax.random.key_data(jax.random.PRNGKey(1))
+        for B in (8, 16, 32, 64, 128):
+            per = {}
+            for layout in (TP, EP):
+                sp = pack_params(cfg, params, layout, 8)
+                pack = build_decode_pack(cfg, sp, layout, 8)
+                step = build_serve_step(cfg, mesh, layout, cc, B, Sq=1,
+                                        donate=False)
+                kv = jnp.zeros((1, 8, cc.nelems(cfg, 8)), jnp.float32)
+                toks = jnp.ones((1, B, 1), jnp.int32)
+                pos = jnp.full((1, B), 5, jnp.int32)
+                vl = jnp.ones((1, B), jnp.int32)
+                bt = jnp.ones((1, B, 16), jnp.int32)
+                t = time_call(lambda: step(pack, kv, toks, pos, vl, bt, key),
+                              warmup=2, iters=5)
+                per[layout] = t
+                rows.append((f"crossover.cpu.B{B}.{layout}_step",
+                             t * 1e6, ""))
+            rows.append((f"crossover.cpu.B{B}.winner",
+                         0.0, TP if per[TP] <= per[EP] else EP))
+    return rows

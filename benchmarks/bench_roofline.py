@@ -1,0 +1,59 @@
+"""Roofline report: reads results/dryrun/*.json and emits the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+MODEL_FLOPS/HLO_FLOPs ratio). Also writes results/roofline.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+
+def load_cells(pattern: str = "results/dryrun/*.json") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(pattern)):
+        try:
+            cells.append(json.load(open(f)))
+        except Exception:
+            pass
+    return cells
+
+
+def dominant(a: dict) -> str:
+    terms = {"compute": a["t_compute"], "memory": a["t_memory"],
+             "collective": a["t_collective"]}
+    return max(terms, key=terms.get)
+
+
+def run(write_md: bool = True):
+    rows = []
+    cells = load_cells()
+    md = ["| cell | layout | t_comp (us) | t_mem (us) | t_coll (us) | "
+          "bottleneck | useful/HLO | fits? |",
+          "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("status") != "ok" or c.get("mesh") != "pod1":
+            continue
+        a = c["analytic"]
+        name = f"{c['arch']}.{c['shape']}"
+        dom = dominant(a)
+        hlo_flops = c.get("cost_analysis", {}).get("flops", 0.0)
+        useful = a["useful_flops_per_dev"]
+        ratio = useful / hlo_flops if hlo_flops else float("nan")
+        arg_gib = c.get("memory", {}).get("argument_size_in_bytes", 0) / 2**30
+        fits = "yes" if arg_gib < 14.5 else f"NO ({arg_gib:.1f}GiB)"
+        rows.append((f"roofline.{name}.{c['layout']}.t_compute_s",
+                     a["t_compute"] * 1e6, dom))
+        rows.append((f"roofline.{name}.{c['layout']}.t_memory_s",
+                     a["t_memory"] * 1e6, ""))
+        rows.append((f"roofline.{name}.{c['layout']}.t_collective_s",
+                     a["t_collective"] * 1e6, ""))
+        md.append(f"| {name} | {c['layout']} | {a['t_compute']*1e6:.1f} | "
+                  f"{a['t_memory']*1e6:.1f} | {a['t_collective']*1e6:.1f} | "
+                  f"{dom} | {ratio:.3f} | {fits} |")
+    if write_md and rows:
+        Path("results").mkdir(exist_ok=True)
+        Path("results/roofline.md").write_text("\n".join(md) + "\n")
+        rows.append(("roofline.table_rows", float(len(md) - 2),
+                     "results/roofline.md"))
+    return rows

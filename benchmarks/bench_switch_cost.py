@@ -1,0 +1,90 @@
+"""Paper Fig. 11 + Table 1: switch cost decomposition and transfer paths.
+
+(a) end-to-end switch latency by phase (plan/weights/KV) across KV-cache
+    occupancy levels (live requests with growing context);
+(b) direct (shard_map fused) vs XLA-collective expert reshard, both
+    directions;
+(c) Table-1 analogue: per-element HBM/link passes + bytes moved, analytic.
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+
+def run(seed: int = 0):
+    import jax
+    import numpy as np
+    from benchmarks.common import bench_cfg, make_engine, time_call
+    from repro.core.layouts import EP, TP
+    from repro.core.switch import (make_reshard_experts,
+                                   make_reshard_experts_direct)
+    from repro.distributed.collectives import switch_bytes
+    from repro.launch.mesh import make_mesh
+    from repro.serving.request import Request
+
+    mesh = make_mesh((1, 8), ("data", "model"))
+    cfg = bench_cfg()
+    rows = []
+
+    # (a) switch phases vs occupancy
+    rng = np.random.default_rng(seed)
+    for occupancy, n_req, ctx in [("light", 4, 16), ("medium", 16, 64),
+                                  ("heavy", 32, 160)]:
+        eng = make_engine(cfg, mesh, start=EP, ladder=(8, 16, 32),
+                          pages_ep=1024, maxp=32)
+        for i in range(n_req):
+            eng.submit(Request(rid=i, prompt=list(rng.integers(5, 100, ctx)),
+                               max_new_tokens=64, arrival_s=0.0))
+        # prefill everyone, decode a few steps to populate KV
+        for _ in range(ctx // eng.ecfg.prefill_chunk + n_req + 6):
+            eng.step()
+        live = len(eng.running)
+        # warm the jitted movers first (compile time is the recapture
+        # strawman, not the switch) — one round trip, discarded
+        eng.execute_switch(TP)
+        eng.execute_switch(EP)
+        rec_pair = []
+        for direction in ("ep_to_tp", "tp_to_ep"):
+            target = TP if direction == "ep_to_tp" else EP
+            eng.execute_switch(target)
+            r = eng.switch_records[-1]
+            rec_pair.append(r)
+            rows.append((f"switch.{occupancy}.{direction}.total_s",
+                         r.total_s * 1e6,
+                         f"pages={r.kv_pages} live={r.live_requests}"))
+            rows.append((f"switch.{occupancy}.{direction}.weights_s",
+                         r.weights_s * 1e6, ""))
+            rows.append((f"switch.{occupancy}.{direction}.kv_s",
+                         r.kv_s * 1e6, ""))
+            rows.append((f"switch.{occupancy}.{direction}.plan_s",
+                         r.plan_s * 1e6, ""))
+
+    # (b) direct vs XLA expert reshard (same bytes, different path)
+    import jax.numpy as jnp
+    import jax.random as jr
+    from repro.models.moe import make_expert_layout, pack_w13, pack_experts
+    G = 8
+    E, I, D, L = cfg.num_experts, cfg.d_expert, cfg.d_model, cfg.num_layers
+    lay_ep = make_expert_layout(E, G, "ep")
+    w13 = jr.normal(jr.PRNGKey(0), (L, E, 2 * I, D), jnp.float32)
+    w2 = jr.normal(jr.PRNGKey(1), (L, E, D, I), jnp.float32)
+    w13_ep = jax.vmap(lambda w: pack_w13(w, lay_ep))(w13)
+    w2_ep = jax.vmap(lambda w: pack_experts(w, lay_ep, 2))(w2)
+    direct = make_reshard_experts_direct(cfg, mesh, "ep_to_tp")
+    t_direct = time_call(lambda: direct(w13_ep, w2_ep), warmup=3, iters=10)
+    moe = {"w13": w13_ep, "w2": w2_ep}
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), moe)
+    xla = make_reshard_experts(cfg, mesh, "ep", "tp", donate=False)(sds)
+    t_xla = time_call(lambda: xla(moe), warmup=2, iters=10)
+    rows.append(("switch.reshard.direct_s", t_direct * 1e6, ""))
+    rows.append(("switch.reshard.xla_collective_s", t_xla * 1e6,
+                 f"direct_speedup={t_xla/t_direct:.2f}x (paper: 1.49x vs NCCL)"))
+
+    # (c) Table 1: bytes moved + per-element passes
+    sb = switch_bytes(cfg, G, live_tokens=32 * 160)
+    rows.append(("switch.bytes.expert_moved", float(sb["expert_bytes_moved"]),
+                 "direct: 1 HBM read + 1 link pass/el (staged: 2+1 HBM)"))
+    rows.append(("switch.bytes.kv_moved", float(sb["kv_bytes_moved"]),
+                 "direct: 1+0 HBM vs staged 3+2"))
+    return rows

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing + tiny-MoE engine factory."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_cfg(num_layers: int = 2, d_model: int = 64, experts: int = 8):
+    """Small-but-real MoE used by the dynamic benchmarks (CPU, 8 devices)."""
+    from repro.configs import get_config
+    return get_config("mixtral-8x7b").reduced(
+        num_layers=num_layers, d_model=d_model, num_heads=8, num_kv_heads=4,
+        head_dim=16, num_experts=experts, top_k=2, d_expert=d_model,
+        vocab_size=512, capacity_factor=4.0,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
+                pages_ep=512, page=16, maxp=64, prefill_chunk=64, seed=0,
+                time_scale=1.0):
+    from repro.core.policy import PolicyConfig
+    from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.kvcache import CacheConfig
+    pol = policy or PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    cc = CacheConfig(page_size=page, pages_ep=pages_ep,
+                     max_pages_per_req=maxp)
+    return MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout=start, ladder=ladder, prefill_chunk=prefill_chunk,
+        temperature=0.0, policy=pol, seed=seed, time_scale=time_scale))
+
+
+def fmt_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The dynamic benchmarks need
+multiple host devices: we force 8 (not 512 — that count is dry-run-only)
+before jax initializes.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_bursty, bench_crossover, bench_graphs,
+                            bench_memory, bench_roofline, bench_rollout,
+                            bench_switch_cost)
+    benches = {
+        "crossover": lambda: bench_crossover.run(measured=True),
+        "switch_cost": bench_switch_cost.run,
+        "graphs": bench_graphs.run,
+        "memory": bench_memory.run,
+        "rollout": (lambda: bench_rollout.run(steps=1, scale=0.008))
+        if args.fast else (lambda: bench_rollout.run(steps=3, scale=0.012)),
+        "bursty": (lambda: bench_bursty.run(scale=0.02, duration=12.0))
+        if args.fast else (lambda: bench_bursty.run()),
+        "roofline": bench_roofline.run,
+    }
+    names = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in names:
+        try:
+            for row in benches[name]():
+                nm, us, derived = row
+                print(f"{nm},{us:.2f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

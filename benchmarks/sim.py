@@ -1,0 +1,147 @@
+"""Trace-driven discrete-event simulation at target-HW constants.
+
+The CPU engine validates the MECHANISM (switching preserves outputs, policy
+tracks load); absolute TP/EP speed differences on a shared-memory CPU are
+emulation artifacts. This simulator replays the same request trajectories
+through the calibrated cost model (core/cost_model.py — which reproduces the
+paper's measured crossover) to project end-to-end numbers on the paper's
+8xH200 setting and on the v5e pod. Decode-dominated, like the paper's
+rollout workload; switches pay the owner-changed-bytes cost (paper §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost_model import HWSpec, H200, decode_step_time
+from repro.core.layouts import EP, TP
+from repro.distributed.collectives import switch_bytes
+from repro.models.common import ModelConfig
+
+
+def switch_cost_s(cfg: ModelConfig, G: int, live_tokens: int,
+                  hw: HWSpec) -> float:
+    sb = switch_bytes(cfg, G, live_tokens)
+    bytes_per_rank = sb["per_rank_expert"] + sb["per_rank_kv"]
+    return bytes_per_rank / hw.link_bw + 0.05   # + control-plane floor
+
+
+@dataclass
+class SimResult:
+    total_s: float
+    switches: list
+    steps: int
+
+
+def simulate_rollout(cfg: ModelConfig, out_lens: np.ndarray, *,
+                     policy: str, t_high: int = 256, G: int = 8,
+                     hw: HWSpec = H200, kv_mean: int = 2048) -> SimResult:
+    """Decode a batch of requests with given output lengths to completion.
+
+    policy: 'tp' | 'ep' (static) | 'moebius' (rollout setting: T_l = T_h,
+    W=1 — one EP->TP switch as the batch drains below the crossover).
+    """
+    remaining = np.sort(out_lens.astype(np.int64))  # ascending
+    n = len(remaining)
+    t = 0.0
+    steps = 0
+    layout = EP if policy in ("ep", "moebius") else TP
+    switches = []
+    i = 0                      # requests finished so far
+    done_tokens = 0
+    while i < n:
+        B = n - i
+        if policy == "moebius" and layout == EP and B < t_high:
+            live_tok = int(B * (kv_mean + remaining[i] // 2))
+            dt_sw = switch_cost_s(cfg, G, live_tok, hw)
+            t += dt_sw
+            layout = TP
+            switches.append((t, "ep_to_tp", dt_sw))
+        # run until the next request finishes (same layout, B constant)
+        run_len = int(remaining[i] - done_tokens)
+        if policy == "moebius" and layout == EP:
+            # cap the chunk so we re-check the threshold as B decays
+            run_len = max(1, run_len)
+        dt = decode_step_time(cfg, layout, B, kv_mean, hw, G)["total"]
+        t += dt * run_len
+        steps += run_len
+        done_tokens += run_len
+        while i < n and remaining[i] == done_tokens:
+            i += 1
+    return SimResult(total_s=t, switches=switches, steps=steps)
+
+
+def simulate_bursty(cfg: ModelConfig, arrivals: np.ndarray,
+                    out_lens: np.ndarray, *, policy: str, t_high: int = 256,
+                    t_low: float = 0.8, window: int = 8, cooldown: float = 5.0,
+                    G: int = 8, hw: HWSpec = H200,
+                    kv_mean: int = 1024, prefill_s: float = 0.030):
+    """Event-driven bursty serving: decode steps advance virtual time; each
+    step also admits one waiting request (prefill cost added). Returns
+    per-request (ttft, tpot) plus switch log."""
+    order = np.argsort(arrivals)
+    arrivals = arrivals[order]
+    out_lens = out_lens[order].astype(np.int64)
+    n = len(arrivals)
+    t = 0.0
+    layout = EP if policy == "ep" else TP
+    nxt = 0                       # next arrival index
+    active: list[list] = []       # [remaining, ttft_start, tokens_done]
+    waiting: list[int] = []
+    ttft = np.full(n, np.nan)
+    finish = np.full(n, np.nan)
+    hist: list[int] = []
+    last_switch = -1e9
+    switches = []
+    while nxt < n or waiting or active:
+        while nxt < n and arrivals[nxt] <= t:
+            waiting.append(nxt)
+            nxt += 1
+        if not waiting and not active and nxt < n:
+            t = float(arrivals[nxt])
+            continue
+        in_flight = len(active) + len(waiting)
+        hist.append(in_flight)
+        if policy == "moebius" and t - last_switch > cooldown:
+            if layout == TP and in_flight > t_high:
+                dt_sw = switch_cost_s(
+                    cfg, G, int(sum(a[2] for a in active)) + kv_mean, hw)
+                t += dt_sw
+                layout = EP
+                last_switch = t
+                switches.append((t, "tp_to_ep"))
+            elif layout == EP and len(hist) >= window and \
+                    np.mean(hist[-window:]) < t_low * t_high:
+                dt_sw = switch_cost_s(
+                    cfg, G, int(sum(a[2] for a in active)) + kv_mean, hw)
+                t += dt_sw
+                layout = TP
+                last_switch = t
+                switches.append((t, "ep_to_tp"))
+        # admit a few waiting requests per iteration (prefill cap)
+        admit = min(len(waiting), 4 if layout == EP else 1)
+        for _ in range(admit):
+            rid = waiting.pop(0)
+            t += prefill_s
+            ttft[rid] = t - arrivals[rid]
+            active.append([out_lens[rid], rid, 0])
+        if active:
+            B = len(active)
+            dt = decode_step_time(cfg, layout, B, kv_mean, hw, G)["total"]
+            t += dt
+            done = []
+            for a in active:
+                a[0] -= 1
+                a[2] += 1
+                if a[0] <= 0:
+                    finish[a[1]] = t
+                    done.append(a)
+            for a in done:
+                active.remove(a)
+    tpot = (finish - arrivals - ttft) / np.maximum(out_lens - 1, 1)
+    return {"ttft_mean": float(np.nanmean(ttft)),
+            "ttft_p99": float(np.nanpercentile(ttft, 99)),
+            "tpot_mean": float(np.nanmean(tpot)),
+            "makespan": float(np.nanmax(finish)),
+            "switches": switches}

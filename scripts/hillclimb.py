@@ -1,0 +1,60 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf hillclimb driver: lower a cell variant with explicit knobs, record
+# the three roofline terms + compiled artifact metrics into results/perf/.
+#
+#   PYTHONPATH=src python scripts/hillclimb.py --arch qwen3-235b-a22b \
+#       --shape decode_32k --layout ep --tag baseline
+import argparse
+import json
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--layout", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--remat", default="on", choices=["on", "off"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--zero", action="store_true")
+    ap.add_argument("--page", type=int, default=128)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    rec = lower_cell(args.arch, args.shape, args.mesh, args.layout,
+                     remat=(args.remat == "on"), grad_accum=args.grad_accum,
+                     zero=args.zero, page=args.page)
+    rec["knobs"] = {"remat": args.remat, "grad_accum": args.grad_accum,
+                    "zero": args.zero, "page": args.page,
+                    "layout": args.layout}
+    out = Path("results/perf")
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{args.layout}__{args.tag}"
+    (out / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    if rec.get("status") != "ok":
+        print(f"[hillclimb] {name}: {rec.get('status')} "
+              f"{rec.get('error', '')[:300]}")
+        return
+    a = rec["analytic"]
+    ca = rec.get("cost_analysis", {})
+    mem = rec.get("memory", {})
+    hlo = rec.get("hlo_collectives", {}).get("counts", {})
+    dom = max(("t_compute", "t_memory", "t_collective"), key=lambda k: a[k])
+    print(f"[hillclimb] {name}")
+    print(f"  t_compute={a['t_compute']*1e6:9.1f}us  "
+          f"t_memory={a['t_memory']*1e6:9.1f}us  "
+          f"t_collective={a['t_collective']*1e6:9.1f}us  dominant={dom}")
+    print(f"  hlo_flops/dev={ca.get('flops', 0):.3e}  "
+          f"useful={a['useful_flops_per_dev']:.3e}  "
+          f"ratio={a['useful_flops_per_dev']/max(ca.get('flops', 1), 1):.3f}")
+    print(f"  argbytes={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB  "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB  "
+          f"collectives={hlo}")
+
+
+if __name__ == "__main__":
+    main()

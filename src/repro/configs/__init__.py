@@ -1,0 +1,35 @@
+"""Architecture config registry: the 10 assigned archs + the paper's model."""
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.mistral_large_123b import CONFIG as _mistral_large
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2_moe
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.whisper_base import CONFIG as _whisper
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
+from repro.configs.paligemma_3b import CONFIG as _paligemma
+from repro.configs.qwen3_235b_a22b import CONFIG as _qwen3_235b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _internlm2, _starcoder2, _qwen3_4b, _mistral_large, _qwen2_moe,
+        _mixtral, _whisper, _mamba2, _zamba2, _paligemma, _qwen3_235b,
+    ]
+}
+
+ASSIGNED = [
+    "internlm2-1.8b", "starcoder2-15b", "qwen3-4b", "mistral-large-123b",
+    "qwen2-moe-a2.7b", "mixtral-8x7b", "whisper-base", "mamba2-780m",
+    "zamba2-2.7b", "paligemma-3b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]

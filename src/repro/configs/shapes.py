@@ -1,0 +1,55 @@
+"""Assigned input-shape set for the LM-family architectures.
+
+Every (arch x shape) cell is well-defined; applicability rules:
+  * decode_* / long_* lower `serve_step` (1 new token + KV cache of seq_len)
+  * long_500k runs only for sub-quadratic archs (ssm / hybrid / SWA-moe)
+  * encoder frames / image patches are stubbed embeddings via input_specs()
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs for which long_500k is runnable (sub-quadratic decode state)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def long_ok(cfg: ModelConfig) -> bool:
+    if cfg.family in LONG_OK_FAMILIES:
+        return True
+    return cfg.sliding_window > 0          # SWA bounds the live KV window
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """-> (applicable, reason-if-not)."""
+    if shape.name == "long_500k" and not long_ok(cfg):
+        return False, "full quadratic attention; long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jnp.zeros((B, S), jnp.int32),   # ShapeDtypeStruct at callsite
+        "labels": jnp.zeros((B, S), jnp.int32),
+    }
+    return specs

@@ -1,0 +1,289 @@
+"""Layouts: the paper's EP and TP as per-tensor sharding rules.
+
+A *layout* fixes, for every switchable tensor, which `model`-axis rank owns
+which slice. Both layouts compute the same function over byte-identical
+global state (paper §3). Non-switchable tensors (embeddings, dense MLP,
+norms) keep one layout-independent sharding.
+
+Key objects:
+  * GroupInfo        — head/replication arithmetic for the G-rank group
+  * param_specs      — PartitionSpec pytree for a layout (GSPMD path)
+  * pack_params      — global init params -> layout-specific stored form
+                       (rank-major experts; padded vocab)
+  * attn_rank_major  — decode-path attention weights expanded to (G, ...) with
+                       head-block replication when heads < G (wo pre-scaled by
+                       1/q_rep so the group psum is exact)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
+                              pack_w13)
+
+TP, EP = "tp", "ep"
+# TPEP: TP attention + experts sharded over the FULL (data x model) mesh —
+# the v5e-HBM-feasible high-throughput layout for >=100B MoE (DESIGN.md: on
+# 16GB chips the paper's DP-attention assumption breaks for big attention
+# stacks; the switch group generalizes from 8 GPUs to 256 chips).
+TPEP = "tpep"
+LAYOUTS = (TP, EP, TPEP)
+
+
+# ---------------------------------------------------------------------------
+# Group arithmetic
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GroupInfo:
+    """Facts about how heads/experts split over the switchable G-rank group."""
+    G: int
+    cfg_heads: int
+    cfg_kv_heads: int
+
+    @property
+    def q_local(self) -> int:
+        return max(1, self.cfg_heads // self.G)
+
+    @property
+    def q_rep(self) -> int:
+        return max(1, self.G // self.cfg_heads)
+
+    @property
+    def kv_local(self) -> int:
+        return max(1, self.cfg_kv_heads // self.G)
+
+    @property
+    def kv_rep(self) -> int:
+        """TP KV replication factor == the paper's KV-capacity penalty."""
+        return max(1, self.G // self.cfg_kv_heads)
+
+    def q_block(self, rank: int) -> int:
+        """First global q-head of `rank`'s block."""
+        return (rank // self.q_rep) * self.q_local
+
+    def kv_block(self, rank: int) -> int:
+        return (rank // self.kv_rep) * self.kv_local
+
+
+def group_info(cfg: ModelConfig, G: int) -> GroupInfo:
+    return GroupInfo(G=G, cfg_heads=cfg.num_heads, cfg_kv_heads=cfg.num_kv_heads)
+
+
+def expert_layout(cfg: ModelConfig, G: int, layout: str) -> ExpertLayout:
+    return make_expert_layout(cfg.num_experts, G, layout)
+
+
+def padded_vocab(V: int, multiple: int = 256) -> int:
+    return -(-V // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Param packing: global init -> layout-specific stored form
+# ---------------------------------------------------------------------------
+
+def _pack_moe(moe: dict, lay: ExpertLayout) -> dict:
+    """Stacked (L, E, ...) expert weights -> rank-major (L, G, E_loc, ...)."""
+    out = dict(moe)
+    out["w13"] = jax.vmap(lambda w: pack_w13(w, lay))(moe["w13"])
+    out["w2"] = jax.vmap(lambda w: pack_experts(w, lay, width_axis=2))(moe["w2"])
+    return out
+
+
+def _pad_vocab_tables(params: dict, V: int, Vp: int) -> dict:
+    def padv(x):
+        if x.ndim >= 2 and x.shape[0] == V:
+            return jnp.pad(x, ((0, Vp - V),) + ((0, 0),) * (x.ndim - 1))
+        return x
+    out = dict(params)
+    for k in ("embed", "lm_head"):
+        if k in out:
+            out[k] = padv(out[k])
+    return out
+
+
+def pack_params(cfg: ModelConfig, params: dict, layout: str, G: int,
+                expert_G: int | None = None) -> dict:
+    """Init-time global params -> stored form for `layout` on a G-rank group.
+
+    expert_G overrides the expert-sharding group size (TPEP: the full mesh).
+    """
+    params = _pad_vocab_tables(params, cfg.vocab_size,
+                               padded_vocab(cfg.vocab_size))
+    if cfg.is_moe and "layers" in params and "moe" in params["layers"]:
+        eg = expert_G or G
+        lay = expert_layout(cfg, eg, EP if layout == TPEP else layout)
+        params = dict(params)
+        params["layers"] = dict(params["layers"])
+        params["layers"]["moe"] = _pack_moe(params["layers"]["moe"], lay)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec rules (GSPMD train/prefill path)
+# ---------------------------------------------------------------------------
+
+def _spec_last(ndim: int, axis: str) -> P:
+    return P(*([None] * (ndim - 1)), axis)
+
+
+def _spec_dim(ndim: int, dim: int, axis: str) -> P:
+    spec = [None] * ndim
+    spec[dim] = axis
+    return P(*spec)
+
+
+def _leaf_spec(cfg: ModelConfig, layout: str, path: str, leaf,
+               m: str, exp_ax=None) -> P:
+    """Sharding rule for one param leaf. `path` is '/'-joined key path.
+    exp_ax: expert-sharding axes (TPEP: the full mesh)."""
+    nd = leaf.ndim
+    name = path.split("/")[-1]
+    rep = P()  # replicated
+    if layout == TPEP:
+        # TPEP = TP rules everywhere except experts over exp_ax
+        if name in ("w13", "w2") and nd >= 4:
+            return _spec_dim(nd, nd - 4, exp_ax or m)
+        return _leaf_spec(cfg, TP, path, leaf, m)
+
+    # vocab tables: TP shards the vocab; EP replicates them within the model
+    # group (the paper's "+12.7 GB/GPU: DP attention replicates the attention
+    # stack and per-rank embedding/LM head")
+    if name in ("embed", "lm_head"):
+        return _spec_dim(nd, 0, m) if layout == TP else rep
+    if name == "dec_pos":
+        return rep
+    # norms and small vectors
+    if name in ("scale", "bias", "norm", "q_norm", "k_norm", "router",
+                "shared_gate", "A_log", "Dskip", "dt_bias"):
+        return rep
+    # rank-major experts: (L, G, ...) or (G, ...)
+    if name in ("w13", "w2") and nd >= 4:
+        return _spec_dim(nd, nd - 4, m)
+    # attention projections
+    if name in ("wq", "wk", "wv"):
+        if layout == TP or "xattn" in path or "encoder" in path:
+            # encoder/cross attention has no DP-vs-TP switch state; keep TP
+            return _spec_last(nd, m)
+        return rep
+    if name == "wo":
+        if layout == TP or "xattn" in path or "encoder" in path:
+            return _spec_dim(nd, nd - 2, m)
+        return rep
+    # dense MLP: always TP (Megatron) — not switch state
+    if name in ("w_gate", "w_up"):
+        return _spec_last(nd, m)
+    if name == "w_down":
+        return _spec_dim(nd, nd - 2, m)
+    # shared experts: TP-sharded in TP layout, replicated in EP layout
+    if name in ("shared_wg", "shared_wu"):
+        return _spec_dim(nd, nd - 2, m) if layout == TP else rep
+    if name == "shared_w2":
+        return _spec_last(nd, m) if layout == TP else rep
+    # SSM: TP shards inner channels/heads; EP(DP) replicates
+    if name in ("wz", "wx"):
+        return _spec_last(nd, m) if layout == TP else rep
+    if name in ("wB", "wC", "conv_B", "conv_C"):
+        return rep
+    if name == "wdt":
+        return _spec_last(nd, m) if layout == TP else rep
+    if name == "conv_x":
+        return _spec_last(nd, m) if layout == TP else rep
+    if name == "out_proj":
+        return _spec_dim(nd, nd - 2, m) if layout == TP else rep
+    return rep
+
+
+def param_specs(cfg: ModelConfig, params: dict, layout: str,
+                model_axis: str = "model", data_axes=("data",)) -> Any:
+    """PartitionSpec pytree matching `params` for `layout`."""
+    exp_ax = tuple(data_axes) + (model_axis,) if layout == TPEP else None
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        return _leaf_spec(cfg, layout, "/".join(str(k) for k in keys), leaf,
+                          model_axis, exp_ax)
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(layout: str, dp_axes=("data",), model_axis: str = "model"):
+    """Token-batch sharding: EP additionally splits batch over `model`."""
+    dp = tuple(dp_axes)
+    if layout == EP:
+        return P(dp + (model_axis,), None)
+    return P(dp, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode-path rank-major attention weights
+# ---------------------------------------------------------------------------
+
+def attn_rank_major(cfg: ModelConfig, ap: dict, G: int) -> dict:
+    """Stacked attention params (L, ...) -> TP rank-major (L?, G, ...).
+
+    Head blocks replicate when heads < G; wo is pre-scaled by 1/q_rep so the
+    model-group psum of partial outputs is exact.
+    """
+    gi = group_info(cfg, G)
+    dh = cfg.dh
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    ql, kl = gi.q_local, gi.kv_local
+    has_L = ap["wq"].ndim == 3
+
+    def blocks_for(w, heads, local, head_axis):
+        """Slice head-blocks per rank -> (G, ...) stacked (replicated when
+        heads < G)."""
+        shp = list(w.shape)
+        shp[head_axis:head_axis + 1] = [heads, dh]
+        wh = w.reshape(shp)
+        rep = max(1, G // heads)
+        outs = []
+        for r in range(G):
+            start = (r // rep) * local
+            outs.append(jax.lax.dynamic_slice_in_dim(wh, start, local,
+                                                     head_axis))
+        out = jnp.stack(outs, axis=0)
+        mg = list(out.shape)
+        mg[head_axis + 1:head_axis + 3] = [local * dh]
+        out = out.reshape(mg)
+        # (G, L, ...) -> (L, G, ...) when stacked
+        return jnp.moveaxis(out, 0, 1) if has_L else out
+
+    ha = 2 if has_L else 1          # head axis of (L?, D, H*dh)
+    oa = 1 if has_L else 0          # head axis of (L?, H*dh, D)
+    out = {
+        "wq": blocks_for(ap["wq"], H, ql, ha),
+        "wk": blocks_for(ap["wk"], K, kl, ha),
+        "wv": blocks_for(ap["wv"], K, kl, ha),
+        "wo": blocks_for(ap["wo"] / gi.q_rep, H, ql, oa),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = _bcast_g(ap["q_norm"], G)
+        out["k_norm"] = _bcast_g(ap["k_norm"], G)
+    return out
+
+
+def _bcast_g(x: jax.Array, G: int) -> jax.Array:
+    """(L?, dh) -> (L?, G, dh) replicated."""
+    return jnp.broadcast_to(x[..., None, :], x.shape[:-1] + (G, x.shape[-1]))
+
+
+def expand_kv_heads(cfg: ModelConfig, x: jax.Array, G: int,
+                    head_axis: int = -2) -> jax.Array:
+    """(..., K, dh) -> (..., G*Kl, dh): materialize the rank-order KV head
+    blocks (replicated when K < G), matching attn_rank_major's layout. Used
+    for dense cross-KV caches that must shard on the model axis."""
+    gi = group_info(cfg, G)
+    ha = head_axis % x.ndim
+    blocks = []
+    for r in range(G):
+        start = gi.kv_block(r)
+        blocks.append(jax.lax.dynamic_slice_in_dim(x, start, gi.kv_local,
+                                                   ha))
+    return jnp.concatenate(blocks, axis=ha)

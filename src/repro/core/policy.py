@@ -1,0 +1,122 @@
+"""Switch coordinator (paper §4.5): asymmetric hysteresis policy.
+
+Host-side pure logic (single-controller JAX replaces rank-0 broadcast).
+  * TP -> EP: immediately when the latest in-flight count > T_h.
+  * EP -> TP: only when the mean count over the last W iterations < T_l,
+    AND the TP layout's KV capacity fits the live token set (kv-head
+    replication penalty), AND the cooldown has elapsed.
+Thresholds auto-calibrate from the analytical cost model (or measured probes).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.cost_model import HWSpec, TPU_V5E, decode_step_time
+from repro.core.layouts import EP, TP, group_info
+from repro.models.common import ModelConfig
+
+
+@dataclass
+class PolicyConfig:
+    t_high: int = 256
+    t_low: int = 205              # typically 0.8 * t_high (interactive)
+    window: int = 8
+    cooldown_s: float = 5.0
+    mode: str = "interactive"     # "interactive" | "rollout"
+
+    @classmethod
+    def interactive(cls, t_high: int) -> "PolicyConfig":
+        return cls(t_high=t_high, t_low=int(0.8 * t_high), window=8,
+                   cooldown_s=5.0, mode="interactive")
+
+    @classmethod
+    def rollout(cls, t_high: int) -> "PolicyConfig":
+        # burst drains monotonically: collapse band and window
+        return cls(t_high=t_high, t_low=t_high, window=1, cooldown_s=5.0,
+                   mode="rollout")
+
+
+def calibrate_threshold(cfg: ModelConfig, G: int, kv_len: int = 4096,
+                        hw: HWSpec = TPU_V5E, lo: int = 1,
+                        hi: int = 4096) -> int:
+    """Bisect the TP-EP crossover batch from the cost model (startup probe)."""
+    b, last = lo, hi
+    while b <= hi:
+        tp = decode_step_time(cfg, TP, b, kv_len, hw, G)["total"]
+        ep = decode_step_time(cfg, EP, b, kv_len, hw, G)["total"]
+        if ep < tp:
+            last = b
+            break
+        b *= 2
+    # refine between last/2 and last
+    lo_b, hi_b = max(lo, last // 2), last
+    while lo_b + 1 < hi_b:
+        mid = (lo_b + hi_b) // 2
+        tp = decode_step_time(cfg, TP, mid, kv_len, hw, G)["total"]
+        ep = decode_step_time(cfg, EP, mid, kv_len, hw, G)["total"]
+        if ep < tp:
+            hi_b = mid
+        else:
+            lo_b = mid
+    return hi_b
+
+
+@dataclass
+class SwitchDecision:
+    switch: bool
+    target: str
+    reason: str
+
+
+@dataclass
+class SwitchCoordinator:
+    cfg: ModelConfig
+    G: int
+    policy: PolicyConfig
+    active: str = EP
+    clock: object = time.monotonic
+    _history: deque = field(default_factory=lambda: deque(maxlen=64))
+    _last_switch: float = -1e18
+    switches: list = field(default_factory=list)
+    canceled: int = 0
+
+    def tp_kv_capacity_tokens(self, ep_capacity_tokens: int) -> int:
+        """Group KV capacity under TP given EP capacity (same byte budget).
+
+        TP replicates each KV head kv_rep times (paper: Qwen3's 4 KV heads on
+        8 ranks -> 2x), shrinking token capacity by that factor.
+        """
+        gi = group_info(self.cfg, self.G)
+        return ep_capacity_tokens // gi.kv_rep
+
+    def observe(self, in_flight: int, live_tokens: int,
+                ep_capacity_tokens: int) -> SwitchDecision:
+        """Called once per decode iteration, between steps."""
+        self._history.append(in_flight)
+        now = self.clock()
+        if now - self._last_switch < self.policy.cooldown_s:
+            return SwitchDecision(False, self.active, "cooldown")
+        if self.active == TP:
+            if in_flight > self.policy.t_high:
+                return self._commit(EP, now, f"count {in_flight} > T_h")
+            return SwitchDecision(False, TP, "below T_h")
+        # active == EP: require sustained dip below T_l
+        w = self.policy.window
+        if len(self._history) < w:
+            return SwitchDecision(False, EP, "warmup window")
+        mean = sum(list(self._history)[-w:]) / w
+        if mean >= self.policy.t_low:
+            return SwitchDecision(False, EP, "mean above T_l")
+        if live_tokens > self.tp_kv_capacity_tokens(ep_capacity_tokens):
+            self.canceled += 1
+            self._last_switch = now          # retry after cooldown
+            return SwitchDecision(False, EP, "TP KV capacity infeasible")
+        return self._commit(TP, now, f"mean {mean:.0f} < T_l")
+
+    def _commit(self, target: str, now: float, reason: str) -> SwitchDecision:
+        self._last_switch = now
+        self.switches.append((now, self.active, target, reason))
+        self.active = target
+        return SwitchDecision(True, target, reason)

@@ -1,0 +1,315 @@
+"""The EP<->TP switch: weights reshard, paged-KV migration, request
+redistribution (paper §3, §4.3).
+
+Three movers, all operating on the single resident copy:
+
+  1. `reshard_experts`         — XLA path: jit with src in_shardings / dst
+     out_shardings over unpack∘pack (XLA emits the collectives). This is the
+     "staged collective" baseline (paper's NCCL path).
+  2. `reshard_experts_direct`  — explicit shard_map path implementing the
+     paper's two-stage plan: EP->TP = local permute (pack per-peer chunks)
+     then one all_to_all; TP->EP = all_to_all then local interleave. One HBM
+     read + one link pass per element (paper Table 1 "Direct"). Pure-EP
+     groups only (the paper's case); hybrids fall back to the XLA path.
+  3. `migrate_kv_*` + `plan_*` — paged-KV migration: host-side page-indexed
+     work descriptors (paper Fig. 8) + a shard_map gather -> all_to_all ->
+     scatter over the unified flat buffer's two views.
+
+Request redistribution (host metadata):
+  EP->TP: global ordered list (metadata "all-gather" is free under the
+  single-controller model). TP->EP: deterministic longest-first greedy
+  least-loaded partition — doubles as the straggler-rebalancing primitive.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.layouts import EP, TP, group_info
+from repro.models.common import ModelConfig
+from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
+                              pack_w13, unpack_experts, unpack_w13)
+from repro.serving.kvcache import CacheConfig, PageAllocator, pages_needed
+
+
+# ---------------------------------------------------------------------------
+# 1+2. Expert-weight resharding
+# ---------------------------------------------------------------------------
+
+def _convert(w, src: ExpertLayout, dst: ExpertLayout, width_axis: int, E: int):
+    return pack_experts(unpack_experts(w, src, width_axis, E), dst, width_axis)
+
+
+def _convert13(w, src: ExpertLayout, dst: ExpertLayout, E: int):
+    return pack_w13(unpack_w13(w, src, E), dst)
+
+
+def make_reshard_experts(cfg: ModelConfig, mesh, src_layout: str,
+                         dst_layout: str, *, model_axis: str = "model",
+                         donate: bool = True, stacked: bool = True):
+    """XLA-path reshard: moe params pytree src rank-major -> dst rank-major.
+
+    Compiled once; a switch calls the compiled executable (runtime
+    preservation — paper §4.4).
+    """
+    E, G = cfg.num_experts, mesh.shape[model_axis]
+    src = make_expert_layout(E, G, src_layout)
+    dst = make_expert_layout(E, G, dst_layout)
+    nd_extra = 1 if stacked else 0
+
+    def spec(ndim):
+        s = [None] * ndim
+        s[nd_extra] = model_axis       # rank-major G dim
+        return P(*s)
+
+    def fn(moe):
+        out = dict(moe)
+        cv13 = lambda w: _convert13(w, src, dst, E)
+        cv2 = lambda w: _convert(w, src, dst, 2, E)
+        if stacked:
+            cv13, cv2 = jax.vmap(cv13), jax.vmap(cv2)
+        out["w13"] = cv13(moe["w13"])
+        out["w2"] = cv2(moe["w2"])
+        return out
+
+    def shardings(moe):
+        return {k: NamedSharding(mesh, spec(v.ndim) if k in ("w13", "w2")
+                                 else P()) for k, v in moe.items()}
+
+    def build(moe_example):
+        in_sh = shardings(moe_example)
+        out_sh = shardings(jax.eval_shape(fn, moe_example))
+        return jax.jit(fn, in_shardings=(in_sh,), out_shardings=out_sh,
+                       donate_argnums=(0,) if donate else ())
+
+    return build
+
+
+def reshard_experts_direct(cfg: ModelConfig, w13, w2, direction: str,
+                           axis: str, G: int):
+    """Explicit shard_map body (pure EP groups): the paper's two-stage plan.
+
+    Shapes (rank-local, leading G consumed by shard_map):
+      TP: w13 (L, E, 2I/G, D),    w2 (L, E, D, I/G)
+      EP: w13 (L, E/G, 2I, D),    w2 (L, E/G, D, I)
+
+    EP->TP: permute-then-exchange. Pack my E/G experts into per-peer width
+    chunks, one all_to_all delivers every rank its width slice of every
+    expert, already in place.
+    TP->EP: exchange-then-permute. all_to_all delivers contiguous expert
+    blocks; the local permute interleaves received width shards into
+    complete experts.
+    """
+    L, = w13.shape[:1]
+    if direction == "ep_to_tp":
+        E_loc, W2, D = w13.shape[1], w13.shape[2], w13.shape[3]
+        I = W2 // 2
+        # pack per-peer chunks on the (2, I) view so each peer gets matching
+        # gate/up halves: (L,E_loc,2,G,I/G,D) -> (G, L, E_loc, 2, I/G, D)
+        s13 = jnp.moveaxis(w13.reshape(L, E_loc, 2, G, I // G, D), 3, 0)
+        r13 = lax.all_to_all(s13, axis, split_axis=0, concat_axis=0,
+                             tiled=True)
+        # received (G_src, L, E_loc, 2, I/G, D) -> (L, E = G*E_loc, 2I/G, D)
+        n13 = jnp.moveaxis(r13, 0, 1).reshape(L, G * E_loc, 2 * (I // G), D)
+        I2 = w2.shape[3]
+        s2 = jnp.moveaxis(w2.reshape(L, E_loc, D, G, I2 // G), 3, 0)
+        r2 = lax.all_to_all(s2, axis, split_axis=0, concat_axis=0, tiled=True)
+        n2 = jnp.moveaxis(r2.reshape(G, L, E_loc, D, I2 // G), 0, 1) \
+            .reshape(L, G * E_loc, D, I2 // G)
+        return n13, n2
+    # tp_to_ep
+    E, Wl, D = w13.shape[1], w13.shape[2], w13.shape[3]
+    E_loc = E // G
+    Il13 = Wl // 2
+    # exchange first: send each peer its expert block (my width slice)
+    s13 = jnp.moveaxis(w13.reshape(L, G, E_loc, 2, Il13, D), 1, 0)
+    r13 = lax.all_to_all(s13, axis, split_axis=0, concat_axis=0, tiled=True)
+    # received (G_src, L, E_loc, 2, I/G, D): src s holds I-block s ->
+    # interleave src-major inside each of the gate/up halves
+    n13 = jnp.moveaxis(r13, 0, 3).reshape(L, E_loc, 2 * G * Il13, D)
+    Il = w2.shape[3]
+    s2 = jnp.moveaxis(w2.reshape(L, G, E_loc, D, Il), 1, 0)
+    r2 = lax.all_to_all(s2, axis, split_axis=0, concat_axis=0, tiled=True)
+    n2 = jnp.moveaxis(r2.reshape(G, L, E_loc, D, Il), 0, 3) \
+        .reshape(L, E_loc, D, G * Il)
+    return n13, n2
+
+
+def make_reshard_experts_direct(cfg: ModelConfig, mesh, direction: str, *,
+                                model_axis: str = "model"):
+    """jit(shard_map(...)) wrapper for the direct path (pure EP only)."""
+    G = mesh.shape[model_axis]
+    lay_ep = make_expert_layout(cfg.num_experts, G, EP)
+    if not lay_ep.is_pure_ep:
+        raise ValueError("direct reshard path requires pure EP (G | E); "
+                         "use the XLA path for hybrid groups")
+    rm = P(None, model_axis, None, None, None)   # (L, G, ...)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(rm, rm),
+                       out_specs=(rm, rm))
+    def body(w13, w2):
+        # local (L, 1, ...) -> squeeze the G dim
+        n13, n2 = reshard_experts_direct(
+            cfg, w13.squeeze(1), w2.squeeze(1), direction, model_axis, G)
+        return n13[:, None], n2[:, None]
+
+    return jax.jit(body, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# 3. Request redistribution (host)
+# ---------------------------------------------------------------------------
+
+def partition_requests(requests, G: int) -> dict[int, list]:
+    """TP->EP: deterministic longest-first greedy least-loaded partition
+    (paper §3.2). Balances token and request counts together. Also used for
+    straggler rebalancing."""
+    order = sorted(requests, key=lambda r: (-r.kv_len, r.rid))
+    load = [(0, 0, g) for g in range(G)]      # (tokens, nreq, rank)
+    buckets: dict[int, list] = {g: [] for g in range(G)}
+    import heapq
+    heapq.heapify(load)
+    for r in order:
+        tok, n, g = heapq.heappop(load)
+        buckets[g].append(r)
+        heapq.heappush(load, (tok + r.kv_len, n + 1, g))
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# 3b. Paged-KV migration plans (host descriptors, paper Fig. 8)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class KVPlan:
+    direction: str                 # "ep_to_tp" | "tp_to_ep"
+    src_pages: np.ndarray          # (G, Pmax) int32, padded with 0
+    dst_pages: np.ndarray          # (G, Pmax) int32
+    valid: np.ndarray              # (G, Pmax) bool
+    n_pages: int = 0
+
+
+def plan_ep_to_tp(requests, cfg: ModelConfig, cc: CacheConfig,
+                  tp_alloc: PageAllocator, G: int) -> KVPlan:
+    """Live EP requests (owner_rank, pages) -> fresh TP pages. Rewrites
+    request.pages / owner_rank in place."""
+    per_src: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
+    total = 0
+    for r in sorted(requests, key=lambda q: q.rid):
+        if not r.pages:
+            r.owner_rank = -1
+            continue
+        new_pages = tp_alloc.alloc(0, len(r.pages))
+        for p_old, p_new in zip(r.pages, new_pages):
+            per_src[r.owner_rank].append((p_old, p_new))
+        total += len(r.pages)
+        r.pages = new_pages
+        r.owner_rank = -1
+    pmax = max(1, max(len(v) for v in per_src.values()))
+    src = np.zeros((G, pmax), np.int32)
+    dst = np.zeros((G, pmax), np.int32)
+    val = np.zeros((G, pmax), bool)
+    for g, pairs in per_src.items():
+        for i, (a, b) in enumerate(pairs):
+            src[g, i], dst[g, i], val[g, i] = a, b, True
+    return KVPlan("ep_to_tp", src, dst, val, total)
+
+
+def plan_tp_to_ep(requests, cfg: ModelConfig, cc: CacheConfig,
+                  ep_alloc: PageAllocator, G: int) -> KVPlan:
+    """Live TP requests -> per-rank EP pages via the greedy partition."""
+    buckets = partition_requests([r for r in requests if r.pages], G)
+    per_dst: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
+    total = 0
+    for g, reqs in buckets.items():
+        for r in reqs:
+            new_pages = ep_alloc.alloc(g, len(r.pages))
+            for p_old, p_new in zip(r.pages, new_pages):
+                per_dst[g].append((p_old, p_new))
+            total += len(r.pages)
+            r.pages = new_pages
+            r.owner_rank = g
+    pmax = max(1, max(len(v) for v in per_dst.values()))
+    src = np.zeros((G, pmax), np.int32)
+    dst = np.zeros((G, pmax), np.int32)
+    val = np.zeros((G, pmax), bool)
+    for g, pairs in per_dst.items():
+        for i, (a, b) in enumerate(pairs):
+            src[g, i], dst[g, i], val[g, i] = a, b, True
+    return KVPlan("tp_to_ep", src, dst, val, total)
+
+
+# ---------------------------------------------------------------------------
+# 3c. Device KV transfer (shard_map over the flat buffer's two views)
+# ---------------------------------------------------------------------------
+
+def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
+                    pmax: int, *, model_axis: str = "model",
+                    data_axis: str = "data"):
+    """Build the jitted KV migration for a fixed plan width `pmax`.
+
+    kv_flat (Dd, G, NE) sharded (data, model). Plans are (Dd, G, Pmax):
+    src rows are rank-private (sharded), dst rows replicated (every rank
+    scatters every source's pages into its own head-slice view).
+    """
+    G = mesh.shape[model_axis]
+    gi = group_info(cfg, G)
+    ep_shape = cc.view_shape(cfg, G, EP)     # (L,2,pages_ep,page,K,dh)
+    tp_shape = cc.view_shape(cfg, G, TP)     # (L,2,pages_tp,page,Kl,dh)
+    L, _, _, page, K, dh = ep_shape
+    Kl, kv_rep = gi.kv_local, gi.kv_rep
+    NE = int(np.prod(ep_shape))
+
+    flat_spec = P(data_axis, model_axis)
+    rep_spec = P(data_axis, None, None)          # plans replicated over model
+
+    def ep_to_tp(kv_flat, src_pages, dst_pages, valid):
+        r = lax.axis_index(model_axis)
+        pool = kv_flat.reshape((1, 1) + ep_shape)[0, 0]
+        sp = src_pages[0][r]                          # my row (Pmax,)
+        gathered = pool[:, :, sp]                     # (L,2,Pmax,page,K,dh)
+        # heads -> per-dst slices: K = (G/kv_rep) blocks of Kl, tiled kv_rep
+        g = gathered.reshape(L, 2, pmax, page, K // Kl, Kl, dh)
+        g = jnp.moveaxis(g, 4, 0)                     # (K/Kl,L,2,P,page,Kl,dh)
+        g = jnp.repeat(g, kv_rep, axis=0)             # (G, ...) dst-major
+        recv = lax.all_to_all(g, model_axis, split_axis=0, concat_axis=0,
+                              tiled=True)             # (G_src, L,2,P,page,Kl,dh)
+        # scatter into the TP view: dst page ids from all srcs (replicated)
+        dp = jnp.where(valid[0], dst_pages[0], 0)     # (G, Pmax); invalid->null
+        flat_dst = dp.reshape(-1)
+        moved = jnp.moveaxis(recv, 0, 2)              # (L,2,G,P,page,Kl,dh)
+        moved = moved.reshape(L, 2, G * pmax, page, Kl, dh)
+        new_tp = jnp.zeros((1, 1) + tp_shape, kv_flat.dtype)[0, 0]
+        new_tp = new_tp.at[:, :, flat_dst].set(moved)
+        return new_tp.reshape(1, 1, NE)
+
+    def tp_to_ep(kv_flat, src_pages, dst_pages, valid):
+        r = lax.axis_index(model_axis)
+        pool = kv_flat.reshape((1, 1) + tp_shape)[0, 0]
+        # every rank holds head-slices of ALL pages; send dst d its pages
+        sp = jnp.where(valid[0], src_pages[0], 0)     # (G, Pmax)
+        gathered = pool[:, :, sp.reshape(-1)].reshape(
+            L, 2, G, pmax, page, Kl, dh)
+        send = jnp.moveaxis(gathered, 2, 0)           # (G_dst,L,2,P,page,Kl,dh)
+        recv = lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
+                              tiled=True)             # (G_src, ...)
+        # reassemble K heads from the G/kv_rep representative sources
+        reps = recv[::kv_rep]                         # (K/Kl, L,2,P,page,Kl,dh)
+        full = jnp.moveaxis(reps, 0, 4)               # (L,2,P,page,K/Kl,Kl,dh)
+        full = full.reshape(L, 2, pmax, page, K, dh)
+        dp = jnp.where(valid[0][r], dst_pages[0][r], 0)   # my new pages
+        new_ep = jnp.zeros((1, 1) + ep_shape, kv_flat.dtype)[0, 0]
+        new_ep = new_ep.at[:, :, dp].set(full)
+        return new_ep.reshape(1, 1, NE)
+
+    body = ep_to_tp if direction == "ep_to_tp" else tp_to_ep
+    smapped = jax.shard_map(body, mesh=mesh,
+                            in_specs=(flat_spec, rep_spec, rep_spec, rep_spec),
+                            out_specs=flat_spec)
+    return jax.jit(smapped, donate_argnums=(0,))

@@ -1,0 +1,123 @@
+"""Layout-agnostic sharded checkpointing with reshard-on-restore.
+
+Canonical on-disk format is the GLOBAL logical form (experts unpacked to
+(L, E, 2I, D), vocab unpadded): a checkpoint written from either layout or
+any mesh restores into any layout on any compatible mesh — restart after a
+node failure, elastic rescale, and EP<->TP flips all reuse the same path
+(the switch machinery generalized to the persistence plane).
+
+Format: <dir>/manifest.json + one .npy per leaf (chunked by first axis for
+large leaves so per-file size stays bounded — the per-host shard-file
+pattern at scale). Async save via a background thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import padded_vocab
+from repro.models.common import ModelConfig
+from repro.models.moe import (make_expert_layout, pack_w13, pack_experts,
+                              unpack_experts, unpack_w13)
+
+_CHUNK_BYTES = 256 * 1024 * 1024
+
+
+def _leaf_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def _set_path(tree, path, val):
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = val
+
+
+def to_canonical(cfg: ModelConfig, params: dict, layout: str, G: int) -> dict:
+    """Stored layout params -> global logical form (host numpy)."""
+    out = jax.tree.map(lambda x: np.asarray(x), params)
+    V, Vp = cfg.vocab_size, padded_vocab(cfg.vocab_size)
+    for k in ("embed", "lm_head"):
+        if k in out and out[k].shape[0] == Vp:
+            out[k] = out[k][:V]
+    if cfg.is_moe and "layers" in out and "moe" in out["layers"]:
+        lay = make_expert_layout(cfg.num_experts, G, layout)
+        moe = dict(out["layers"]["moe"])
+        E = cfg.num_experts
+        moe["w13"] = np.asarray(jax.vmap(
+            lambda w: unpack_w13(w, lay, E))(jnp.asarray(moe["w13"])))
+        moe["w2"] = np.asarray(jax.vmap(
+            lambda w: unpack_experts(w, lay, 2, E))(jnp.asarray(moe["w2"])))
+        out["layers"] = dict(out["layers"])
+        out["layers"]["moe"] = moe
+    return out
+
+
+def from_canonical(cfg: ModelConfig, canon: dict, layout: str, G: int) -> dict:
+    """Global logical form -> stored layout params (host numpy/jnp)."""
+    from repro.core.layouts import pack_params
+    return pack_params(cfg, jax.tree.map(jnp.asarray, canon), layout, G)
+
+
+def save_checkpoint(path: str, cfg: ModelConfig, params: dict, layout: str,
+                    G: int, *, opt_state=None, step: int = 0,
+                    async_save: bool = False):
+    def _do():
+        p = Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        canon = to_canonical(cfg, params, layout, G)
+        manifest = {"step": step, "arch": cfg.name, "leaves": []}
+        trees = {"params": canon}
+        if opt_state is not None:
+            trees["opt"] = jax.tree.map(np.asarray, opt_state)
+        for tname, tree in trees.items():
+            for lp, leaf in _leaf_paths(tree):
+                name = tname + "." + ".".join(lp) if lp else tname
+                arr = np.asarray(leaf)
+                nchunk = max(1, -(-arr.nbytes // _CHUNK_BYTES))
+                nchunk = min(nchunk, max(1, arr.shape[0] if arr.ndim else 1))
+                files = []
+                for ci, piece in enumerate(np.array_split(arr, nchunk)
+                                           if arr.ndim else [arr]):
+                    fn = f"{name}.{ci}.npy"
+                    np.save(p / fn, piece)
+                    files.append(fn)
+                manifest["leaves"].append(
+                    {"tree": tname, "path": list(lp), "files": files,
+                     "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        (p / "manifest.json").write_text(json.dumps(manifest))
+
+    if async_save:
+        t = threading.Thread(target=_do, daemon=True)
+        t.start()
+        return t
+    _do()
+    return None
+
+
+def restore_checkpoint(path: str, cfg: ModelConfig, layout: str, G: int,
+                       *, mesh=None, shardings=None, with_opt: bool = False):
+    """Restore into `layout` at group size G; device_put with `shardings`
+    (a params-sharding pytree) when given. Returns (params, opt, step)."""
+    p = Path(path)
+    manifest = json.loads((p / "manifest.json").read_text())
+    trees: dict = {"params": {}, "opt": {}}
+    for leaf in manifest["leaves"]:
+        parts = [np.load(p / f) for f in leaf["files"]]
+        arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        _set_path(trees[leaf["tree"]], tuple(leaf["path"]), arr)
+    params = from_canonical(cfg, trees["params"], layout, G)
+    if shardings is not None:
+        params = jax.tree.map(jax.device_put, params, shardings)
+    opt = trees["opt"] if (with_opt and trees["opt"]) else None
+    return params, opt, manifest["step"]

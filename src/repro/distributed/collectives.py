@@ -1,0 +1,92 @@
+"""Collective reshard plans + chunked/pipelined variants (overlap machinery).
+
+`chunked_all_to_all` splits a large reshard into per-layer waves of
+`ppermute`s so XLA can overlap wave k+1's sends with wave k's local permute
+— the portable analogue of the paper's double-buffered per-layer transfer
+(their N+1 spare slot). `estimate_collective_bytes` is the first-principles
+model used by the roofline (cross-checked against HLO parsing in
+launch/dryrun.py)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.layouts import EP, TP, group_info
+from repro.models.common import ModelConfig
+from repro.models.moe import make_expert_layout
+
+
+def chunked_all_to_all(x: jax.Array, axis: str, n_chunks: int):
+    """all_to_all over dim 0 (size G), split into `n_chunks` waves along
+    dim 1 so transfers pipeline with surrounding compute."""
+    if n_chunks <= 1:
+        return lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    parts = jnp.split(x, n_chunks, axis=1)
+    outs = [lax.all_to_all(p, axis, split_axis=0, concat_axis=0, tiled=True)
+            for p in parts]
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# First-principles per-step collective bytes (roofline's third term)
+# ---------------------------------------------------------------------------
+
+def decode_collective_bytes(cfg: ModelConfig, layout: str, B: int, G: int,
+                            bytes_per_el: int = 2) -> int:
+    """Per-rank collective payload bytes for ONE decode step."""
+    D, L = cfg.d_model, cfg.num_layers
+    if layout == TP:
+        # two ring all-reduces of the (B, D) hidden per layer
+        per_layer = 2 * 2 * (G - 1) / G * B * D * bytes_per_el
+        return int(L * per_layer)
+    if cfg.is_moe:
+        lay = make_expert_layout(cfg.num_experts, G, EP)
+        tok = B / G
+        per_layer = 2 * tok * cfg.top_k * lay.tp_inner * D * bytes_per_el \
+            * (G - 1) / G
+    else:
+        tok = B / G
+        per_layer = 2 * 2 * (G - 1) / G * tok * D * bytes_per_el
+    return int(L * per_layer)
+
+
+def train_collective_bytes(cfg: ModelConfig, layout: str, tokens_global: int,
+                           G: int, dp: int, param_count: int,
+                           bytes_per_el: int = 2) -> dict:
+    """Per-rank collective bytes for one train step (fwd+bwd TP collectives
+    + DP gradient all-reduce)."""
+    fwd = decode_collective_bytes(cfg, layout, tokens_global, G, bytes_per_el)
+    tp_bytes = 3 * fwd                      # fwd + 2x in bwd (transpose)
+    dp_bytes = int(2 * (dp - 1) / dp * param_count / G * 4)  # fp32 grads
+    return {"tp_bytes": tp_bytes, "dp_bytes": dp_bytes,
+            "total": tp_bytes + dp_bytes}
+
+
+def switch_bytes(cfg: ModelConfig, G: int, live_tokens: int,
+                 bytes_per_el: int = 2) -> dict:
+    """Owner-changed bytes of one EP<->TP switch (paper's irreducible cost).
+
+    Experts: each rank keeps 1/G of what it holds; (G-1)/G of the expert
+    bytes cross the interconnect. KV: every live token's bytes move once
+    (minus the 1/G that stays local)."""
+    expert_bytes = (cfg.num_layers * cfg.num_experts
+                    * 3 * cfg.d_model * cfg.d_expert * bytes_per_el)
+    kv_bytes = (live_tokens * _kv_layers(cfg) * 2
+                * cfg.num_kv_heads * cfg.dh * bytes_per_el)
+    frac = (G - 1) / G
+    return {"expert_bytes_moved": int(expert_bytes * frac),
+            "kv_bytes_moved": int(kv_bytes * frac),
+            "per_rank_expert": int(expert_bytes * frac / G),
+            "per_rank_kv": int(kv_bytes * frac / G)}
+
+
+def _kv_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers

@@ -1,0 +1,66 @@
+"""Gradient compression for the DP all-reduce: int8 quantization and top-k
+sparsification, both with error feedback (residual carried to the next
+step so compression error doesn't bias convergence)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric int8. Returns (q int8, scale fp32)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, frac: float):
+    """Keep the top `frac` fraction by magnitude; returns (values, indices)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_densify(vals, idx, shape):
+    out = jnp.zeros(int(jnp.prod(jnp.array(shape))), jnp.float32)
+    return out.at[idx].set(vals).reshape(shape)
+
+
+def compressed_psum_int8(g: jax.Array, axis: str, residual: jax.Array):
+    """Inside shard_map over the DP axis: error-feedback int8 all-reduce.
+
+    Each rank quantizes (g + residual), all-gathers the int8 payloads +
+    scales (4x less wire traffic than fp32 psum), dequantizes and sums
+    locally. Returns (g_reduced, new_residual).
+    """
+    x = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(x)
+    new_residual = x - dequantize_int8(q, scale)
+    qs = lax.all_gather(q, axis)                      # (G, ...)
+    ss = lax.all_gather(scale, axis)                  # (G,)
+    summed = jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))
+    return summed, new_residual
+
+
+def make_compressed_allreduce(mesh, axis: str = "data"):
+    """jit(shard_map) wrapper: grads sharded over `axis` -> mean-reduced."""
+    from jax.sharding import PartitionSpec as P
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(axis), P(axis)), out_specs=(P(axis), P(axis)))
+    def fn(g, res):
+        # g: this rank's microbatch grad (leading dummy shard dim of 1)
+        out, new_res = compressed_psum_int8(g[0], axis, res[0])
+        G = mesh.shape[axis]
+        return (out / G)[None], new_res[None]
+
+    return jax.jit(fn)

@@ -1,0 +1,90 @@
+"""Elastic scaling + failure recovery.
+
+Training: re-mesh via the layout-agnostic checkpoint (shrink/grow the data
+axis, or change the model-group size where divisibility allows) — restore
+reshards automatically because the on-disk form is global-logical.
+
+Serving: a lost rank's KV is host-recoverable metadata + re-prefill: the
+affected requests' prompts are extended by their generated tokens (teacher-
+forced) and re-enter the prefill queue; no other rank's state is touched.
+The TP->EP greedy partitioner doubles as the rebalancing step afterwards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.layouts import EP
+from repro.serving.request import State
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    old_shape: dict
+    new_shape: dict
+    compatible: bool
+    reason: str = ""
+
+
+def plan_rescale(cfg, old_mesh_shape: dict, new_mesh_shape: dict,
+                 layout: str) -> RescalePlan:
+    """Validate a mesh change (divisibility constraints per layout)."""
+    G_new = new_mesh_shape.get("model", 1)
+    ok, why = True, ""
+    if cfg.num_heads and cfg.num_heads % G_new and G_new % cfg.num_heads:
+        ok, why = False, f"heads {cfg.num_heads} !~ model axis {G_new}"
+    if cfg.is_moe:
+        import math
+        if math.gcd(cfg.num_experts, G_new) == 0:
+            ok, why = False, "expert divisibility"
+    return RescalePlan(old_mesh_shape, new_mesh_shape, ok, why)
+
+
+def elastic_restore(ckpt_path: str, cfg, layout: str, new_mesh, *,
+                    model_axis: str = "model"):
+    """Restore a checkpoint onto a different mesh (the rescale operation)."""
+    from repro.distributed.checkpoint import restore_checkpoint
+    G = new_mesh.shape[model_axis]
+    return restore_checkpoint(ckpt_path, cfg, layout, G)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side failure recovery
+# ---------------------------------------------------------------------------
+
+def fail_rank(engine, data_group: int, rank: int) -> list:
+    """Simulate losing model-rank `rank` of `data_group`: every request whose
+    KV touches that rank loses its cache and is rescheduled via re-prefill.
+
+    Under EP only the rank's own requests are hit; under TP every request in
+    the group holds a head-shard there, so the whole group re-prefills —
+    the capacity/blast-radius asymmetry of the two layouts.
+    """
+    hit = []
+    for r in list(engine.running.values()) + list(engine.prefilling):
+        if r.data_group != data_group:
+            continue
+        if engine.active == EP and r.owner_rank != rank:
+            continue
+        hit.append(r)
+    for r in hit:
+        # release pages, teacher-force the generated prefix, re-prefill
+        owner = r.owner_rank if engine.active == EP else 0
+        if r.pages:
+            engine.alloc[data_group].release(max(owner, 0), r.pages)
+            r.pages = []
+        r.prompt = list(r.prompt) + list(r.output)
+        if r.forced_len is not None:
+            r.forced_len = max(1, r.forced_len - len(r.output))
+        else:
+            r.max_new_tokens = max(1, r.max_new_tokens - len(r.output))
+        r.output = []
+        r.prefill_pos = 0
+        r.state = State.WAITING
+        r.owner_rank = 0
+        engine.running.pop(r.rid, None)
+        if r in engine.prefilling:
+            engine.prefilling.remove(r)
+        engine.waiting.append(r)
+    return hit

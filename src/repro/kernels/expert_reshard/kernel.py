@@ -1,0 +1,63 @@
+"""Pallas TPU expert-permute kernels: the local stage of the weight reshard.
+
+EP->TP runs permute-then-exchange: this kernel packs each rank's complete
+experts into per-peer contiguous chunks in ONE pass over HBM (vs. a staged
+copy), preserving the gate/up pairing of w13. TP->EP runs the inverse
+interleave after the exchange. Grid (G, E_loc): one (peer, expert) chunk
+per step; block shapes keep the copied tile in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(w_ref, o_ref, *, G: int):
+    # w (1, 2, G, I/G, D) block for one expert -> o (1, 1, 2, I/G, D)
+    g = pl.program_id(0)
+    o_ref[0, 0] = w_ref[0, :, g]
+
+
+def pack_peer_chunks_pallas(w13: jax.Array, G: int, *,
+                            interpret: bool = True) -> jax.Array:
+    """w13 (E_loc, 2I, D) -> (G, E_loc, 2*(I/G), D)."""
+    E_loc, W2, D = w13.shape
+    I = W2 // 2
+    wv = w13.reshape(E_loc, 2, G, I // G, D)
+    import functools
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, G=G),
+        grid=(G, E_loc),
+        in_specs=[pl.BlockSpec((1, 2, G, I // G, D),
+                               lambda g, e: (e, 0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, 2, I // G, D),
+                               lambda g, e: (g, e, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, E_loc, 2, I // G, D), w13.dtype),
+        interpret=interpret,
+    )(wv)
+    return out.reshape(G, E_loc, 2 * (I // G), D)
+
+
+def _interleave_kernel(c_ref, o_ref):
+    # c (G, 1, 2, half, D) all peers' shards of one expert -> o (1, 2, G, half, D)
+    o_ref[0] = jnp.moveaxis(c_ref[:, 0], 0, 1)
+
+
+def interleave_shards_pallas(chunks: jax.Array, *,
+                             interpret: bool = True) -> jax.Array:
+    """chunks (G, E_loc, 2*(I/G), D) -> (E_loc, 2I, D)."""
+    G, E_loc, Wl, D = chunks.shape
+    half = Wl // 2
+    cv = chunks.reshape(G, E_loc, 2, half, D)
+    out = pl.pallas_call(
+        _interleave_kernel,
+        grid=(E_loc,),
+        in_specs=[pl.BlockSpec((G, 1, 2, half, D),
+                               lambda e: (0, e, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 2, G, half, D),
+                               lambda e: (e, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E_loc, 2, G, half, D), chunks.dtype),
+        interpret=interpret,
+    )(cv)
+    return out.reshape(E_loc, 2 * G * half, D)

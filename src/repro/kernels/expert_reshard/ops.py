@@ -1,0 +1,29 @@
+"""Jit'd dispatcher for the expert-permute kernels."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.expert_reshard.kernel import (interleave_shards_pallas,
+                                                 pack_peer_chunks_pallas)
+from repro.kernels.expert_reshard.ref import (interleave_shards_ref,
+                                              pack_peer_chunks_ref)
+
+
+def _ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def pack_peer_chunks(w13, G: int, *, backend: str | None = None):
+    if backend == "ref" or (backend is None and _ref()):
+        return pack_peer_chunks_ref(w13, G)
+    return pack_peer_chunks_pallas(w13, G,
+                                   interpret=jax.default_backend() != "tpu")
+
+
+def interleave_shards(chunks, *, backend: str | None = None):
+    if backend == "ref" or (backend is None and _ref()):
+        return interleave_shards_ref(chunks)
+    return interleave_shards_pallas(chunks,
+                                    interpret=jax.default_backend() != "tpu")

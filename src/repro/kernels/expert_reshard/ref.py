@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the expert-weight permute stages (paper Fig. 4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_peer_chunks_ref(w13: jax.Array, G: int) -> jax.Array:
+    """EP->TP local permute: my complete experts -> per-peer width chunks.
+    w13 (E_loc, 2I, D) -> (G, E_loc, 2*(I/G), D), gate/up halves paired."""
+    E_loc, W2, D = w13.shape
+    I = W2 // 2
+    w = w13.reshape(E_loc, 2, G, I // G, D)
+    return jnp.moveaxis(w, 2, 0).reshape(G, E_loc, 2 * (I // G), D)
+
+
+def interleave_shards_ref(chunks: jax.Array) -> jax.Array:
+    """TP->EP local permute: received per-peer width shards -> complete
+    experts. chunks (G, E_loc, 2*(I/G), D) -> (E_loc, 2I, D)."""
+    G, E_loc, Wl, D = chunks.shape
+    half = Wl // 2
+    w = chunks.reshape(G, E_loc, 2, half, D)
+    # src s holds I-block s: interleave G src-major inside each half
+    return jnp.moveaxis(w, 0, 2).reshape(E_loc, 2 * G * half, D)

@@ -1,0 +1,66 @@
+"""Pallas TPU page-pack kernel: the gather stage of the KV switch (paper
+§4.3, Fig. 8(b)).
+
+Reads the page-indexed work descriptors and copies scattered KV pages into
+a contiguous per-peer chunk in one HBM pass — the 'Direct' row of Table 1.
+On real TPU the store side would be a `make_async_remote_copy` into the
+peer's slot; portably we pack locally and let the collective move the
+chunk (still one local HBM read per element).
+
+Grid (n,): one page per step; the pool stays in HBM (ANY) and the page is
+moved with a dynamic slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(idx_ref, pool_ref, o_ref):
+    pid = idx_ref[0]
+    o_ref[0] = pool_ref[pl.ds(pid, 1)][0]
+
+
+def gather_pages_pallas(pool: jax.Array, idx: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """pool (pages, page, K, dh); idx (n,) int32 -> (n, page, K, dh)."""
+    n = idx.shape[0]
+    page, K, dh = pool.shape[1:]
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, page, K, dh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, page, K, dh), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+def _scatter_kernel(idx_ref, vals_ref, pool_in_ref, pool_out_ref):
+    del pool_in_ref   # aliased with pool_out_ref
+    pid = idx_ref[0]
+    pool_out_ref[pl.ds(pid, 1)] = vals_ref[...]
+
+
+def scatter_pages_pallas(pool: jax.Array, idx: jax.Array, vals: jax.Array, *,
+                         interpret: bool = True) -> jax.Array:
+    """Write vals (n, page, K, dh) into pool at idx (input/output aliased)."""
+    n = idx.shape[0]
+    page, K, dh = pool.shape[1:]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, page, K, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, vals, pool)

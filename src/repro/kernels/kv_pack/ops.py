@@ -1,0 +1,28 @@
+"""Jit'd dispatcher for the KV page pack/unpack kernels."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.kv_pack.kernel import (gather_pages_pallas,
+                                          scatter_pages_pallas)
+from repro.kernels.kv_pack.ref import gather_pages_ref, scatter_pages_ref
+
+
+def _ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def gather_pages(pool, idx, *, backend: str | None = None):
+    if backend == "ref" or (backend is None and _ref()):
+        return gather_pages_ref(pool, idx)
+    return gather_pages_pallas(pool, idx,
+                               interpret=jax.default_backend() != "tpu")
+
+
+def scatter_pages(pool, idx, vals, *, backend: str | None = None):
+    if backend == "ref" or (backend is None and _ref()):
+        return scatter_pages_ref(pool, idx, vals)
+    return scatter_pages_pallas(pool, idx, vals,
+                                interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the switch's page gather/scatter stages."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages_ref(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """pool (pages, page, K, dh); idx (n,) -> (n, page, K, dh)."""
+    return pool[idx]
+
+
+def scatter_pages_ref(pool: jax.Array, idx: jax.Array,
+                      vals: jax.Array) -> jax.Array:
+    """Inverse: write vals (n, page, K, dh) at idx into pool."""
+    return pool.at[idx].set(vals)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (E, C, D) dispatched tokens; w (E, W, D) per-expert weights
+    -> (E, C, W) in fp32-accumulated x.dtype."""
+    return jnp.einsum("ecd,ewd->ecw", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def grouped_ffn_ref(cfg, w13: jax.Array, w2: jax.Array,
+                    xd: jax.Array) -> jax.Array:
+    """Full grouped SwiGLU FFN: xd (E, C, D) -> (E, C, D)."""
+    h = grouped_matmul_ref(xd, w13).astype(jnp.float32)
+    hg, hu = jnp.split(h, 2, axis=-1)
+    h = (jax.nn.silu(hg) * hu).astype(xd.dtype)
+    # w2 (E, D, W2): contract over W2
+    return jnp.einsum("ecw,edw->ecd", h, w2,
+                      preferred_element_type=jnp.float32).astype(xd.dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU paged-attention (flash-decoding style).
+
+Grid: (B,). The query block (Sq, H, dh) lives in VMEM; the KV pools stay in
+HBM/ANY and each page-chunk is loaded with dynamic slices driven by the
+block table (the paged indirection happens *inside* the kernel — no
+materialized gather). Online softmax accumulates in fp32 VMEM scratch.
+
+Block alignment: the per-chunk score tile is (H*Sq, page_chunk*page); choose
+page=16 and page_chunk=8 so the MXU tiles at 128 on the KV axis.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(q_ref, bt_ref, kvlen_ref, qoff_ref, kpool_ref,
+                       vpool_ref, o_ref, *, page: int, page_chunk: int,
+                       window: int, rep: int):
+    _, Sq, H, dh = q_ref.shape
+    maxp = bt_ref.shape[1]
+    K = kpool_ref.shape[2]
+    nchunk = maxp // page_chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (Sq, H, dh)
+    kv_len = kvlen_ref[0]
+    q_pos = qoff_ref[0] + lax.iota(jnp.int32, Sq)     # (Sq,)
+
+    def chunk_body(j, carry):
+        m, l, acc = carry                              # (H,Sq),(H,Sq),(H,Sq,dh)
+
+        def load_page(i, bufs):
+            kb, vb = bufs
+            pid = bt_ref[0, j * page_chunk + i]
+            kp = kpool_ref[pl.ds(pid, 1)]              # (1,page,K,dh)
+            vp = vpool_ref[pl.ds(pid, 1)]
+            kb = lax.dynamic_update_slice_in_dim(kb, kp, i, 0)
+            vb = lax.dynamic_update_slice_in_dim(vb, vp, i, 0)
+            return kb, vb
+
+        kb0 = jnp.zeros((page_chunk, page, K, dh), kpool_ref.dtype)
+        kb, vb = lax.fori_loop(0, page_chunk, load_page, (kb0, kb0))
+        kc = kb.reshape(page_chunk * page, K, dh).astype(jnp.float32)
+        vc = vb.reshape(page_chunk * page, K, dh).astype(jnp.float32)
+        kc = jnp.repeat(kc, rep, axis=1)               # (P, H, dh)
+        vc = jnp.repeat(vc, rep, axis=1)
+        kv_pos = j * page_chunk * page + lax.iota(jnp.int32, page_chunk * page)
+
+        s = jnp.einsum("qhd,khd->hqk", q, kc)          # (H, Sq, P)
+        ok = (kv_pos[None, None, :] < kv_len) \
+            & (kv_pos[None, None, :] <= q_pos[None, :, None])
+        if window > 0:
+            ok = ok & (kv_pos[None, None, :] > q_pos[None, :, None] - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("hqk,khd->hqd", p, vc)
+        return m_new, l, acc
+
+    m0 = jnp.full((H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((H, Sq), jnp.float32)
+    a0 = jnp.zeros((H, Sq, dh), jnp.float32)
+    m, l, acc = lax.fori_loop(0, nchunk, chunk_body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (H, Sq, dh)
+    o_ref[0] = jnp.moveaxis(out, 0, 1).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_table, kv_lens, *,
+                           q_offset, window: int = 0, page_chunk: int = 8,
+                           interpret: bool = True) -> jax.Array:
+    """Same contract as ref.paged_attention_ref."""
+    B, Sq, H, dh = q.shape
+    pages, page, K, _ = k_pool.shape
+    maxp = block_table.shape[1]
+    rep = H // K
+    padp = (-maxp) % page_chunk
+    bt = jnp.pad(block_table, ((0, 0), (0, padp)))
+    kern = functools.partial(_paged_attn_kernel, page=page,
+                             page_chunk=page_chunk, window=window, rep=rep)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Sq, H, dh), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, maxp + padp), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, H, dh), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, dh), q.dtype),
+        interpret=interpret,
+    )(q, bt, kv_lens, q_offset, k_pool, v_pool)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for paged attention (prefill chunks and decode).
+
+Convention: the engine writes the current chunk's K/V into the pages FIRST,
+then calls attention as a pure read:
+  q (B, Sq, H, dh)            queries at global positions q_offset + i
+  pool (pages, page, K, dh)   one layer's K or V pool (rank-local view)
+  block_table (B, max_pages)  page ids per request
+  kv_lens (B,)                total valid tokens (incl. current chunk)
+KV position of (table row j, slot s) = j*page + s.
+Masks: valid (< kv_len), causal (<= q_pos), window (> q_pos - window).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, kv_lens, *,
+                        q_offset, window: int = 0,
+                        page_chunk: int = 8) -> jax.Array:
+    """Returns (B, Sq, H, dh). q_offset (B,) global position of q[:, 0]."""
+    B, Sq, H, dh = q.shape
+    pages, page, K, _ = k_pool.shape
+    maxp = block_table.shape[1]
+    rep = H // K
+    scale = 1.0 / math.sqrt(dh)
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None, :]          # (B,Sq)
+
+    nchunk = -(-maxp // page_chunk)
+    padp = nchunk * page_chunk - maxp
+    bt = jnp.pad(block_table, ((0, 0), (0, padp)))               # pad -> null 0
+
+    def body(carry, j):
+        m, l, acc = carry
+        idx = lax.dynamic_slice_in_dim(bt, j * page_chunk, page_chunk, 1)
+        kc = k_pool[idx]                       # (B, pc, page, K, dh)
+        vc = v_pool[idx]
+        kv_pos = (j * page_chunk + jnp.arange(page_chunk))[:, None] * page \
+            + jnp.arange(page)[None, :]        # (pc, page)
+        kv_pos = kv_pos.reshape(-1)
+        kc = jnp.repeat(kc.reshape(B, -1, K, dh).astype(jnp.float32), rep, 2)
+        vc = jnp.repeat(vc.reshape(B, -1, K, dh).astype(jnp.float32), rep, 2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kc)
+        ok = kv_pos[None, None, :] < kv_lens[:, None, None]       # (B,1,kpos)
+        ok = ok & (kv_pos[None, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            ok = ok & (kv_pos[None, None, :] > q_pos[:, :, None] - window)
+        s = s + jnp.where(ok, 0.0, NEG_INF)[:, None]              # (B,H,Sq,k)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l2 = l * corr + p.sum(-1)
+        acc2 = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        return (m_new, l2, acc2), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nchunk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: leading
+    pod axis (2, 16, 16) = 512 chips; `pod` is pure DP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh) -> tuple:
+    """All pure-DP axes (everything except `model`)."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,79 @@
+"""Serving launcher: run the Moebius engine on a workload.
+
+Examples (CPU, 8 host devices):
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload rollout --scale 0.02 --mesh 1x4 --policy rollout
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload bursty --scale 0.05 --mesh 2x4
+"""
+import os
+if "REPRO_HOST_DEVICES" in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_HOST_DEVICES"])
+
+
+def main():
+    import argparse
+    import json
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.layouts import EP, TP
+    from repro.core.policy import PolicyConfig, calibrate_threshold
+    from repro.launch.mesh import make_mesh
+    from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.kvcache import CacheConfig
+    from repro.serving.workloads import (BurstySpec, RolloutSpec,
+                                         bursty_trace, rollout_batch)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--mesh", default="1x4")
+    ap.add_argument("--workload", default="rollout",
+                    choices=["rollout", "bursty"])
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--policy", default="interactive",
+                    choices=["interactive", "rollout", "static-tp",
+                             "static-ep"])
+    ap.add_argument("--t-high", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-steps", type=int, default=5000)
+    args = ap.parse_args()
+
+    dd, g = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((dd, g), ("data", "model"))
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    th = args.t_high or max(8, calibrate_threshold(cfg, g))
+    if args.policy == "interactive":
+        pol = PolicyConfig.interactive(th)
+        start = TP
+    elif args.policy == "rollout":
+        pol = PolicyConfig.rollout(th)
+        start = EP
+    else:
+        pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+        start = TP if args.policy == "static-tp" else EP
+    cc = CacheConfig(page_size=16, pages_ep=256, max_pages_per_req=64)
+    eng = MoebiusEngine(cfg, mesh, cc,
+                        ecfg=EngineConfig(start_layout=start,
+                                          ladder=(g, 4 * g, 16 * g),
+                                          prefill_chunk=64, policy=pol,
+                                          seed=args.seed))
+    if args.workload == "rollout":
+        reqs = rollout_batch(RolloutSpec(scale=args.scale), seed=args.seed)
+    else:
+        reqs = bursty_trace(BurstySpec(scale=args.scale), seed=args.seed)
+    for r in reqs:
+        eng.submit(r)
+    summary = eng.run(max_steps=args.max_steps)
+    summary["switches"] = len(eng.switch_records)
+    summary["final_layout"] = eng.active
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

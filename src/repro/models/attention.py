@@ -1,0 +1,104 @@
+"""GQA/MQA attention block: projections, qk-norm, RoPE, SWA, decode path.
+
+Global math only. `attn_forward` handles train/prefill (computes fresh K/V and
+optionally returns them for cache fill); `attn_decode` consumes gathered K/V
+(the serving engine / paged kernels supply the gather).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, apply_rope, dense_init,
+                                 flash_attention, rmsnorm, rope_cos_sin,
+                                 split_keys)
+
+
+def init_attention(cfg: ModelConfig, key, layers: int | None = None) -> dict:
+    """Stacked attention params: leading dim = layers (None -> unstacked)."""
+    L = () if layers is None else (layers,)
+    D, H, K, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], L + (D, H * dh), D, cfg.param_dtype),
+        "wk": dense_init(ks[1], L + (D, K * dh), D, cfg.param_dtype),
+        "wv": dense_init(ks[2], L + (D, K * dh), D, cfg.param_dtype),
+        "wo": dense_init(ks[3], L + (H * dh, D), H * dh, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(L + (dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones(L + (dh,), cfg.param_dtype)
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p: dict, x: jax.Array,
+                positions: jax.Array, rope: bool = True):
+    """x (B,S,D), positions (B,S) -> q (B,S,H,dh), k/v (B,S,K,dh)."""
+    B, S, _ = x.shape
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, K, dh)
+    v = (x @ p["wv"]).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope:
+        cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                 positions: jax.Array | None = None, *,
+                 causal: bool = True, rope: bool = True,
+                 kv_ctx: tuple[jax.Array, jax.Array] | None = None,
+                 q_offset=0, block_k: int = 512,
+                 return_kv: bool = False):
+    """Full attention over x; optionally prepend cached kv_ctx (chunked prefill).
+
+    Returns out (B,S,D) [, (k, v) of this chunk].
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = q_offset + jnp.arange(S)[None, :].repeat(B, 0)
+    q, k, v = project_qkv(cfg, p, x, positions, rope)
+    if kv_ctx is not None:
+        k_all = jnp.concatenate([kv_ctx[0], k], axis=1)
+        v_all = jnp.concatenate([kv_ctx[1], v], axis=1)
+    else:
+        k_all, v_all = k, v
+    out = flash_attention(q, k_all, v_all, causal=causal,
+                          window=cfg.sliding_window, q_offset=q_offset,
+                          block_k=block_k)
+    out = out.reshape(B, S, cfg.num_heads * cfg.dh) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                k_cache: jax.Array, v_cache: jax.Array,
+                positions: jax.Array, kv_lens: jax.Array, *,
+                rope: bool = True, new_kv_out: bool = True):
+    """Single-token decode against a gathered dense cache view.
+
+    x (B,1,D); k_cache/v_cache (B, S_max, K, dh) with valid prefix kv_lens (B,).
+    The *new* token's K/V is appended functionally at position kv_lens[b].
+    Returns out (B,1,D), (k_new, v_new) each (B,1,K,dh).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = project_qkv(cfg, p, x, positions[:, None], rope)
+    idx = kv_lens[:, None, None, None]
+    pos_arange = jnp.arange(k_cache.shape[1])[None, :, None, None]
+    put = pos_arange == idx
+    k_all = jnp.where(put, k_new, k_cache.astype(k_new.dtype))
+    v_all = jnp.where(put, v_new, v_cache.astype(v_new.dtype))
+    # No window bias here: for SWA models the engine hands us a windowed view
+    # of the cache, so validity is fully described by kv_lens.
+    out = flash_attention(q, k_all, v_all, causal=False, window=0,
+                          q_offset=0, kv_len=kv_lens + 1)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.dh) @ p["wo"]
+    if new_kv_out:
+        return out, (k_new, v_new)
+    return out

@@ -1,0 +1,305 @@
+"""Shared model substrate: configs, norms, RoPE, chunked flash attention.
+
+All model code is *global math* (no collectives). Distribution comes from
+either GSPMD sharding constraints (train/prefill) or shard_map wrappers
+(decode/switch) in core/ and serving/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attn-free)
+    num_kv_heads: int
+    d_ff: int                        # dense-MLP intermediate (per shared expert for moe)
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0                # routed-expert intermediate size
+    capacity_factor: float = 1.25
+    # --- attention features ---
+    qk_norm: bool = False
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 1e4
+    mlp_type: str = "swiglu"         # "swiglu" | "gelu"
+    norm_type: str = "rmsnorm"       # "rmsnorm" | "layernorm"
+    logit_softcap: float = 0.0
+    # --- SSM (Mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    # --- hybrid ---
+    attn_every: int = 0              # shared attn block every N ssm layers
+    # --- encoder-decoder ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # stubbed frame/patch positions for encoder
+    max_positions: int = 4096        # learned-position table size (encdec)
+    # --- vlm ---
+    num_patches: int = 0             # stubbed image patch positions (decoder-side prefix)
+    # --- numerics ---
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+
+    # -- derived --
+    @property
+    def dh(self) -> int:
+        if self.num_heads == 0:
+            return 0
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    @property
+    def d_inner(self) -> int:           # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **kw) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 4 if self.family in ("hybrid",) else 2),
+            d_model=64,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=16 if self.num_heads else 0,
+            d_ff=128,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 4),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            d_expert=64 if self.d_expert else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            attn_every=2 if self.attn_every else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=16 if self.encoder_seq else 0,
+            num_patches=8 if self.num_patches else 0,
+            param_dtype=jnp.float32,
+            compute_dtype=jnp.float32,
+        )
+        # keep MQA truly multi-query in reduction
+        if self.num_kv_heads == 1:
+            small["num_kv_heads"] = 1
+        small.update(kw)
+        return self.replace(**small)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params; used for 6ND)."""
+        from repro.models.registry import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + 0.0) * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, w) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, w["scale"], w["bias"])
+    return rmsnorm(x, w["scale"])
+
+
+def init_norm(cfg: ModelConfig, shape_prefix=()) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones(shape_prefix + (cfg.d_model,), cfg.param_dtype),
+                "bias": jnp.zeros(shape_prefix + (cfg.d_model,), cfg.param_dtype)}
+    return {"scale": jnp.ones(shape_prefix + (cfg.d_model,), cfg.param_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, dh: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., dh//2) in fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, dh); cos/sin (..., S, dh//2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure-jnp online softmax; memory O(S * block))
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int) -> jax.Array:
+    """(Q, K) additive bias in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int | jax.Array = 0,
+                    kv_len: jax.Array | None = None,
+                    block_k: int = 512) -> jax.Array:
+    """Chunked attention with online softmax.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). GQA via head repeat.
+    q_offset: position of q[0] within the kv sequence (chunked prefill).
+    kv_len: optional (B,) valid kv lengths (ragged batches).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    block_k = min(block_k, Sk)
+    nblk = (Sk + block_k - 1) // block_k
+    pad = nblk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, Hkv, D)
+    vb = v.reshape(B, nblk, block_k, Hkv, D)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, j = blk                       # (B, bk, Hkv, D), scalar idx
+        k_pos = j * block_k + jnp.arange(block_k)
+        kc = jnp.repeat(kc.astype(jnp.float32), rep, axis=2)
+        vc = jnp.repeat(vc.astype(jnp.float32), rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kc)            # (B,Hq,Sq,bk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)        # (Sq,bk)
+        valid = k_pos[None, :] < (kv_len[:, None] if kv_len is not None
+                                  else jnp.full((B, 1), Sk))
+        s = s + bias[None, None] + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B,Sq,Hq,D)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_dim, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Losses / heads (global math; GSPMD shards the vocab dim)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  softcap: float = 0.0) -> jax.Array:
+    """logits (..., V) fp-any, labels (...,) int. Mean NLL in fp32."""
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)
+
+
+def gumbel_sample(logits: jax.Array, key, temperature: float = 1.0) -> jax.Array:
+    """Exact categorical sampling via Gumbel-max (argmax is psum-friendly)."""
+    logits = logits.astype(jnp.float32)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape, jnp.float32,
+                                             1e-20, 1.0)))
+    return jnp.argmax(logits / temperature + g, axis=-1)

@@ -1,0 +1,126 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, D) supplied by input_specs(). The
+decoder is a standard causal LM with cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.attention import attn_forward, init_attention
+from repro.models.common import (ModelConfig, apply_norm, dense_init,
+                                 flash_attention, init_norm, split_keys)
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+def _sinusoid(T: int, D: int) -> jax.Array:
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_cross_attention(cfg: ModelConfig, key, layers: int) -> dict:
+    return init_attention(cfg, key, layers)   # same shapes, no RoPE at use
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    ks = split_keys(key, 10)
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    p = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.d_model, cfg.param_dtype),
+        "dec_pos": dense_init(ks[1], (cfg.max_positions, cfg.d_model),
+                              cfg.d_model, cfg.param_dtype),
+        "final_norm": init_norm(cfg),
+        "enc_final_norm": init_norm(cfg),
+        "encoder": {
+            "attn_norm": init_norm(cfg, (Le,)),
+            "mlp_norm": init_norm(cfg, (Le,)),
+            "attn": init_attention(cfg, ks[2], Le),
+            "mlp": init_mlp(cfg, ks[3], Le),
+        },
+        "decoder": {
+            "attn_norm": init_norm(cfg, (Ld,)),
+            "xattn_norm": init_norm(cfg, (Ld,)),
+            "mlp_norm": init_norm(cfg, (Ld,)),
+            "attn": init_attention(cfg, ks[4], Ld),
+            "xattn": init_cross_attention(cfg, ks[5], Ld),
+            "mlp": init_mlp(cfg, ks[6], Ld),
+        },
+    }
+    return p
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames (B, T_enc, D) stubbed embeddings -> encoder states (B,T_enc,D)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(frames.shape[1], cfg.d_model).astype(cfg.compute_dtype)
+
+    def one_layer(h, lp):
+        a = apply_norm(cfg, h, lp["attn_norm"])
+        h = h + attn_forward(cfg, lp["attn"], a, causal=False, rope=False)
+        m = apply_norm(cfg, h, lp["mlp_norm"])
+        h = h + mlp_forward(cfg, lp["mlp"], m)
+        return h, None
+
+    x, _ = lax.scan(one_layer, x, params["encoder"])
+    return apply_norm(cfg, x, params["enc_final_norm"])
+
+
+def cross_attend(cfg: ModelConfig, lp: dict, x: jax.Array,
+                 enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """x (B,S,D); enc_k/enc_v (B,T_enc,K,dh) precomputed cross K/V."""
+    B, S, _ = x.shape
+    H, dh = cfg.num_heads, cfg.dh
+    q = (x @ lp["wq"]).reshape(B, S, H, dh)
+    out = flash_attention(q, enc_k, enc_v, causal=False, window=0)
+    return out.reshape(B, S, H * dh) @ lp["wo"]
+
+
+def cross_kv(cfg: ModelConfig, lp: dict, enc: jax.Array):
+    """Precompute per-layer cross K/V from encoder states (cached per request)."""
+    B, T, _ = enc.shape
+    K, dh = cfg.num_kv_heads, cfg.dh
+    k = (enc @ lp["wk"]).reshape(B, T, K, dh)
+    v = (enc @ lp["wv"]).reshape(B, T, K, dh)
+    return k, v
+
+
+def decoder_block(cfg: ModelConfig, lp: dict, x: jax.Array,
+                  enc_kv: tuple[jax.Array, jax.Array], *,
+                  q_offset=0, kv_ctx=None, return_kv: bool = False):
+    h = apply_norm(cfg, x, lp["attn_norm"])
+    a = attn_forward(cfg, lp["attn"], h, causal=True, rope=False,
+                     q_offset=q_offset, kv_ctx=kv_ctx, return_kv=return_kv)
+    if return_kv:
+        a, kv = a
+    x = x + a
+    h = apply_norm(cfg, x, lp["xattn_norm"])
+    x = x + cross_attend(cfg, lp["xattn"], h, *enc_kv)
+    h = apply_norm(cfg, x, lp["mlp_norm"])
+    x = x + mlp_forward(cfg, lp["mlp"], h)
+    if return_kv:
+        return x, kv
+    return x
+
+
+def encdec_forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   frames: jax.Array, *, remat: bool = True) -> jax.Array:
+    """tokens (B,S) decoder input; frames (B,T_enc,D) stub. -> logits."""
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x + params["dec_pos"][:S][None].astype(cfg.compute_dtype)
+
+    def one_layer(h, lp):
+        kv = cross_kv(cfg, lp["xattn"], enc)
+        return decoder_block(cfg, lp, h, kv), None
+
+    layer_fn = jax.checkpoint(one_layer) if remat else one_layer
+    x, _ = lax.scan(layer_fn, x, params["decoder"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x @ params["embed"].T.astype(cfg.compute_dtype)

@@ -1,0 +1,82 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block applied
+every `attn_every` SSM layers (weights shared across applications, KV caches
+distinct per application site)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.attention import attn_forward, init_attention
+from repro.models.common import (ModelConfig, apply_norm, dense_init,
+                                 init_norm, split_keys)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.ssm import init_ssm, ssm_forward
+
+
+def num_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_hybrid(cfg: ModelConfig, key) -> dict:
+    ks = split_keys(key, 6)
+    L = cfg.num_layers
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.d_model, cfg.param_dtype),
+        "final_norm": init_norm(cfg),
+        "lm_head": dense_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                              cfg.d_model, cfg.param_dtype),
+        "ssm_layers": {
+            "norm": init_norm(cfg, (L,)),
+            "ssm": init_ssm(cfg, ks[2], L),
+        },
+        "shared_attn": {
+            "attn_norm": init_norm(cfg),
+            "attn": init_attention(cfg, ks[3]),
+            "mlp_norm": init_norm(cfg),
+            "mlp": init_mlp(cfg, ks[4]),
+        },
+    }
+
+
+def shared_block(cfg: ModelConfig, sp: dict, x: jax.Array, *,
+                 q_offset=0, kv_ctx=None, return_kv: bool = False):
+    h = apply_norm(cfg, x, sp["attn_norm"])
+    a = attn_forward(cfg, sp["attn"], h, causal=True, rope=True,
+                     q_offset=q_offset, kv_ctx=kv_ctx, return_kv=return_kv)
+    if return_kv:
+        a, kv = a
+    x = x + a
+    h = apply_norm(cfg, x, sp["mlp_norm"])
+    x = x + mlp_forward(cfg, sp["mlp"], h)
+    if return_kv:
+        return x, kv
+    return x
+
+
+def hybrid_forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+                   remat: bool = True) -> jax.Array:
+    """tokens (B,S) -> logits (B,S,V). Scan per group of attn_every ssm
+    layers, shared attn block between groups."""
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    L, k = cfg.num_layers, cfg.attn_every
+    groups = L // k
+    lp = params["ssm_layers"]
+    grouped = jax.tree.map(lambda a: a.reshape((groups, k) + a.shape[1:]), lp)
+
+    def ssm_layer(h, one):
+        hn = apply_norm(cfg, h, one["norm"])
+        y, _ = ssm_forward(cfg, one["ssm"], hn)
+        return h + y, None
+
+    ssm_layer_fn = jax.checkpoint(ssm_layer) if remat else ssm_layer
+
+    def group_step(h, gp):
+        h, _ = lax.scan(ssm_layer_fn, h, gp)
+        h = shared_block(cfg, params["shared_attn"], h)
+        return h, None
+
+    x, _ = lax.scan(group_step, x, grouped)
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x @ params["lm_head"].T.astype(cfg.compute_dtype)

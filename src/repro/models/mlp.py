@@ -1,0 +1,33 @@
+"""Dense MLP blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def init_mlp(cfg: ModelConfig, key, layers: int | None = None,
+             d_ff: int | None = None) -> dict:
+    L = () if layers is None else (layers,)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], L + (D, F), D, cfg.param_dtype),
+            "w_up": dense_init(ks[1], L + (D, F), D, cfg.param_dtype),
+            "w_down": dense_init(ks[2], L + (F, D), F, cfg.param_dtype),
+        }
+    return {
+        "w_up": dense_init(ks[1], L + (D, F), D, cfg.param_dtype),
+        "w_down": dense_init(ks[2], L + (F, D), F, cfg.param_dtype),
+    }
+
+
+def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,129 @@
+"""Model dispatch by family: init / forward / loss / analytic param counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, cross_entropy
+from repro.models.encdec import encdec_forward, init_encdec
+from repro.models.hybrid import hybrid_forward, init_hybrid, num_attn_sites
+from repro.models.moe import ExpertLayout, make_expert_layout
+from repro.models.ssm_lm import init_ssm_lm, ssm_lm_forward
+from repro.models.transformer import init_lm, lm_forward
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.family == "encdec":
+        return init_encdec(cfg, key)
+    if cfg.family == "ssm":
+        return init_ssm_lm(cfg, key)
+    if cfg.family == "hybrid":
+        return init_hybrid(cfg, key)
+    return init_lm(cfg, key)        # dense / moe / vlm
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            lay: ExpertLayout | None = None, remat: bool = True) -> jax.Array:
+    """batch: tokens (B,S) [+ frames (B,T,D) encdec | patches (B,P,D) vlm]."""
+    if lay is None and cfg.is_moe:
+        lay = make_expert_layout(cfg.num_experts, 1, "ep")
+    if cfg.family == "encdec":
+        return encdec_forward(cfg, params, batch["tokens"], batch["frames"],
+                              remat=remat)
+    if cfg.family == "ssm":
+        return ssm_lm_forward(cfg, params, batch["tokens"], remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid_forward(cfg, params, batch["tokens"], remat=remat)
+    if cfg.family == "vlm":
+        return lm_forward(cfg, params, batch["tokens"], lay=lay, remat=remat,
+                          prefix_embeds=batch.get("patches"))
+    return lm_forward(cfg, params, batch["tokens"], lay=lay, remat=remat)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            lay: ExpertLayout | None = None, remat: bool = True) -> jax.Array:
+    logits = forward(cfg, params, batch, lay=lay, remat=remat)
+    return cross_entropy(logits, batch["labels"], cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6*N*D in the roofline)
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig) -> int:
+    D, H, K, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    n = D * H * dh + 2 * D * K * dh + H * dh * D
+    if cfg.qk_norm:
+        n += 2 * dh
+    return n
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    if cfg.mlp_type == "swiglu":
+        return 3 * cfg.d_model * d_ff
+    return 2 * cfg.d_model * d_ff
+
+
+def _expert_params(cfg: ModelConfig) -> int:
+    return 3 * cfg.d_model * cfg.d_expert   # w13 (2I*D) + w2 (D*I)
+
+
+def _shared_expert_params(cfg: ModelConfig) -> int:
+    F = cfg.num_shared_experts * cfg.d_expert
+    return 3 * cfg.d_model * F + cfg.d_model
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    D, Din = cfg.d_model, cfg.d_inner
+    H, N, G, Kc = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    n = 2 * D * Din                  # wz, wx
+    n += 2 * D * G * N               # wB, wC
+    n += D * H                       # wdt
+    n += 3 * H                       # A_log, Dskip, dt_bias
+    n += Kc * (Din + 2 * G * N)      # convs
+    n += Din                         # norm
+    n += Din * D                     # out_proj
+    return n
+
+
+def _norm_params(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model if cfg.norm_type == "layernorm" else cfg.d_model
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    V, D, L = cfg.vocab_size, cfg.d_model, cfg.num_layers
+    n = V * D                                        # embed
+    if not cfg.tie_embeddings:
+        n += V * D                                   # lm_head
+    n += _norm_params(cfg)
+    if cfg.family == "ssm":
+        return n + L * (_ssm_params(cfg) + _norm_params(cfg))
+    if cfg.family == "hybrid":
+        n += L * (_ssm_params(cfg) + _norm_params(cfg))
+        n += _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 2 * _norm_params(cfg)
+        return n
+    if cfg.family == "encdec":
+        Le = cfg.encoder_layers
+        n += cfg.max_positions * D                   # learned decoder positions
+        n += _norm_params(cfg)                       # enc final norm
+        n += Le * (_attn_params(cfg) + _mlp_params(cfg, cfg.d_ff)
+                   + 2 * _norm_params(cfg))
+        n += L * (2 * _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff)
+                  + 3 * _norm_params(cfg))
+        return n
+    per_layer = _attn_params(cfg) + 2 * _norm_params(cfg)
+    if cfg.is_moe:
+        router = D * cfg.num_experts
+        experts = cfg.num_experts * _expert_params(cfg)
+        if active_only:
+            experts = cfg.top_k * _expert_params(cfg)
+        per_layer += router + experts
+        if cfg.num_shared_experts:
+            per_layer += _shared_expert_params(cfg)
+    else:
+        per_layer += _mlp_params(cfg, cfg.d_ff)
+    return n + L * per_layer
+
+
+def count_params_actual(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,169 @@
+"""Mamba2 block: SSD (state-space duality) chunked scan + decode recurrence.
+
+Port of the Mamba-2 paper's minimal SSD algorithm (arXiv:2405.21060) to jnp.
+Projections are stored as separate tensors (wz/wx/wB/wC/wdt) so each can be
+sharded independently (TP shards heads/channels; DP replicates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, dense_init, rmsnorm, split_keys
+
+
+def init_ssm(cfg: ModelConfig, key, layers: int | None = None) -> dict:
+    L = () if layers is None else (layers,)
+    D, Din = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    K = cfg.ssm_conv
+    ks = split_keys(key, 8)
+    return {
+        "wz": dense_init(ks[0], L + (D, Din), D, cfg.param_dtype),
+        "wx": dense_init(ks[1], L + (D, Din), D, cfg.param_dtype),
+        "wB": dense_init(ks[2], L + (D, G * N), D, cfg.param_dtype),
+        "wC": dense_init(ks[3], L + (D, G * N), D, cfg.param_dtype),
+        "wdt": dense_init(ks[4], L + (D, H), D, cfg.param_dtype),
+        "A_log": jnp.zeros(L + (H,), jnp.float32),
+        "Dskip": jnp.ones(L + (H,), jnp.float32),
+        "dt_bias": jnp.zeros(L + (H,), jnp.float32),
+        "conv_x": dense_init(ks[5], L + (K, Din), K, cfg.param_dtype),
+        "conv_B": dense_init(ks[6], L + (K, G * N), K, cfg.param_dtype),
+        "conv_C": dense_init(ks[7], L + (K, G * N), K, cfg.param_dtype),
+        "norm": jnp.ones(L + (Din,), cfg.param_dtype),
+        "out_proj": dense_init(ks[5], L + (Din, D), Din, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """x (B,T,C), w (K,C) depthwise causal conv. state (B,K-1,C) prefix.
+    Returns (y (B,T,C), new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., l) -> (..., l, l) lower-tri segment sums: out[i,j]=sum x[j+1..i]."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD scan. x (b,t,h,p); dt (b,t,h) fp32 post-softplus; A (h,) negative;
+    B, C (b,t,g,n). Returns y (b,t,h,p), final_state (b,h,p,n)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    rep = h // g
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, 3).astype(jnp.float32)
+    Cr = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, 3).astype(jnp.float32)
+    dA = dtr * A[None, None, None, :]                       # (b,nc,l,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))         # (b,nc,h,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)       # (b,nc,h,l,l)
+    scores = scores * Lmat * jnp.moveaxis(dtr, 3, 2)[..., None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xr)
+
+    # 2. chunk states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                        Br, dtr * decay_to_end, xr)         # (b,nc,h,p,n)
+
+    # 3. inter-chunk recurrence over states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (b,nc,h)
+
+    def body(hprev, inp):
+        s, d = inp                                          # (b,h,p,n),(b,h)
+        hnew = hprev * d[..., None, None] + s
+        return hnew, hprev
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    hfinal, hprevs = lax.scan(body, h0,
+                              (jnp.moveaxis(states, 1, 0),
+                               jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                     # (b,nc,h,p,n)
+
+    # 4. off-diagonal contribution: y_off = C . h_prev * exp(dA_cs)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cr, hprevs,
+                       jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(b, tt, h, p)[:, :t]
+    return y, hfinal
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token recurrence. state (b,h,p,n); x (b,h,p); dt (b,h);
+    B,C (b,g,n). Returns (y (b,h,p), new_state)."""
+    h, g = x.shape[1], B.shape[1]
+    rep = h // g
+    Bf = jnp.repeat(B, rep, 1).astype(jnp.float32)
+    Cf = jnp.repeat(C, rep, 1).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                            # (b,h)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bf, x.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cf, new_state)
+    return y, new_state
+
+
+def ssm_forward(cfg: ModelConfig, p: dict, u: jax.Array, *,
+                conv_state=None, ssm_state=None, decode: bool = False):
+    """Full Mamba2 block. u (B,T,D). Returns (out (B,T,D), (conv_st, ssm_st)).
+
+    decode=True expects T==1 and uses the recurrence.
+    """
+    Bsz, T, D = u.shape
+    H, N, G, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    z = u @ p["wz"]
+    x = u @ p["wx"]
+    Bp = u @ p["wB"]
+    Cp = u @ p["wC"]
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    cs_x = cs_B = cs_C = None
+    if conv_state is not None:
+        cs_x, cs_B, cs_C = conv_state
+    x, ns_x = _causal_conv(x, p["conv_x"], cs_x)
+    Bp, ns_B = _causal_conv(Bp, p["conv_B"], cs_B)
+    Cp, ns_C = _causal_conv(Cp, p["conv_C"], cs_C)
+
+    xh = x.reshape(Bsz, T, H, P)
+    Bh = Bp.reshape(Bsz, T, G, N)
+    Ch = Cp.reshape(Bsz, T, G, N)
+
+    if decode:
+        y, new_ssm = ssd_decode_step(
+            ssm_state if ssm_state is not None
+            else jnp.zeros((Bsz, H, P, N), jnp.float32),
+            xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0])
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, Bh, Ch, cfg.ssm_chunk,
+                                 init_state=ssm_state)
+    y = y + xh.astype(jnp.float32) * p["Dskip"][None, None, :, None]
+    y = y.reshape(Bsz, T, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                p["norm"])
+    out = y @ p["out_proj"]
+    return out, ((ns_x, ns_B, ns_C), new_ssm)

@@ -1,0 +1,40 @@
+"""Pure-SSM LM (Mamba2-style): embedding + stacked Mamba2 blocks + head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, dense_init, init_norm, apply_norm, split_keys
+from repro.models.ssm import init_ssm, ssm_forward
+
+
+def init_ssm_lm(cfg: ModelConfig, key) -> dict:
+    ks = split_keys(key, 4)
+    L = cfg.num_layers
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.d_model, cfg.param_dtype),
+        "final_norm": init_norm(cfg),
+        "lm_head": dense_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                              cfg.d_model, cfg.param_dtype),
+        "layers": {
+            "norm": init_norm(cfg, (L,)),
+            "ssm": init_ssm(cfg, ks[2], L),
+        },
+    }
+
+
+def ssm_lm_forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+                   remat: bool = True) -> jax.Array:
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+
+    def one_layer(h, lp):
+        hn = apply_norm(cfg, h, lp["norm"])
+        y, _ = ssm_forward(cfg, lp["ssm"], hn)
+        return h + y, None
+
+    layer_fn = jax.checkpoint(one_layer) if remat else one_layer
+    x, _ = lax.scan(layer_fn, x, params["layers"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x @ params["lm_head"].T.astype(cfg.compute_dtype)

@@ -1,0 +1,108 @@
+"""Decoder-only transformer assembly (dense + MoE), scan-over-layers.
+
+`lm_forward` is the global-math forward used by train/prefill (GSPMD path).
+The decode path lives in serving/engine.py (explicit shard_map with paged KV);
+it reuses the per-layer pieces exported here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.attention import attn_forward, init_attention
+from repro.models.common import (ModelConfig, apply_norm, cross_entropy,
+                                 dense_init, init_norm, split_keys)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import ExpertLayout, init_moe, moe_ffn_global
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    """Decoder-only LM params. Layer params stacked on a leading L dim."""
+    ks = split_keys(key, 8)
+    L = cfg.num_layers
+    p: dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.d_model, cfg.param_dtype),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                  cfg.d_model, cfg.param_dtype)
+    layers: dict[str, Any] = {
+        "attn_norm": init_norm(cfg, (L,)),
+        "mlp_norm": init_norm(cfg, (L,)),
+        "attn": init_attention(cfg, ks[2], L),
+    }
+    if cfg.is_moe:
+        layers["moe"] = init_moe(cfg, ks[3], L)
+    else:
+        layers["mlp"] = init_mlp(cfg, ks[3], L)
+    p["layers"] = layers
+    return p
+
+
+def block_forward(cfg: ModelConfig, lp: dict, x: jax.Array, *,
+                  lay: ExpertLayout | None = None,
+                  q_offset=0, kv_ctx=None, causal: bool = True,
+                  rope: bool = True, cap_factor: float | None = None,
+                  return_kv: bool = False):
+    """One transformer block on global math. x (B,S,D)."""
+    h = apply_norm(cfg, x, lp["attn_norm"])
+    attn_out = attn_forward(cfg, lp["attn"], h, causal=causal, rope=rope,
+                            q_offset=q_offset, kv_ctx=kv_ctx,
+                            return_kv=return_kv)
+    if return_kv:
+        attn_out, kv = attn_out
+    x = x + attn_out
+    h = apply_norm(cfg, x, lp["mlp_norm"])
+    if cfg.is_moe:
+        B, S, D = h.shape
+        y = moe_ffn_global(cfg, lp["moe"], h.reshape(B * S, D), lay,
+                           cap_factor=cap_factor).reshape(B, S, D)
+    else:
+        y = mlp_forward(cfg, lp["mlp"], h)
+    x = x + y
+    if return_kv:
+        return x, kv
+    return x
+
+
+def lm_forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+               lay: ExpertLayout | None = None,
+               cap_factor: float | None = None,
+               prefix_embeds: jax.Array | None = None,
+               remat: bool = True) -> jax.Array:
+    """tokens (B,S) -> logits (B,S,V). prefix_embeds (B,P,D) prepended (VLM)."""
+    if lay is None and cfg.is_moe:
+        from repro.models.moe import make_expert_layout
+        lay = make_expert_layout(cfg.num_experts, 1, "ep")
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.compute_dtype), x],
+                            axis=1)
+
+    def one_layer(h, lp):
+        h = block_forward(cfg, lp, h, lay=lay, cap_factor=cap_factor)
+        return h, None
+
+    layer_fn = jax.checkpoint(one_layer) if remat else one_layer
+    x, _ = lax.scan(layer_fn, x, params["layers"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.T.astype(cfg.compute_dtype)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    return logits
+
+
+def lm_loss(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            labels: jax.Array, *, lay: ExpertLayout | None = None,
+            prefix_embeds: jax.Array | None = None) -> jax.Array:
+    logits = lm_forward(cfg, params, tokens, lay=lay,
+                        prefix_embeds=prefix_embeds)
+    return cross_entropy(logits, labels, cfg.logit_softcap)

@@ -1,0 +1,503 @@
+"""Moebius serving engine: continuous batching + live EP<->TP switching.
+
+Single-controller host loop (the JAX-native control plane, DESIGN.md §2):
+admission -> policy -> (switch?) -> prefill -> decode, once per iteration.
+The switch is executed between decode steps without draining: request
+metadata is rewritten on host, expert weights are resharded and the paged KV
+migrated by the jitted movers from core/switch.py, and the target layout's
+pre-warmed step functions are *selected*, not rebuilt.
+
+Memory discipline mirrors the paper: the control plane (attention/embed/norm
+packs, compiled steps) is resident for BOTH layouts (the dual-mode buffer);
+the data plane (expert weights, KV pool) exists once, in the active layout.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import EP, TP, group_info, pack_params
+from repro.core.policy import PolicyConfig, SwitchCoordinator
+from repro.core.residency import ResidentRuntime
+from repro.core.switch import (make_migrate_kv, make_reshard_experts,
+                               make_reshard_experts_direct, partition_requests,
+                               plan_ep_to_tp, plan_tp_to_ep)
+from repro.models.common import ModelConfig
+from repro.models.moe import make_expert_layout
+from repro.models.registry import init_params
+from repro.serving.kvcache import (CacheConfig, PageAllocator,
+                                   block_table_array, pages_needed)
+from repro.serving.metrics import ServeMetrics
+from repro.serving.request import Request, State
+from repro.serving.steps import build_decode_pack, build_serve_step
+
+def _pow2_pad(n: int, lo: int = 8) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class EngineConfig:
+    start_layout: str = TP
+    ladder: tuple = (4, 8, 16, 32)
+    prefill_chunk: int = 32
+    temperature: float = 0.0
+    time_scale: float = 1.0            # virtual seconds per wall second
+    direct_reshard: bool = True        # paper's fused path when pure-EP
+    policy: PolicyConfig = field(default_factory=PolicyConfig)
+    seed: int = 0
+
+
+@dataclass
+class SwitchRecord:
+    t: float
+    direction: str
+    total_s: float
+    weights_s: float
+    kv_s: float
+    plan_s: float
+    kv_pages: int
+    live_requests: int
+
+
+class MoebiusEngine:
+    def __init__(self, cfg: ModelConfig, mesh, cc: CacheConfig,
+                 params_global: dict | None = None,
+                 ecfg: EngineConfig | None = None,
+                 data_axis: str = "data", model_axis: str = "model"):
+        self.cfg, self.mesh, self.cc = cfg, mesh, cc
+        self.ecfg = ecfg or EngineConfig()
+        self.m, self.da = model_axis, data_axis
+        self.G = mesh.shape[model_axis]
+        self.Dd = mesh.shape[data_axis]
+        self.gi = group_info(cfg, self.G)
+        if params_global is None:
+            params_global = init_params(cfg, jax.random.PRNGKey(self.ecfg.seed))
+
+        # --- dual-resident control plane; single-copy expert data plane ---
+        self.packs: dict[str, dict] = {}
+        self._expert_store: dict[str, dict] = {}   # only active layout kept
+        for layout in (TP, EP):
+            stored = pack_params(cfg, params_global, layout, self.G)
+            pk = build_decode_pack(cfg, stored, layout, self.G)
+            if cfg.is_moe:
+                moe = pk["layers"]["moe"]
+                self._expert_store[layout] = {
+                    "w13": moe.pop("w13"), "w2": moe.pop("w2")}
+            self.packs[layout] = pk
+        self.active = self.ecfg.start_layout
+        if cfg.is_moe:
+            # free the inactive layout's expert copy (single resident copy)
+            inactive = EP if self.active == TP else TP
+            self._experts = self._expert_store[self.active]
+            del self._expert_store
+
+        # --- unified KV buffer ---
+        self.NE = cc.nelems(cfg, self.G)
+        self.kv_flat = jnp.zeros((self.Dd, self.G, self.NE),
+                                 cfg.param_dtype)
+        self.alloc = [PageAllocator(cc, cfg, self.G, self.active)
+                      for _ in range(self.Dd)]
+
+        # --- resident runtimes (both layouts, ladder of decode rungs) ---
+        self.rt = ResidentRuntime(ladder=tuple(
+            b for b in self.ecfg.ladder if b % self.G == 0 or b >= self.G
+        ) or (self.G,))
+        self._step_fns: dict = {}
+        self._reshard_fns: dict = {}
+        self._migrate_fns: dict = {}
+
+        # --- host scheduling state ---
+        self.pending: deque[Request] = deque()     # not yet arrived
+        self.waiting: list[Request] = []
+        self.prefilling: list[Request] = []
+        self.running: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.metrics = ServeMetrics()
+        self.switch_records: list[SwitchRecord] = []
+        self.coord = SwitchCoordinator(cfg, self.G, self.ecfg.policy,
+                                       active=self.active)
+        self._step_i = 0
+        self._key = jax.random.PRNGKey(self.ecfg.seed + 1)
+        self._t0 = time.monotonic()
+
+    # ------------------------------------------------------------------
+    # time
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        return (time.monotonic() - self._t0) * self.ecfg.time_scale
+
+    # ------------------------------------------------------------------
+    # step functions (resident; warmed at startup or first use)
+    # ------------------------------------------------------------------
+    def _ladder_for(self, layout: str):
+        if layout == EP:
+            return tuple(sorted({max(self.G, -(-b // self.G) * self.G)
+                                 for b in self.rt.ladder}))
+        return self.rt.ladder
+
+    def _decode_fn(self, layout: str, B: int):
+        key = (layout, "decode", B)
+        if key not in self._step_fns:
+            self._step_fns[key] = build_serve_step(
+                self.cfg, self.mesh, layout, self.cc, B, Sq=1,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m)
+        return self._step_fns[key]
+
+    def _prefill_fn(self, layout: str):
+        key = (layout, "prefill")
+        if key not in self._step_fns:
+            Bp = 1 if layout == TP else self.G
+            self._step_fns[key] = build_serve_step(
+                self.cfg, self.mesh, layout, self.cc, Bp,
+                Sq=self.ecfg.prefill_chunk,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m)
+        return self._step_fns[key]
+
+    def warmup(self, layouts=(TP, EP)):
+        """Compile both layouts' runtimes at startup (paper §4.4)."""
+        for lo in layouts:
+            self._prefill_fn(lo)
+            for b in self._ladder_for(lo):
+                self._decode_fn(lo, b)
+
+    def _assemble_pack(self, layout: str) -> dict:
+        pk = self.packs[layout]
+        if self.cfg.is_moe:
+            pk = dict(pk)
+            layers = dict(pk["layers"])
+            layers["moe"] = {**layers["moe"], **self._experts}
+            pk["layers"] = layers
+        return pk
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        t = self.now()
+        while self.pending and self.pending[0].arrival_s <= t:
+            r = self.pending.popleft()
+            r.data_group = min(range(self.Dd),
+                               key=lambda d: sum(1 for q in self.running.values()
+                                                 if q.data_group == d))
+            max_tok = (self.cc.max_pages_per_req * self.cc.page_size
+                       - r.prompt_len - 1)
+            r.max_new_tokens = max(1, min(r.max_new_tokens, max_tok))
+            if r.forced_len is not None:
+                r.forced_len = max(1, min(r.forced_len, max_tok))
+            r.state = State.WAITING
+            self.waiting.append(r)
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def _ep_rank_load(self, d: int) -> list[int]:
+        load = [0] * self.G
+        for q in list(self.running.values()) + self.prefilling:
+            if q.data_group == d and q.owner_rank >= 0:
+                load[q.owner_rank] += 1
+        return load
+
+    def _start_prefill(self, r: Request) -> bool:
+        d = r.data_group
+        n_pages = pages_needed(r.prompt_len + r.target_len + 1,
+                               self.cc.page_size)
+        n_pages = min(n_pages, self.cc.max_pages_per_req)
+        if self.active == EP:
+            load = self._ep_rank_load(d)
+            cap = self._ladder_for(EP)[-1] // self.G
+            order = sorted(range(self.G), key=lambda g: load[g])
+            for g in order:
+                if load[g] < cap and self.alloc[d].free_pages(g) >= n_pages:
+                    r.owner_rank = g
+                    r.pages = self.alloc[d].alloc(g, n_pages)
+                    break
+            else:
+                return False
+        else:
+            if self.alloc[d].free_pages(0) < n_pages:
+                return False
+            r.owner_rank = -1
+            r.pages = self.alloc[d].alloc(0, n_pages)
+        r.state = State.PREFILL
+        r.prefill_pos = 0
+        self.prefilling.append(r)
+        return True
+
+    def _run_prefill(self):
+        """One chunked prefill step (batched across data groups / EP ranks)."""
+        if not self.prefilling:
+            return
+        chunk = self.ecfg.prefill_chunk
+        Bp = 1 if self.active == TP else self.G
+        maxp = self.cc.max_pages_per_req
+        toks = np.zeros((self.Dd, Bp, chunk), np.int32)
+        pos = np.zeros((self.Dd, Bp), np.int32)
+        vl = np.zeros((self.Dd, Bp), np.int32)
+        bt = np.zeros((self.Dd, Bp, maxp), np.int32)
+        picked: list[Request] = []
+        for r in self.prefilling:
+            d = r.data_group
+            row = 0 if self.active == TP else r.owner_rank
+            if vl[d, row] > 0:
+                continue                      # row already used this step
+            n = min(chunk, r.prompt_len - r.prefill_pos)
+            toks[d, row, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
+            pos[d, row] = r.prefill_pos
+            vl[d, row] = n
+            bt[d, row, :len(r.pages)] = r.pages
+            picked.append(r)
+        if not picked:
+            return
+        fn = self._prefill_fn(self.active)
+        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
+        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
+                               jnp.asarray(toks), jnp.asarray(pos),
+                               jnp.asarray(vl), jnp.asarray(bt), key)
+        nxt = np.asarray(nxt)
+        t = self.now()
+        for r in picked:
+            d = r.data_group
+            row = 0 if self.active == TP else r.owner_rank
+            r.prefill_pos += int(vl[d, row])
+            if r.prefill_pos >= r.prompt_len:
+                first = int(nxt[d, row])
+                r.output.append(first)
+                r.first_token_s = t
+                r.state = State.RUNNING
+                self.prefilling.remove(r)
+                self.running[r.rid] = r
+                if r.done():
+                    self._finish(r)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _finish(self, r: Request):
+        r.state = State.FINISHED
+        r.finish_s = self.now()
+        self.running.pop(r.rid, None)
+        d = r.data_group
+        rank = r.owner_rank if self.active == EP else 0
+        self.alloc[d].release(max(rank, 0), r.pages)
+        r.pages = []
+        self.finished.append(r)
+        self.metrics.finish(r)
+
+    def _ensure_pages(self, r: Request) -> bool:
+        need = pages_needed(r.kv_len + 1, self.cc.page_size)
+        if need <= len(r.pages):
+            return True
+        if need > self.cc.max_pages_per_req:
+            return False
+        d = r.data_group
+        rank = r.owner_rank if self.active == EP else 0
+        try:
+            r.pages.extend(self.alloc[d].alloc(max(rank, 0),
+                                               need - len(r.pages)))
+            return True
+        except MemoryError:
+            return False
+
+    def _decode_once(self):
+        if not self.running:
+            return
+        # slot compaction (host metadata only — free every iteration)
+        per_group: dict[int, list[Request]] = {d: [] for d in range(self.Dd)}
+        for r in self.running.values():
+            per_group[r.data_group].append(r)
+        def rotated(reqs):
+            lst = sorted(reqs, key=lambda q: q.rid)
+            if not lst:
+                return lst
+            off = self._step_i % len(lst)      # fairness under oversubscription
+            return lst[off:] + lst[:off]
+
+        if self.active == TP:
+            need = max(len(v) for v in per_group.values())
+            B = self.rt.pick_bs(need)
+            for d, reqs in per_group.items():
+                for i, r in enumerate(rotated(reqs)):
+                    r.slot = i if i < B else None
+        else:
+            bs_need = 1
+            for d, reqs in per_group.items():
+                load = [0] * self.G
+                for r in reqs:
+                    r.slot = None
+                for r in rotated(reqs):
+                    g = r.owner_rank
+                    r.slot_local = load[g]
+                    load[g] += 1
+                bs_need = max(bs_need, max(load))
+            B = None
+            for b in self._ladder_for(EP):
+                if b // self.G >= bs_need:
+                    B = b
+                    break
+            B = B or self._ladder_for(EP)[-1]
+            bs_loc = B // self.G
+            for r in self.running.values():
+                # requests beyond this rung's per-rank slots wait a turn
+                r.slot = (r.owner_rank * bs_loc + r.slot_local
+                          if r.slot_local < bs_loc else None)
+        maxp = self.cc.max_pages_per_req
+        toks = np.zeros((self.Dd, B, 1), np.int32)
+        pos = np.zeros((self.Dd, B), np.int32)
+        vl = np.zeros((self.Dd, B), np.int32)
+        bt = np.zeros((self.Dd, B, maxp), np.int32)
+        stepped: list[Request] = []
+        for r in self.running.values():
+            if r.slot is None or r.slot >= B:
+                continue
+            if not self._ensure_pages(r):
+                continue
+            d = r.data_group
+            toks[d, r.slot, 0] = r.output[-1]
+            # the fed token is output[-1]: its KV position is kv_len - 1
+            pos[d, r.slot] = r.kv_len - 1
+            vl[d, r.slot] = 1
+            bt[d, r.slot, :len(r.pages)] = r.pages
+            stepped.append(r)
+        if not stepped:
+            return
+        fn = self._decode_fn(self.active, B)
+        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
+        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
+                               jnp.asarray(toks), jnp.asarray(pos),
+                               jnp.asarray(vl), jnp.asarray(bt), key)
+        nxt = np.asarray(nxt)
+        for r in stepped:
+            r.output.append(int(nxt[r.data_group, r.slot]))
+            if r.done():
+                self._finish(r)
+
+    # ------------------------------------------------------------------
+    # switch
+    # ------------------------------------------------------------------
+    def _reshard_fn(self, direction: str):
+        if direction not in self._reshard_fns:
+            lay_ep = make_expert_layout(self.cfg.num_experts, self.G, EP)
+            if self.ecfg.direct_reshard and lay_ep.is_pure_ep:
+                self._reshard_fns[direction] = (
+                    "direct",
+                    make_reshard_experts_direct(self.cfg, self.mesh,
+                                                direction,
+                                                model_axis=self.m))
+            else:
+                src, dst = (EP, TP) if direction == "ep_to_tp" else (TP, EP)
+                build = make_reshard_experts(self.cfg, self.mesh, src, dst,
+                                             model_axis=self.m)
+                sds = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    self._experts)
+                self._reshard_fns[direction] = ("xla", build(sds))
+        return self._reshard_fns[direction]
+
+    def _migrate_fn(self, direction: str, pmax: int):
+        key = (direction, pmax)
+        if key not in self._migrate_fns:
+            self._migrate_fns[key] = make_migrate_kv(
+                self.cfg, self.cc, self.mesh, direction, pmax,
+                model_axis=self.m, data_axis=self.da)
+        return self._migrate_fns[key]
+
+    def execute_switch(self, target: str):
+        """Live switch between decode iterations; no request is drained."""
+        assert target != self.active
+        direction = "ep_to_tp" if target == TP else "tp_to_ep"
+        t0 = time.perf_counter()
+        live = [r for r in self.running.values()] + list(self.prefilling)
+
+        # --- plan (host): new allocators + page-indexed descriptors ---
+        new_alloc = [PageAllocator(self.cc, self.cfg, self.G, target)
+                     for _ in range(self.Dd)]
+        plans = []
+        for d in range(self.Dd):
+            reqs = [r for r in live if r.data_group == d and r.pages]
+            if direction == "ep_to_tp":
+                plans.append(plan_ep_to_tp(reqs, self.cfg, self.cc,
+                                           new_alloc[d], self.G))
+            else:
+                plans.append(plan_tp_to_ep(reqs, self.cfg, self.cc,
+                                           new_alloc[d], self.G))
+        pmax = _pow2_pad(max(p.src_pages.shape[1] for p in plans))
+        def padp(a, fill=0):
+            return np.pad(a, ((0, 0), (0, pmax - a.shape[1])),
+                          constant_values=fill)
+        sp = np.stack([padp(p.src_pages) for p in plans])
+        dp = np.stack([padp(p.dst_pages) for p in plans])
+        vm = np.stack([padp(p.valid) for p in plans])
+        t_plan = time.perf_counter() - t0
+
+        # --- weights (data plane, single copy resharded in place) ---
+        t1 = time.perf_counter()
+        if self.cfg.is_moe:
+            kind, fn = self._reshard_fn(direction)
+            if kind == "direct":
+                w13, w2 = fn(self._experts["w13"], self._experts["w2"])
+                self._experts = {"w13": w13, "w2": w2}
+            else:
+                out = fn(self._experts)
+                self._experts = {"w13": out["w13"], "w2": out["w2"]}
+            jax.block_until_ready(self._experts["w13"])
+        t_w = time.perf_counter() - t1
+
+        # --- KV cache (three-stage gather/exchange/scatter) ---
+        t2 = time.perf_counter()
+        mfn = self._migrate_fn(direction, pmax)
+        self.kv_flat = mfn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
+                           jnp.asarray(vm))
+        jax.block_until_ready(self.kv_flat)
+        t_kv = time.perf_counter() - t2
+
+        self.alloc = new_alloc
+        self.active = target
+        total = time.perf_counter() - t0
+        self.switch_records.append(SwitchRecord(
+            t=self.now(), direction=direction, total_s=total,
+            weights_s=t_w, kv_s=t_kv, plan_s=t_plan,
+            kv_pages=int(vm.sum()), live_requests=len(live)))
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def step(self):
+        self._step_i += 1
+        self._admit()
+        # policy: sample once per iteration, between steps
+        in_flight = len(self.running) + len(self.waiting) + len(self.prefilling)
+        live_tokens = sum(r.kv_len + 1 for r in self.running.values())
+        cap_ep = self.cc.capacity_tokens(self.cfg, self.G, EP)
+        dec = self.coord.observe(in_flight, live_tokens, cap_ep)
+        if dec.switch:
+            self.execute_switch(dec.target)
+        # admit waiting -> prefill
+        still = []
+        for r in self.waiting:
+            if not self._start_prefill(r):
+                still.append(r)
+        self.waiting = still
+        self._run_prefill()
+        self._decode_once()
+        self.metrics.sample_mode(self.now(), self.active, len(self.running))
+
+    def run(self, max_steps: int = 100000):
+        for _ in range(max_steps):
+            if not (self.pending or self.waiting or self.prefilling
+                    or self.running):
+                break
+            self.step()
+        return self.metrics.summary()

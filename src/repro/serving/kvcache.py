@@ -1,0 +1,123 @@
+"""Paged KV cache: unified flat buffer + per-layout views + host allocators.
+
+The TPU analogue of the paper's unified memory manager (§4.2): each rank owns
+ONE flat element pool; the EP and TP layouts are *views* (reshapes) of the
+same bytes:
+
+  flat:    (Dd, G, NE)                      sharded P("data", "model")
+  EP view: (Dd, G, L, 2, pages_ep, page, K,  dh)   pages per model-rank
+  TP view: (Dd, G, L, 2, pages_tp, page, Kl, dh)   pages shared across the
+                                                    group, head-sliced per rank
+
+pages_tp = pages_ep * K // Kl, so both views cover exactly NE elements.
+Group token capacity: EP = G*pages_ep*page, TP = pages_tp*page =
+EP / kv_rep — the paper's KV-head-replication capacity penalty falls out of
+the byte accounting.
+
+Page 0 of every view is the NULL page: inactive decode slots write there.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.layouts import EP, TP, GroupInfo, group_info
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    page_size: int = 16
+    pages_ep: int = 64            # per model-rank pages in the EP view
+    max_pages_per_req: int = 32   # block-table width
+
+    def nelems(self, cfg: ModelConfig, G: int) -> int:
+        gi = group_info(cfg, G)
+        L = num_kv_layers(cfg)
+        return (L * 2 * self.pages_ep * self.page_size
+                * cfg.num_kv_heads * cfg.dh)
+
+    def pages_tp(self, cfg: ModelConfig, G: int) -> int:
+        gi = group_info(cfg, G)
+        return self.pages_ep * cfg.num_kv_heads // gi.kv_local
+
+    def view_shape(self, cfg: ModelConfig, G: int, layout: str) -> tuple:
+        gi = group_info(cfg, G)
+        L = num_kv_layers(cfg)
+        if layout == EP:
+            return (L, 2, self.pages_ep, self.page_size,
+                    cfg.num_kv_heads, cfg.dh)
+        return (L, 2, self.pages_tp(cfg, G), self.page_size,
+                gi.kv_local, cfg.dh)
+
+    def capacity_tokens(self, cfg: ModelConfig, G: int, layout: str) -> int:
+        """Group-wide token capacity (excluding the null pages)."""
+        if layout == EP:
+            return G * (self.pages_ep - 1) * self.page_size
+        return (self.pages_tp(cfg, G) - 1) * self.page_size
+
+
+def num_kv_layers(cfg: ModelConfig) -> int:
+    """Attention sites that carry paged KV."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Host allocators (per data group)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Page allocator for one data group under one layout.
+
+    EP: pages are per-model-rank pools (page ids local to the rank).
+    TP: one shared pool (page ids global to the group).
+    Page 0 is reserved (null page).
+    """
+
+    def __init__(self, cc: CacheConfig, cfg: ModelConfig, G: int, layout: str):
+        self.cc, self.layout, self.G = cc, layout, G
+        if layout == EP:
+            self.free = [list(range(cc.pages_ep - 1, 0, -1)) for _ in range(G)]
+        else:
+            n = cc.pages_tp(cfg, G)
+            self.free = [list(range(n - 1, 0, -1))]
+
+    def pool_of(self, rank: int) -> list:
+        return self.free[rank if self.layout == EP else 0]
+
+    def free_pages(self, rank: int) -> int:
+        return len(self.pool_of(rank))
+
+    def alloc(self, rank: int, n: int) -> list[int]:
+        pool = self.pool_of(rank)
+        if len(pool) < n:
+            raise MemoryError(f"KV pool exhausted (rank={rank}, want {n}, "
+                              f"have {len(pool)})")
+        return [pool.pop() for _ in range(n)]
+
+    def release(self, rank: int, pages: list[int]) -> None:
+        self.pool_of(rank).extend(pages)
+
+    def total_free(self) -> int:
+        return sum(len(p) for p in self.free)
+
+
+def pages_needed(kv_len: int, page_size: int) -> int:
+    return max(1, -(-kv_len // page_size))
+
+
+def block_table_array(requests, slots: int, max_pages: int,
+                      null_page: int = 0) -> np.ndarray:
+    """Dense (slots, max_pages) int32 block table from request page lists."""
+    bt = np.full((slots, max_pages), null_page, np.int32)
+    for r in requests:
+        if r.slot >= 0:
+            n = min(len(r.pages), max_pages)
+            bt[r.slot, :n] = r.pages[:n]
+    return bt

@@ -1,0 +1,42 @@
+"""Serving metrics: TTFT / TPOT / throughput, binned like the paper's Fig. 9."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ServeMetrics:
+    records: list = field(default_factory=list)   # (rid, arrival, first, finish, out_len)
+    mode_samples: list = field(default_factory=list)  # (t, mode, running)
+
+    def finish(self, req) -> None:
+        self.records.append((req.rid, req.arrival_s, req.first_token_s,
+                             req.finish_s, len(req.output)))
+
+    def sample_mode(self, t: float, mode: str, running: int) -> None:
+        self.mode_samples.append((t, mode, running))
+
+    def ttft(self) -> np.ndarray:
+        return np.array([f - a for _, a, f, _, _ in self.records
+                         if f is not None])
+
+    def tpot(self) -> np.ndarray:
+        out = []
+        for _, a, f, fin, n in self.records:
+            if f is not None and fin is not None and n > 1:
+                out.append((fin - f) / (n - 1))
+        return np.array(out)
+
+    def summary(self) -> dict:
+        tt, tp = self.ttft(), self.tpot()
+        fins = [fin for *_, fin, _ in self.records if fin is not None]
+        return {
+            "n": len(self.records),
+            "ttft_mean_s": float(tt.mean()) if len(tt) else float("nan"),
+            "ttft_p99_s": float(np.percentile(tt, 99)) if len(tt) else float("nan"),
+            "tpot_mean_s": float(tp.mean()) if len(tp) else float("nan"),
+            "makespan_s": float(max(fins)) if fins else float("nan"),
+            "total_tokens": int(sum(n for *_, n in self.records)),
+        }

@@ -1,0 +1,50 @@
+"""Request metadata (host-resident, survives switches by construction)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+
+
+class State(str, Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    # forced output length for replay-style benchmarks (paper §6.3 methodology)
+    forced_len: int | None = None
+    state: State = State.WAITING
+    output: list[int] = field(default_factory=list)
+    prefill_pos: int = 0           # tokens already prefilled
+    # placement (layout-dependent, rewritten by a switch)
+    data_group: int = 0
+    owner_rank: int = 0            # EP: owning model-rank; TP: -1 (shared)
+    slot: int | None = -1          # decode batch slot
+    slot_local: int = 0            # EP: slot within the owner rank
+    pages: list[int] = field(default_factory=list)
+    # metrics
+    first_token_s: float | None = None
+    finish_s: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def kv_len(self) -> int:
+        return self.prefill_pos + len(self.output)
+
+    @property
+    def target_len(self) -> int:
+        return self.forced_len if self.forced_len is not None \
+            else self.max_new_tokens
+
+    def done(self) -> bool:
+        return len(self.output) >= self.target_len

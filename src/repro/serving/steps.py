@@ -1,0 +1,370 @@
+"""Layout-aware serve steps (decode + chunked prefill) under shard_map.
+
+These are the per-layout runtimes the paper keeps resident (§4.4): each is
+AOT-compiled against fixed avals/shardings for a ladder of batch-slot sizes.
+
+Transformer families (dense / moe / vlm). Batch geometry per layout:
+  TP: batch slots replicated over the model axis; heads sharded (rank-major
+      attention weights; wo pre-scaled for replicated head blocks).
+  EP: batch slots sharded over the model axis (slot s lives on rank
+      s // (Bslot/G)); attention weights replicated; experts rank-local with
+      all_to_all dispatch.
+
+KV pool: the unified flat buffer's layout view (serving/kvcache.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.layouts import (EP, TP, TPEP, attn_rank_major,
+                                expert_layout, group_info, padded_vocab)
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.models.common import (ModelConfig, apply_norm, apply_rope,
+                                 rmsnorm, rope_cos_sin)
+from repro.models.moe import moe_decode_ep, moe_decode_tp
+from repro.serving.kvcache import CacheConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Decode param packs (per-layout stored forms + shard_map specs)
+# ---------------------------------------------------------------------------
+
+def build_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
+    """Stored layout params (from core.layouts.pack_params) -> decode pack.
+
+    TP expands attention to rank-major (the paper's dual-mode attention
+    buffer); EP keeps global attention weights replicated.
+    """
+    lp = params["layers"]
+    pack = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        pack["lm_head"] = params["lm_head"]
+    lpack = {"attn_norm": lp["attn_norm"], "mlp_norm": lp["mlp_norm"]}
+    if layout != EP:
+        lpack["attn"] = attn_rank_major(cfg, lp["attn"], G)   # (L, G, ...)
+    else:
+        lpack["attn"] = lp["attn"]
+    if cfg.is_moe:
+        lpack["moe"] = lp["moe"]
+    else:
+        lpack["mlp"] = lp["mlp"]
+    pack["layers"] = lpack
+    return pack
+
+
+def decode_pack_specs(cfg: ModelConfig, pack, layout: str,
+                      m: str = "model", ep_axes=None):
+    """PartitionSpec pytree matching a decode pack (works on shapes).
+    ep_axes: expert-sharding axes (TPEP: the full mesh)."""
+    exp_ax = ep_axes if (layout == TPEP and ep_axes) else m
+    vocab_spec = P(m, None) if layout != EP else P()
+    specs = {"embed": vocab_spec,
+             "final_norm": jax.tree.map(lambda _: P(), pack["final_norm"])}
+    if "lm_head" in pack:
+        specs["lm_head"] = vocab_spec
+    lp = pack["layers"]
+    lspec = {"attn_norm": jax.tree.map(lambda _: P(), lp["attn_norm"]),
+             "mlp_norm": jax.tree.map(lambda _: P(), lp["mlp_norm"])}
+    if layout != EP:
+        lspec["attn"] = {k: P(*([None, m] + [None] * (v.ndim - 2)))
+                         for k, v in lp["attn"].items()}
+    else:
+        lspec["attn"] = jax.tree.map(lambda _: P(), lp["attn"])
+    if cfg.is_moe:
+        ms: dict = {"router": P(),
+                    "w13": P(None, exp_ax, None, None, None),
+                    "w2": P(None, exp_ax, None, None, None)}
+        for k in ("shared_wg", "shared_wu", "shared_w2", "shared_gate"):
+            if k in lp["moe"]:
+                if layout == TP and k in ("shared_wg", "shared_wu"):
+                    ms[k] = P(None, m, None)
+                elif layout == TP and k == "shared_w2":
+                    ms[k] = P(None, None, m)
+                else:
+                    ms[k] = P()
+        lspec["moe"] = ms
+    else:
+        lspec["mlp"] = {k: (P(None, None, m) if k in ("w_gate", "w_up")
+                            else P(None, m, None))
+                        for k in lp["mlp"]}
+    specs["layers"] = lspec
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Per-rank building blocks (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _embed_lookup(cfg, pack, tokens, layout: str, m: str,
+                  scale: bool | None = None):
+    """tokens (bs,) -> x (bs, D). TP: vocab-sharded gather + psum.
+    The sqrt(D) embed scale applies only to families whose reference
+    forward scales (transformer lm_forward); ssm/hybrid/encdec do not."""
+    emb = pack["embed"]
+    if scale is None:
+        scale = cfg.family in ("dense", "moe", "vlm")
+    sc = (jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.compute_dtype)
+          if scale else jnp.ones((), cfg.compute_dtype))
+    if layout == EP:
+        return emb[tokens].astype(cfg.compute_dtype) * sc
+    Vloc = emb.shape[0]
+    r = lax.axis_index(m)
+    local = tokens - r * Vloc
+    ok = (local >= 0) & (local < Vloc)
+    x = jnp.where(ok[:, None], emb[jnp.clip(local, 0, Vloc - 1)], 0)
+    return lax.psum(x.astype(cfg.compute_dtype), m) * sc
+
+
+def _project_heads(cfg, ap, x, positions, layout):
+    """x (bs, S, D) -> q (bs,S,hl,dh), k/v (bs,S,kl,dh) with rope+qknorm.
+    ap: TP rank-major local slices (L-dim and G-dim already consumed)."""
+    bs, S, D = x.shape
+    dh = cfg.dh
+    q = (x @ ap["wq"])
+    k = (x @ ap["wk"])
+    v = (x @ ap["wv"])
+    hl = q.shape[-1] // dh
+    kl = k.shape[-1] // dh
+    q = q.reshape(bs, S, hl, dh)
+    k = k.reshape(bs, S, kl, dh)
+    v = v.reshape(bs, S, kl, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, ap["q_norm"])
+        k = rmsnorm(k, ap["k_norm"])
+    cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _write_pages(pool_l, k, v, page_ids, slots):
+    """pool_l (2, pages, page, Kh, dh); k/v (bs, S, Kh, dh);
+    page_ids/slots (bs, S) -> updated pool."""
+    bs, S = page_ids.shape
+    pid = page_ids.reshape(-1)
+    sl = slots.reshape(-1)
+    kv = jnp.stack([k.reshape(bs * S, *k.shape[2:]),
+                    v.reshape(bs * S, *v.shape[2:])], axis=0)
+    return pool_l.at[:, pid, sl].set(kv.astype(pool_l.dtype))
+
+
+def _ffn(cfg, lpk, h_flat, layout, m, lay_exp, cap_factor, ep_axes=None):
+    """h_flat (T, D) -> (T, D) ffn output; TP returns AFTER psum."""
+    if cfg.is_moe:
+        if layout == TP:
+            part = moe_decode_tp(cfg, lpk["moe"], h_flat, m,
+                                 cap_factor=cap_factor)
+            return lax.psum(part, m)
+        if layout == TPEP:
+            # TP attention feeds a replicated batch; each model rank owns
+            # its 1/G token slice and dispatches over the FULL mesh
+            r = lax.axis_index(m)
+            T = h_flat.shape[0]
+            Gm = jax.lax.psum(1, m)
+            Tl = T // Gm
+            mine = lax.dynamic_slice_in_dim(h_flat, r * Tl, Tl, 0)
+            y = moe_decode_ep(cfg, lpk["moe"], mine, ep_axes, lay_exp,
+                              cap_factor=cap_factor)
+            return lax.all_gather(y, m, axis=0, tiled=True)
+        return moe_decode_ep(cfg, lpk["moe"], h_flat, m, lay_exp,
+                             cap_factor=cap_factor)
+    mlp = lpk["mlp"]
+    if layout == TP:
+        if cfg.mlp_type == "swiglu":
+            hh = jax.nn.silu(h_flat @ mlp["w_gate"]) * (h_flat @ mlp["w_up"])
+        else:
+            hh = jax.nn.gelu(h_flat @ mlp["w_up"])
+        return lax.psum(hh @ mlp["w_down"], m)
+    # EP dense: DP attention + TP MLP -> all_gather tokens, width-local MLP,
+    # reduce_scatter back (same per-layer volume as TP's all-reduce)
+    full = lax.all_gather(h_flat, m, axis=0, tiled=True)       # (T*G, D)
+    if cfg.mlp_type == "swiglu":
+        hh = jax.nn.silu(full @ mlp["w_gate"]) * (full @ mlp["w_up"])
+    else:
+        hh = jax.nn.gelu(full @ mlp["w_up"])
+    out = hh @ mlp["w_down"]
+    return lax.psum_scatter(out, m, scatter_dimension=0, tiled=True)
+
+
+def _sample(cfg, pack, x, layout, m, key, temperature, slot0):
+    """x (bs, D) -> sampled tokens (bs,) int32 (Gumbel-max; exact)."""
+    head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
+    logits = (x @ head.T.astype(x.dtype)).astype(jnp.float32)
+    V = cfg.vocab_size
+    bs = x.shape[0]
+    r = lax.axis_index(m) if layout != EP else None
+    if layout != EP:
+        Vloc = head.shape[0]
+        col0 = r * Vloc
+        cols = col0 + jnp.arange(Vloc)
+        logits = jnp.where(cols[None, :] < V, logits, NEG_INF)
+        if temperature > 0:
+            kr = jax.random.fold_in(key, r)
+            g = -jnp.log(-jnp.log(jax.random.uniform(
+                kr, logits.shape, jnp.float32, 1e-20, 1.0)))
+            logits = logits / temperature + g
+        loc_arg = jnp.argmax(logits, axis=-1)
+        loc_val = jnp.max(logits, axis=-1)
+        vals = lax.all_gather(loc_val, m)              # (G, bs)
+        args = lax.all_gather(col0 + loc_arg, m)       # (G, bs)
+        win = jnp.argmax(vals, axis=0)                 # (bs,)
+        return jnp.take_along_axis(args, win[None], axis=0)[0].astype(jnp.int32)
+    cols = jnp.arange(head.shape[0])
+    logits = jnp.where(cols[None, :] < V, logits, NEG_INF)
+    if temperature > 0:
+        kr = jax.random.fold_in(key, lax.axis_index(m))
+        g = -jnp.log(-jnp.log(jax.random.uniform(
+            kr, logits.shape, jnp.float32, 1e-20, 1.0)))
+        logits = logits / temperature + g
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
+                     Bslot: int, Sq: int = 1, *, temperature: float = 0.0,
+                     data_axes=("data",), model_axis: str = "model",
+                     attn_backend: str | None = None,
+                     return_logits: bool = False, donate: bool = True):
+    """Build a jitted serve step. Sq == 1 -> decode; Sq > 1 -> prefill chunk.
+
+    Global signature:
+      pack, kv_flat (Dd, G, NE), tokens (Dd, Bslot, Sq), positions (Dd, Bslot),
+      valid_len (Dd, Bslot), block_table (Dd, Bslot, maxp), key
+      -> (next_token (Dd, Bslot), kv_flat')
+    `positions` = global position of tokens[:, :, 0] (== kv_len so far);
+    `valid_len` = #valid tokens in the chunk (1 for decode).
+    """
+    m, da = model_axis, data_axes
+    G = mesh.shape[m]
+    gi = group_info(cfg, G)
+    ep_axes = tuple(da) + (m,)
+    if layout == TPEP:
+        G_exp = int(np.prod([mesh.shape[a] for a in ep_axes]))
+        lay_exp = expert_layout(cfg, G_exp, EP)
+    else:
+        G_exp = G
+        lay_exp = expert_layout(cfg, G, layout)
+    page = cc.page_size
+    maxp = cc.max_pages_per_req
+    kv_layout = TP if layout == TPEP else layout
+    view = cc.view_shape(cfg, G, kv_layout)   # (L,2,pages,page,Kh,dh)
+    Lk = view[0]
+    bs = Bslot // G if layout == EP else Bslot
+
+    bspec2 = P(da, m) if layout == EP else P(da, None)
+    bspec3 = P(da, m, None) if layout == EP else P(da, None, None)
+    flat_spec = P(da, m)
+
+    def body(pack, kv_flat, tokens, positions, valid_len, block_table, key):
+        tokens = tokens.reshape(bs, Sq)
+        positions = positions.reshape(bs)
+        valid_len = valid_len.reshape(bs)
+        bt = block_table.reshape(bs, maxp)
+        pool = kv_flat.reshape(view)                       # (L,2,pages,...)
+        key = jax.random.wrap_key_data(key)
+        # squeeze the rank-major G dim (local size 1) out of TP tensors
+        layers = dict(pack["layers"])
+        if layout != EP:
+            layers["attn"] = {k: v.squeeze(1)
+                              for k, v in layers["attn"].items()}
+        if cfg.is_moe:
+            mo = dict(layers["moe"])
+            mo["w13"] = mo["w13"].squeeze(1)
+            mo["w2"] = mo["w2"].squeeze(1)
+            layers["moe"] = mo
+        pack = dict(pack)
+        pack["layers"] = layers
+
+        x = _embed_lookup(cfg, pack, tokens.reshape(-1), layout, m)
+        x = x.reshape(bs, Sq, cfg.d_model)
+        # zero dead slots: garbage hiddens would otherwise contaminate
+        # shared dispatch einsums (NaN*0 == NaN)
+        x = x * (valid_len > 0).astype(x.dtype)[:, None, None]
+        pos_mat = positions[:, None] + jnp.arange(Sq)[None, :]   # (bs,Sq)
+        # page targets for the chunk's K/V (invalid tail -> null page 0)
+        pidx = jnp.clip(pos_mat // page, 0, maxp - 1)
+        in_chunk = jnp.arange(Sq)[None, :] < valid_len[:, None]
+        page_ids = jnp.where(in_chunk,
+                             jnp.take_along_axis(bt, pidx, axis=1), 0)
+        slots = pos_mat % page
+        kv_total = positions + valid_len                   # (bs,)
+
+        def layer_fn(h, xs):
+            lpk, pool_l = xs
+            hn = apply_norm(cfg, h, lpk["attn_norm"])
+            q, k, v = _project_heads(cfg, lpk["attn"], hn, pos_mat, layout)
+            pool_l = _write_pages(pool_l, k, v, page_ids, slots)
+            attn = paged_attention(
+                q, pool_l[0], pool_l[1], bt, kv_total,
+                q_offset=positions, window=cfg.sliding_window,
+                backend=attn_backend)
+            attn = attn.reshape(bs, Sq, -1) @ lpk["attn"]["wo"]
+            if layout != EP:        # TP and TPEP: heads are sharded
+                attn = lax.psum(attn, m)
+            h = h + attn.astype(h.dtype)
+            hn = apply_norm(cfg, h, lpk["mlp_norm"])
+            y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), layout, m, lay_exp,
+                     cap_factor=None, ep_axes=ep_axes)
+            h = h + y.reshape(bs, Sq, -1).astype(h.dtype)
+            return h, pool_l
+
+        x, new_pool = lax.scan(layer_fn, x, (pack["layers"], pool))
+        x = apply_norm(cfg, x, pack["final_norm"])
+        # sample at the last valid position of each slot
+        last = jnp.clip(valid_len - 1, 0, Sq - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        nxt = _sample(cfg, pack, xl, layout, m, key, temperature, 0)
+        out = (nxt.reshape(1, bs), new_pool.reshape(1, 1, -1))
+        if return_logits:
+            head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
+            lg = (xl @ head.T.astype(xl.dtype)).astype(jnp.float32)
+            if layout != EP:
+                lg = lax.all_gather(lg, m, axis=1, tiled=True)  # (bs, Vp)
+            out = out + (lg.reshape(1, bs, -1),)
+        return out
+
+    pack_shapes = jax.eval_shape(
+        lambda p: build_decode_pack(cfg, p, layout, G),
+        _params_like(cfg, layout, G, G_exp))
+    pspecs = decode_pack_specs(cfg, pack_shapes, layout, m, ep_axes=ep_axes)
+
+    out_specs = (bspec2, flat_spec)
+    if return_logits:
+        out_specs = out_specs + ((P(da, m, None) if layout == EP
+                                  else P(da, None, None)),)
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, flat_spec, bspec3, bspec2, bspec2, bspec3, P()),
+        out_specs=out_specs, check_vma=False)
+    donate_args = (1,) if donate else ()
+    return jax.jit(smapped, donate_argnums=donate_args)
+
+
+_PARAMS_CACHE: dict = {}
+
+
+def _params_like(cfg: ModelConfig, layout: str, G: int,
+                 expert_G: int | None = None):
+    """Shape-only *stored-form* param template (pack_params applied)."""
+    key = (cfg.name, cfg.num_layers, cfg.d_model, cfg.vocab_size, layout, G,
+           expert_G)
+    if key not in _PARAMS_CACHE:
+        from repro.core.layouts import pack_params
+        from repro.models.registry import init_params
+        import jax.random as jr
+        _PARAMS_CACHE[key] = jax.eval_shape(
+            lambda: pack_params(cfg, init_params(cfg, jr.PRNGKey(0)),
+                                layout, G, expert_G))
+    return _PARAMS_CACHE[key]

@@ -1,0 +1,80 @@
+"""Workload generators: bursty online-serving trace + RL-rollout batches.
+
+Mirrors the paper's evaluation workloads (§6.2, §6.3) at configurable scale:
+  * bursty: two short Poisson bursts bracketing a quiet period; prompts
+    300-700 tokens, outputs U(800, 1200)  (scaled down by `scale`).
+  * rollout: one batch of N prompts; outputs heavy-tailed (lognormal capped),
+    inputs short/clustered — the burst-to-long-tail decay of Fig. 1(c).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclass(frozen=True)
+class BurstySpec:
+    duration_s: float = 375.0
+    burst_windows: tuple = ((10.0, 25.0), (330.0, 345.0))
+    burst_rates: tuple = (80.0, 120.0)     # req/s during bursts
+    quiet_rate: float = 3.0                # req/s otherwise
+    prompt_range: tuple = (300, 700)
+    output_range: tuple = (800, 1200)
+    scale: float = 1.0                     # scales rates and lengths
+
+
+def bursty_trace(spec: BurstySpec, seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    reqs, rid, t = [], 0, 0.0
+    while t < spec.duration_s:
+        rate = spec.quiet_rate
+        for (s, e), r in zip(spec.burst_windows, spec.burst_rates):
+            if s <= t < e:
+                rate = r
+        rate *= spec.scale
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        if t >= spec.duration_s:
+            break
+        plen = int(rng.integers(*spec.prompt_range) * spec.scale) or 1
+        olen = int(rng.integers(*spec.output_range) * spec.scale) or 1
+        reqs.append(Request(rid=rid, prompt=list(rng.integers(5, 1000, plen)),
+                            max_new_tokens=olen, arrival_s=t))
+        rid += 1
+    return reqs
+
+
+@dataclass(frozen=True)
+class RolloutSpec:
+    num_prompts: int = 2048
+    prompt_median: int = 120
+    prompt_max: int = 1352
+    output_median: int = 1510
+    output_p99: int = 10386
+    output_cap: int = 32768
+    scale: float = 1.0
+
+
+def rollout_batch(spec: RolloutSpec, seed: int = 0) -> list[Request]:
+    """Heavy-tailed output lengths: lognormal fit to (median, p99), capped."""
+    rng = np.random.default_rng(seed)
+    mu = math.log(spec.output_median * spec.scale)
+    # p99 = exp(mu + 2.326 sigma)
+    sigma = (math.log(max(spec.output_p99 * spec.scale, 2.0)) - mu) / 2.326
+    n = max(1, int(spec.num_prompts * (spec.scale if spec.scale < 1 else 1)))
+    outs = np.minimum(np.exp(mu + sigma * rng.standard_normal(n)),
+                      spec.output_cap * spec.scale).astype(int)
+    outs = np.maximum(outs, 1)
+    plens = np.minimum(
+        rng.gamma(4.0, spec.prompt_median * spec.scale / 4.0, n).astype(int) + 1,
+        int(spec.prompt_max * spec.scale) or 1)
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            rid=i, prompt=list(rng.integers(5, 1000, plens[i])),
+            max_new_tokens=int(outs[i]), forced_len=int(outs[i]),
+            arrival_s=0.0))
+    return reqs

@@ -1,0 +1,136 @@
+"""Train-step factory: GSPMD global math + layout shardings.
+
+Layout here means the same EP/TP weight placements as serving (the paper's
+"two layouts of one model" extends to training, HotSPa-style): TP = Megatron
+sharding; EP = expert-parallel experts + replicated attention. Data
+parallelism runs over the (pod?, data) axes; optional ZeRO-style optimizer-
+state sharding over `data`; microbatch gradient accumulation via scan;
+activation remat inside the per-layer scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.layouts import batch_specs, pack_params, param_specs
+from repro.models.common import ModelConfig
+from repro.models.moe import make_expert_layout
+from repro.models.registry import init_params, loss_fn
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update)
+
+
+def _zero_spec(spec: P, axis: str = "data"):
+    """Shard optimizer moments over `data` on the largest free dim."""
+    parts = list(spec) if len(spec) else []
+    return spec  # conservative default; ZeRO applied only to big 2D+ leaves
+
+
+def make_shardings(cfg: ModelConfig, mesh, layout: str, params_shape, *,
+                   model_axis: str = "model", zero_axis: str | None = None,
+                   data_axes=("data",)):
+    specs = param_specs(cfg, params_shape, layout, model_axis, data_axes)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    def opt_leaf(spec, leaf):
+        used = {a for ent in spec if ent
+                for a in ((ent,) if isinstance(ent, str) else ent)}
+        if zero_axis and zero_axis not in used and leaf.ndim >= 2:
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            for i, pt in enumerate(parts):
+                if pt is None and leaf.shape[i] % mesh.shape[zero_axis] == 0:
+                    parts[i] = zero_axis
+                    return NamedSharding(mesh, P(*parts))
+        return NamedSharding(mesh, spec)
+
+    osh_mv = jax.tree.map(opt_leaf, specs, params_shape)
+    return psh, osh_mv
+
+
+def build_train_step(cfg: ModelConfig, mesh, layout: str, *,
+                     opt: AdamWConfig | None = None,
+                     grad_accum: int = 1,
+                     data_axes=("data",), model_axis: str = "model",
+                     zero: bool = False, donate: bool = True,
+                     global_batch: int | None = None, remat: bool = True):
+    """Returns (jitted train_step, init_fn).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch: tokens/labels (global_batch, seq) [+ frames/patches stubs].
+    """
+    opt = opt or AdamWConfig()
+    import numpy as _np0
+    chips = int(_np0.prod([mesh.shape[a] for a in data_axes])) \
+        * mesh.shape[model_axis]
+    if layout == "tpep":
+        lay = make_expert_layout(cfg.num_experts, chips, "ep") \
+            if cfg.is_moe else None
+        bspec = batch_specs("tp", data_axes, model_axis)
+    else:
+        lay = make_expert_layout(cfg.num_experts, mesh.shape[model_axis],
+                                 layout) if cfg.is_moe else None
+        bspec = batch_specs(layout, data_axes, model_axis)
+    if global_batch is not None and len(bspec) and bspec[0]:
+        ent = bspec[0]
+        ent = (ent,) if isinstance(ent, str) else ent   # P canonicalization
+        axes = [a for ax in ent
+                for a in ((ax,) if isinstance(ax, str) else ax)]
+        import numpy as _np
+        if global_batch % int(_np.prod([mesh.shape[a] for a in axes])):
+            # fall back to DP-only batch sharding (small global batch)
+            from jax.sharding import PartitionSpec as _PS
+            bspec = _PS(tuple(data_axes), None)
+
+    def loss_of(params, batch):
+        return loss_fn(cfg, params, batch, lay=lay, remat=remat)
+
+    def step_fn(params, opt_state, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero_g, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state, m = adamw_update(opt, params, grads, opt_state)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    def init_fn(key):
+        params = pack_params(cfg, init_params(cfg, key), layout,
+                             mesh.shape[model_axis],
+                             expert_G=chips if layout == "tpep" else None)
+        return params, adamw_init(params)
+
+    params_shape = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))[0]
+    psh, osh = make_shardings(cfg, mesh, layout, params_shape,
+                              model_axis=model_axis,
+                              zero_axis="data" if zero else None,
+                              data_axes=data_axes)
+    opt_sh = {"m": osh, "v": osh, "step": NamedSharding(mesh, P())}
+    bsh = {"tokens": NamedSharding(mesh, bspec),
+           "labels": NamedSharding(mesh, bspec)}
+    bdim = bspec[0]
+    if cfg.family == "encdec":
+        bsh["frames"] = NamedSharding(mesh, P(bdim, None, None))
+    if cfg.family == "vlm":
+        bsh["patches"] = NamedSharding(mesh, P(bdim, None, None))
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(psh, opt_sh, bsh),
+        out_shardings=(psh, opt_sh,
+                       jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                    {"grad_norm": 0, "lr": 0, "loss": 0})),
+        donate_argnums=(0, 1) if donate else ())
+    return jitted, init_fn, (psh, opt_sh, bsh)

@@ -1,0 +1,23 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here — the main pytest process sees
+1 device; multi-device tests run in subprocesses (tests/helpers.py)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return get_config("internlm2-1.8b").reduced(
+        num_heads=8, num_kv_heads=2, head_dim=8, d_model=32, num_layers=2,
+        d_ff=64, vocab_size=256,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def tiny_moe():
+    return get_config("mixtral-8x7b").reduced(
+        num_heads=8, num_kv_heads=2, head_dim=8, d_model=32, num_layers=2,
+        num_experts=8, top_k=2, d_expert=32, vocab_size=256,
+        capacity_factor=8.0,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)

@@ -1,0 +1,21 @@
+"""Run multi-device checks in subprocesses so the main pytest process keeps
+a single device (the dry-run-only-512 rule)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_multidevice(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout[-4000:]}"
+            f"\nSTDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout

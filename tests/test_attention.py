@@ -1,0 +1,72 @@
+"""Attention substrate: flash vs naive, SWA, GQA, RoPE properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import (apply_rope, flash_attention, rope_cos_sin)
+
+
+def _naive(q, k, v, causal, window, q_offset=0, kv_len=None):
+    B, Sq, H, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    rep = H // Hk
+    kf = np.repeat(np.asarray(k, np.float64), rep, 2)
+    vf = np.repeat(np.asarray(v, np.float64), rep, 2)
+    qf = np.asarray(q, np.float64) / math.sqrt(D)
+    s = np.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = q_offset + np.arange(Sq)
+    kpos = np.arange(Sk)
+    mask = np.ones((B, Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, None] <= qpos[None, :, None]
+    if window:
+        mask &= kpos[None, None] > qpos[None, :, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, None] < np.asarray(kv_len)[:, None, None]
+    s = np.where(mask[:, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@settings(deadline=None, max_examples=15)
+@given(Sq=st.sampled_from([1, 5, 16]), Sk=st.sampled_from([16, 33]),
+       H=st.sampled_from([4, 8]), Hk=st.sampled_from([1, 2, 4]),
+       causal=st.booleans(), window=st.sampled_from([0, 7]),
+       block=st.sampled_from([4, 16]), seed=st.integers(0, 50))
+def test_flash_matches_naive(Sq, Sk, H, Hk, causal, window, block, seed):
+    if H % Hk:
+        Hk = 1
+    D = 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, Sq, H, D))
+    k = jax.random.normal(ks[1], (2, Sk, Hk, D))
+    v = jax.random.normal(ks[2], (2, Sk, Hk, D))
+    off = max(0, Sk - Sq)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=off, block_k=block)
+    ref = _naive(q, k, v, causal, window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    D = 16
+    pos = jnp.arange(8)[None]
+    cos, sin = rope_cos_sin(pos, D, 1e4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, D))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # dot products depend only on relative offset
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    def dot_at(pq, pk):
+        cq, sq = rope_cos_sin(jnp.array([[pq]]), D, 1e4)
+        ck, sk = rope_cos_sin(jnp.array([[pk]]), D, 1e4)
+        return float(jnp.sum(apply_rope(q, cq, sq) * apply_rope(k, ck, sk)))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(5, 4)) > 1e-6

@@ -1,0 +1,54 @@
+"""Checkpoint: layout-agnostic save/restore roundtrips incl. layout flips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import EP, TP, pack_params
+from repro.distributed.checkpoint import (from_canonical, restore_checkpoint,
+                                          save_checkpoint, to_canonical)
+from repro.models.registry import init_params
+
+
+def _trees_close(a, b, tol=0.0):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=tol)
+
+
+def test_canonical_roundtrip_between_layouts(tiny_moe):
+    cfg = tiny_moe
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    for G in (2, 4):
+        ep = pack_params(cfg, params, EP, G)
+        tp = pack_params(cfg, params, TP, G)
+        # EP stored -> canonical -> TP stored must equal direct TP pack
+        canon = to_canonical(cfg, ep, EP, G)
+        tp2 = from_canonical(cfg, canon, TP, G)
+        _trees_close(tp, tp2)
+
+
+def test_save_restore_with_layout_flip(tiny_moe, tmp_path):
+    cfg = tiny_moe
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    stored_ep = pack_params(cfg, params, EP, 4)
+    save_checkpoint(str(tmp_path / "ck"), cfg, stored_ep, EP, 4, step=17)
+    restored_tp, _, step = restore_checkpoint(str(tmp_path / "ck"), cfg,
+                                              TP, 4)
+    assert step == 17
+    _trees_close(restored_tp, pack_params(cfg, params, TP, 4))
+    # and to a different group size (elastic rescale)
+    restored_g2, _, _ = restore_checkpoint(str(tmp_path / "ck"), cfg, EP, 2)
+    _trees_close(restored_g2, pack_params(cfg, params, EP, 2))
+
+
+def test_async_save(tiny_dense, tmp_path):
+    cfg = tiny_dense
+    params = pack_params(cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                         TP, 2)
+    t = save_checkpoint(str(tmp_path / "ck"), cfg, params, TP, 2,
+                        step=3, async_save=True)
+    t.join(timeout=60)
+    restored, _, step = restore_checkpoint(str(tmp_path / "ck"), cfg, TP, 2)
+    assert step == 3
+    _trees_close(restored, params)

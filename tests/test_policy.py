@@ -1,0 +1,80 @@
+"""Switch-policy unit tests: hysteresis, cooldown, capacity veto (fake clock)."""
+from repro.configs import get_config
+from repro.core.layouts import EP, TP
+from repro.core.policy import (PolicyConfig, SwitchCoordinator,
+                               calibrate_threshold)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _coord(active=TP, t_high=100, t_low=80, window=4, cooldown=5.0):
+    cfg = get_config("qwen3-235b-a22b")
+    clock = FakeClock()
+    c = SwitchCoordinator(cfg, 8, PolicyConfig(t_high=t_high, t_low=t_low,
+                                               window=window,
+                                               cooldown_s=cooldown),
+                          active=active, clock=clock)
+    return c, clock
+
+
+def test_tp_to_ep_immediate_on_burst():
+    c, clock = _coord(active=TP)
+    clock.t = 10.0
+    assert not c.observe(50, 0, 10**9).switch
+    d = c.observe(150, 0, 10**9)
+    assert d.switch and d.target == EP
+
+
+def test_ep_to_tp_requires_sustained_dip_and_window():
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    # single dip below t_low is not enough (window=4)
+    for count in (200, 200, 10, 200):
+        assert not c.observe(count, 0, 10**9).switch
+    assert c.active == EP
+    for count in (10, 10, 10, 10):
+        c.observe(count, 0, 10**9)
+        clock.t += 0.1
+    assert c.active == TP           # sustained dip flipped it
+
+
+def test_cooldown_bounds_switch_rate():
+    c, clock = _coord(active=TP, cooldown=5.0)
+    clock.t = 10.0
+    assert c.observe(150, 0, 10**9).switch            # TP -> EP
+    clock.t = 11.0
+    for _ in range(8):
+        assert not c.observe(1, 0, 10**9).switch      # cooldown holds
+    clock.t = 20.0
+    for _ in range(4):
+        c.observe(1, 0, 10**9)
+        clock.t += 0.1
+    assert c.active == TP                             # switched back
+
+
+def test_capacity_veto_cancels_ep_to_tp():
+    """Paper §4.5: TP replicates KV heads -> halved capacity on Qwen3."""
+    c, clock = _coord(active=EP, window=1)
+    clock.t = 100.0
+    cap_ep = 1000
+    # paper: Qwen3's 4 KV heads on 8 ranks -> kv_rep=2, capacity halved
+    assert c.tp_kv_capacity_tokens(cap_ep) == cap_ep // 2
+    d = c.observe(5, live_tokens=900, ep_capacity_tokens=cap_ep)
+    assert not d.switch and "capacity" in d.reason
+    assert c.canceled == 1
+    clock.t = 110.0
+    d = c.observe(5, live_tokens=100, ep_capacity_tokens=cap_ep)
+    assert d.switch and d.target == TP
+
+
+def test_calibrated_threshold_in_paper_band():
+    cfg = get_config("qwen3-235b-a22b")
+    from repro.core.cost_model import H200
+    th = calibrate_threshold(cfg, 8, kv_len=2048, hw=H200)
+    assert 128 < th <= 256, th          # paper: crossover in (128, 256]

@@ -1,0 +1,66 @@
+"""Property tests for the switch's host planning (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.layouts import EP, TP
+from repro.core.switch import partition_requests, plan_ep_to_tp, plan_tp_to_ep
+from repro.serving.kvcache import CacheConfig, PageAllocator
+from repro.serving.request import Request
+
+HYP = dict(deadline=None, max_examples=25)
+
+
+def _reqs(lens, G=None):
+    out = []
+    for i, ln in enumerate(lens):
+        r = Request(rid=i, prompt=[1] * 4, max_new_tokens=8)
+        r.prefill_pos = ln
+        r.pages = list(range(1, 1 + max(1, -(-ln // 4))))
+        r.owner_rank = (i % G) if G else -1
+        out.append(r)
+    return out
+
+
+@settings(**HYP)
+@given(lens=st.lists(st.integers(1, 200), min_size=1, max_size=40),
+       G=st.sampled_from([2, 4, 8]))
+def test_partition_deterministic_and_balanced(lens, G):
+    a = partition_requests(_reqs(lens), G)
+    b = partition_requests(_reqs(lens), G)
+    assert {g: [r.rid for r in v] for g, v in a.items()} == \
+        {g: [r.rid for r in v] for g, v in b.items()}
+    # every request placed exactly once
+    placed = sorted(r.rid for v in a.values() for r in v)
+    assert placed == list(range(len(lens)))
+    # token balance: max-min bounded by the largest request
+    loads = [sum(r.kv_len for r in v) for v in a.values()]
+    assert max(loads) - min(loads) <= max(lens)
+
+
+@settings(**HYP)
+@given(lens=st.lists(st.integers(1, 60), min_size=1, max_size=16),
+       G=st.sampled_from([2, 4]), seed=st.integers(0, 20))
+def test_kv_plans_preserve_pages(lens, G, seed):
+    cfg = get_config("internlm2-1.8b").reduced(num_kv_heads=2, num_heads=4)
+    cc = CacheConfig(page_size=4, pages_ep=256, max_pages_per_req=32)
+    rng = np.random.default_rng(seed)
+    # EP -> TP
+    reqs = _reqs(lens, G=G)
+    total_pages = sum(len(r.pages) for r in reqs)
+    tp_alloc = PageAllocator(cc, cfg, G, TP)
+    plan = plan_ep_to_tp(reqs, cfg, cc, tp_alloc, G)
+    assert plan.valid.sum() == total_pages          # 1:1 page mapping
+    # destination pages unique
+    dst = plan.dst_pages[plan.valid]
+    assert len(set(dst.tolist())) == len(dst)
+    assert all(r.owner_rank == -1 for r in reqs)
+    # TP -> EP back
+    ep_alloc = PageAllocator(cc, cfg, G, EP)
+    plan2 = plan_tp_to_ep(reqs, cfg, cc, ep_alloc, G)
+    assert plan2.valid.sum() == total_pages
+    assert all(0 <= r.owner_rank < G for r in reqs)
+    # per (rank) destination pages unique
+    for g in range(G):
+        d = plan2.dst_pages[g][plan2.valid[g]]
+        assert len(set(d.tolist())) == len(d)
