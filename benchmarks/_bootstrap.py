@@ -1,0 +1,23 @@
+"""Shared entry-point bootstrap for standalone benchmark invocations.
+
+Must be importable BEFORE jax (XLA_FLAGS is frozen at first jax use), so
+this module may not import jax or anything under repro/benchmarks that
+does.
+"""
+import os
+import pathlib
+import sys
+
+FORCED_DEVICES = 8   # not 512 — that count is dry-run-only
+
+
+def ensure_env_and_path() -> None:
+    """Force the host-device count (if unset) and put the repo root + src
+    on sys.path so `benchmarks.*` / `repro.*` import from any cwd."""
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={FORCED_DEVICES}")
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for p in (str(root), str(root / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)

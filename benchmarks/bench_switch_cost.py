@@ -4,7 +4,13 @@
     occupancy levels (live requests with growing context);
 (b) direct (shard_map fused) vs XLA-collective expert reshard, both
     directions;
-(c) Table-1 analogue: per-element HBM/link passes + bytes moved, analytic.
+(c) Table-1 analogue: per-element HBM/link passes + bytes moved, analytic;
+(d) monolithic vs layer-chunked overlapped switch: decode pause vs total
+    migration time (paper §4.3's "switch without draining" claim — the
+    chunked pause must sit strictly below the monolithic total).
+
+Runnable standalone: ``python benchmarks/bench_switch_cost.py [--smoke]``
+(--smoke runs only the fast (c)+(d) sections for CI regression tracking).
 """
 from __future__ import annotations
 
@@ -12,7 +18,60 @@ import copy
 import time
 
 
-def run(seed: int = 0):
+def _mode_rows(seed: int, num_layers: int = 4, switch_rounds: int = 3):
+    """(d): pause vs total per switch mode, warm movers, same workload."""
+    import numpy as np
+    from benchmarks.common import bench_cfg, make_engine
+    from repro.core.layouts import EP, TP
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 8), ("data", "model"))
+    cfg = bench_cfg(num_layers=num_layers)
+    rows = []
+    results = {}
+    for mode, chunk in (("monolithic", 0), ("chunked", 1)):
+        from repro.serving.request import Request
+        rng = np.random.default_rng(seed)
+        eng = make_engine(cfg, mesh, start=EP, ladder=(8, 16, 32),
+                          pages_ep=1024, maxp=32, chunk_layers=chunk)
+        for i in range(16):
+            eng.submit(Request(rid=i, prompt=list(rng.integers(5, 100, 64)),
+                               max_new_tokens=512, arrival_s=0.0))
+        for _ in range(64 // eng.ecfg.prefill_chunk + 22):
+            eng.step()
+        # warm both directions (compile cost excluded, paper §4.4)
+        eng.execute_switch(TP)
+        eng.execute_switch(EP)
+        pauses, totals = [], []
+        for _ in range(switch_rounds):
+            eng.execute_switch(TP)
+            eng.step()
+            eng.execute_switch(EP)
+            eng.step()
+            for r in eng.switch_records[-2:]:
+                pauses.append(r.pause_s)
+                totals.append(r.total_s)
+        results[mode] = (float(np.mean(pauses)), float(np.mean(totals)))
+        rows.append((f"switch.mode.{mode}.pause_s",
+                     results[mode][0] * 1e6,
+                     f"chunks={eng.switch_records[-1].chunks}"))
+        rows.append((f"switch.mode.{mode}.total_s",
+                     results[mode][1] * 1e6,
+                     "includes overlapped decode" if chunk else ""))
+        ev = eng.metrics.summary()
+        rows.append((f"switch.mode.{mode}.metrics_pause_mean_s",
+                     ev["switch_pause_mean_s"] * 1e6,
+                     f"switches={ev['switches']}"))
+    mono_total = results["monolithic"][1]
+    chunk_pause = results["chunked"][0]
+    ok = chunk_pause < mono_total
+    rows.append(("switch.mode.pause_reduction",
+                 (mono_total / max(chunk_pause, 1e-9)),
+                 f"chunked_pause<mono_total={ok} (paper: 215-434ms switches)"))
+    return rows
+
+
+def run(seed: int = 0, smoke: bool = False):
     import jax
     import numpy as np
     from benchmarks.common import bench_cfg, make_engine, time_call
@@ -29,8 +88,9 @@ def run(seed: int = 0):
 
     # (a) switch phases vs occupancy
     rng = np.random.default_rng(seed)
-    for occupancy, n_req, ctx in [("light", 4, 16), ("medium", 16, 64),
-                                  ("heavy", 32, 160)]:
+    occupancies = [] if smoke else [("light", 4, 16), ("medium", 16, 64),
+                                    ("heavy", 32, 160)]
+    for occupancy, n_req, ctx in occupancies:
         eng = make_engine(cfg, mesh, start=EP, ladder=(8, 16, 32),
                           pages_ep=1024, maxp=32)
         for i in range(n_req):
@@ -61,30 +121,56 @@ def run(seed: int = 0):
                          r.plan_s * 1e6, ""))
 
     # (b) direct vs XLA expert reshard (same bytes, different path)
-    import jax.numpy as jnp
-    import jax.random as jr
-    from repro.models.moe import make_expert_layout, pack_w13, pack_experts
-    G = 8
-    E, I, D, L = cfg.num_experts, cfg.d_expert, cfg.d_model, cfg.num_layers
-    lay_ep = make_expert_layout(E, G, "ep")
-    w13 = jr.normal(jr.PRNGKey(0), (L, E, 2 * I, D), jnp.float32)
-    w2 = jr.normal(jr.PRNGKey(1), (L, E, D, I), jnp.float32)
-    w13_ep = jax.vmap(lambda w: pack_w13(w, lay_ep))(w13)
-    w2_ep = jax.vmap(lambda w: pack_experts(w, lay_ep, 2))(w2)
-    direct = make_reshard_experts_direct(cfg, mesh, "ep_to_tp")
-    t_direct = time_call(lambda: direct(w13_ep, w2_ep), warmup=3, iters=10)
-    moe = {"w13": w13_ep, "w2": w2_ep}
-    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), moe)
-    xla = make_reshard_experts(cfg, mesh, "ep", "tp", donate=False)(sds)
-    t_xla = time_call(lambda: xla(moe), warmup=2, iters=10)
-    rows.append(("switch.reshard.direct_s", t_direct * 1e6, ""))
-    rows.append(("switch.reshard.xla_collective_s", t_xla * 1e6,
-                 f"direct_speedup={t_xla/t_direct:.2f}x (paper: 1.49x vs NCCL)"))
+    if not smoke:
+        import jax.numpy as jnp
+        import jax.random as jr
+        from repro.models.moe import make_expert_layout, pack_w13, pack_experts
+        G = 8
+        E, I, D, L = cfg.num_experts, cfg.d_expert, cfg.d_model, cfg.num_layers
+        lay_ep = make_expert_layout(E, G, "ep")
+        w13 = jr.normal(jr.PRNGKey(0), (L, E, 2 * I, D), jnp.float32)
+        w2 = jr.normal(jr.PRNGKey(1), (L, E, D, I), jnp.float32)
+        w13_ep = jax.vmap(lambda w: pack_w13(w, lay_ep))(w13)
+        w2_ep = jax.vmap(lambda w: pack_experts(w, lay_ep, 2))(w2)
+        direct = make_reshard_experts_direct(cfg, mesh, "ep_to_tp")
+        t_direct = time_call(lambda: direct(w13_ep, w2_ep), warmup=3, iters=10)
+        moe = {"w13": w13_ep, "w2": w2_ep}
+        sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           moe)
+        xla = make_reshard_experts(cfg, mesh, "ep", "tp", donate=False)(sds)
+        t_xla = time_call(lambda: xla(moe), warmup=2, iters=10)
+        rows.append(("switch.reshard.direct_s", t_direct * 1e6, ""))
+        rows.append(("switch.reshard.xla_collective_s", t_xla * 1e6,
+                     f"direct_speedup={t_xla/t_direct:.2f}x "
+                     "(paper: 1.49x vs NCCL)"))
 
     # (c) Table 1: bytes moved + per-element passes
-    sb = switch_bytes(cfg, G, live_tokens=32 * 160)
+    sb = switch_bytes(cfg, 8, live_tokens=32 * 160)
     rows.append(("switch.bytes.expert_moved", float(sb["expert_bytes_moved"]),
                  "direct: 1 HBM read + 1 link pass/el (staged: 2+1 HBM)"))
     rows.append(("switch.bytes.kv_moved", float(sb["kv_bytes_moved"]),
                  "direct: 1+0 HBM vs staged 3+2"))
+
+    # (d) monolithic vs chunked overlapped switch (pause vs total)
+    rows.extend(_mode_rows(seed, switch_rounds=1 if smoke else 3))
     return rows
+
+
+def main() -> None:
+    import argparse
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _bootstrap import ensure_env_and_path
+    ensure_env_and_path()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: analytic bytes + mode comparison")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for nm, us, derived in run(smoke=args.smoke):
+        print(f"{nm},{us:.2f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

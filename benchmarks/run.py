@@ -4,12 +4,13 @@ Prints ``name,us_per_call,derived`` CSV. The dynamic benchmarks need
 multiple host devices: we force 8 (not 512 — that count is dry-run-only)
 before jax initializes.
 """
-import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
+import pathlib
+import sys
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from _bootstrap import ensure_env_and_path
+ensure_env_and_path()
 
 import argparse
-import sys
 import traceback
 
 

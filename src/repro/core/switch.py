@@ -31,6 +31,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.layouts import EP, TP, group_info
 from repro.models.common import ModelConfig
 from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
@@ -151,7 +152,7 @@ def make_reshard_experts_direct(cfg: ModelConfig, mesh, direction: str, *,
                          "use the XLA path for hybrid groups")
     rm = P(None, model_axis, None, None, None)   # (L, G, ...)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(rm, rm),
+    @functools.partial(shard_map, mesh=mesh, in_specs=(rm, rm),
                        out_specs=(rm, rm))
     def body(w13, w2):
         # local (L, 1, ...) -> squeeze the G dim
@@ -195,121 +196,269 @@ class KVPlan:
     n_pages: int = 0
 
 
-def plan_ep_to_tp(requests, cfg: ModelConfig, cc: CacheConfig,
-                  tp_alloc: PageAllocator, G: int) -> KVPlan:
-    """Live EP requests (owner_rank, pages) -> fresh TP pages. Rewrites
-    request.pages / owner_rank in place."""
-    per_src: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
-    total = 0
-    for r in sorted(requests, key=lambda q: q.rid):
-        if not r.pages:
-            r.owner_rank = -1
-            continue
-        new_pages = tp_alloc.alloc(0, len(r.pages))
-        for p_old, p_new in zip(r.pages, new_pages):
-            per_src[r.owner_rank].append((p_old, p_new))
-        total += len(r.pages)
-        r.pages = new_pages
-        r.owner_rank = -1
-    pmax = max(1, max(len(v) for v in per_src.values()))
+@dataclass
+class Assignment:
+    """One live request's planned placement in the destination layout.
+
+    Pure planning output: nothing on the request is touched until
+    `apply_assignments` (monolithic switch: immediately; chunked switch:
+    at commit, after the overlap window — decode keeps reading the old
+    metadata in between).
+    """
+    req: object
+    new_pages: list
+    new_owner: int
+    snap_kv_len: int               # kv_len when the plan was taken
+
+
+def pairs_to_plan(direction: str, per_rank: dict[int, list], G: int) -> KVPlan:
+    """Rank-keyed (old_page, new_page) pair lists -> padded plan arrays.
+    ep_to_tp rows are keyed by *source* rank, tp_to_ep rows by *destination*
+    rank (the row semantics the device movers expect)."""
+    pmax = max(1, max((len(v) for v in per_rank.values()), default=1))
     src = np.zeros((G, pmax), np.int32)
     dst = np.zeros((G, pmax), np.int32)
     val = np.zeros((G, pmax), bool)
-    for g, pairs in per_src.items():
+    total = 0
+    for g, pairs in per_rank.items():
         for i, (a, b) in enumerate(pairs):
             src[g, i], dst[g, i], val[g, i] = a, b, True
-    return KVPlan("ep_to_tp", src, dst, val, total)
+        total += len(pairs)
+    return KVPlan(direction, src, dst, val, total)
+
+
+def plan_switch(direction: str, requests, cfg: ModelConfig, cc: CacheConfig,
+                new_alloc: PageAllocator, G: int
+                ) -> tuple[KVPlan, list[Assignment]]:
+    """Pure switch plan: allocate destination pages and build the page-pair
+    descriptors without mutating any request."""
+    per_rank: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
+    assignments: list[Assignment] = []
+    if direction == "ep_to_tp":
+        for r in sorted(requests, key=lambda q: q.rid):
+            if not r.pages:
+                assignments.append(Assignment(r, [], -1, r.kv_len))
+                continue
+            new_pages = new_alloc.alloc(0, len(r.pages))
+            per_rank[r.owner_rank].extend(zip(r.pages, new_pages))
+            assignments.append(Assignment(r, new_pages, -1, r.kv_len))
+    else:
+        buckets = partition_requests([r for r in requests if r.pages], G)
+        for g, reqs in buckets.items():
+            for r in reqs:
+                new_pages = new_alloc.alloc(g, len(r.pages))
+                per_rank[g].extend(zip(r.pages, new_pages))
+                assignments.append(Assignment(r, new_pages, g, r.kv_len))
+    return pairs_to_plan(direction, per_rank, G), assignments
+
+
+def apply_assignments(assignments: list[Assignment]) -> None:
+    """Commit the planned placement to the host request metadata."""
+    for a in assignments:
+        a.req.pages = a.new_pages
+        a.req.owner_rank = a.new_owner
+
+
+def plan_ep_to_tp(requests, cfg: ModelConfig, cc: CacheConfig,
+                  tp_alloc: PageAllocator, G: int) -> KVPlan:
+    """Live EP requests (owner_rank, pages) -> fresh TP pages. Rewrites
+    request.pages / owner_rank in place (the monolithic-switch contract)."""
+    plan, assignments = plan_switch("ep_to_tp", requests, cfg, cc,
+                                    tp_alloc, G)
+    apply_assignments(assignments)
+    return plan
 
 
 def plan_tp_to_ep(requests, cfg: ModelConfig, cc: CacheConfig,
                   ep_alloc: PageAllocator, G: int) -> KVPlan:
     """Live TP requests -> per-rank EP pages via the greedy partition."""
-    buckets = partition_requests([r for r in requests if r.pages], G)
-    per_dst: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
-    total = 0
-    for g, reqs in buckets.items():
-        for r in reqs:
-            new_pages = ep_alloc.alloc(g, len(r.pages))
-            for p_old, p_new in zip(r.pages, new_pages):
-                per_dst[g].append((p_old, p_new))
-            total += len(r.pages)
-            r.pages = new_pages
-            r.owner_rank = g
-    pmax = max(1, max(len(v) for v in per_dst.values()))
-    src = np.zeros((G, pmax), np.int32)
-    dst = np.zeros((G, pmax), np.int32)
-    val = np.zeros((G, pmax), bool)
-    for g, pairs in per_dst.items():
-        for i, (a, b) in enumerate(pairs):
-            src[g, i], dst[g, i], val[g, i] = a, b, True
-    return KVPlan("tp_to_ep", src, dst, val, total)
+    plan, assignments = plan_switch("tp_to_ep", requests, cfg, cc,
+                                    ep_alloc, G)
+    apply_assignments(assignments)
+    return plan
 
 
 # ---------------------------------------------------------------------------
 # 3c. Device KV transfer (shard_map over the flat buffer's two views)
 # ---------------------------------------------------------------------------
 
-def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
-                    pmax: int, *, model_axis: str = "model",
-                    data_axis: str = "data"):
-    """Build the jitted KV migration for a fixed plan width `pmax`.
+def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
+                     direction: str, pmax: int, lo: int, hi: int,
+                     model_axis: str):
+    """Per-rank KV migration body for layers [lo, hi): three-stage
+    gather -> all_to_all -> scatter from the source view into a provided
+    destination buffer. Shared by the monolithic mover ((lo, hi) = (0, L)
+    over a fresh zero buffer) and the chunked/delta movers (staged dst).
 
-    kv_flat (Dd, G, NE) sharded (data, model). Plans are (Dd, G, Pmax):
-    src rows are rank-private (sharded), dst rows replicated (every rank
-    scatters every source's pages into its own head-slice view).
+    Plans are (Dd, G, Pmax): ep_to_tp rows are rank-private sources
+    (sharded gather, replicated scatter — every rank writes every source's
+    pages into its own head-slice view); tp_to_ep rows are destination
+    ranks. Invalid entries map to the null page 0 on both sides.
     """
-    G = mesh.shape[model_axis]
     gi = group_info(cfg, G)
     ep_shape = cc.view_shape(cfg, G, EP)     # (L,2,pages_ep,page,K,dh)
     tp_shape = cc.view_shape(cfg, G, TP)     # (L,2,pages_tp,page,Kl,dh)
-    L, _, _, page, K, dh = ep_shape
+    _, _, _, page, K, dh = ep_shape
+    Lc = hi - lo
     Kl, kv_rep = gi.kv_local, gi.kv_rep
     NE = int(np.prod(ep_shape))
 
-    flat_spec = P(data_axis, model_axis)
-    rep_spec = P(data_axis, None, None)          # plans replicated over model
-
-    def ep_to_tp(kv_flat, src_pages, dst_pages, valid):
+    def ep_to_tp(kv_src, kv_dst, src_pages, dst_pages, valid):
         r = lax.axis_index(model_axis)
-        pool = kv_flat.reshape((1, 1) + ep_shape)[0, 0]
+        pool = kv_src.reshape((1, 1) + ep_shape)[0, 0][lo:hi]
         sp = src_pages[0][r]                          # my row (Pmax,)
-        gathered = pool[:, :, sp]                     # (L,2,Pmax,page,K,dh)
+        gathered = pool[:, :, sp]                     # (Lc,2,Pmax,page,K,dh)
         # heads -> per-dst slices: K = (G/kv_rep) blocks of Kl, tiled kv_rep
-        g = gathered.reshape(L, 2, pmax, page, K // Kl, Kl, dh)
-        g = jnp.moveaxis(g, 4, 0)                     # (K/Kl,L,2,P,page,Kl,dh)
+        g = gathered.reshape(Lc, 2, pmax, page, K // Kl, Kl, dh)
+        g = jnp.moveaxis(g, 4, 0)                     # (K/Kl,Lc,2,P,page,Kl,dh)
         g = jnp.repeat(g, kv_rep, axis=0)             # (G, ...) dst-major
         recv = lax.all_to_all(g, model_axis, split_axis=0, concat_axis=0,
-                              tiled=True)             # (G_src, L,2,P,page,Kl,dh)
+                              tiled=True)             # (G_src, Lc,2,P,page,Kl,dh)
         # scatter into the TP view: dst page ids from all srcs (replicated)
         dp = jnp.where(valid[0], dst_pages[0], 0)     # (G, Pmax); invalid->null
         flat_dst = dp.reshape(-1)
-        moved = jnp.moveaxis(recv, 0, 2)              # (L,2,G,P,page,Kl,dh)
-        moved = moved.reshape(L, 2, G * pmax, page, Kl, dh)
-        new_tp = jnp.zeros((1, 1) + tp_shape, kv_flat.dtype)[0, 0]
-        new_tp = new_tp.at[:, :, flat_dst].set(moved)
-        return new_tp.reshape(1, 1, NE)
+        moved = jnp.moveaxis(recv, 0, 2)              # (Lc,2,G,P,page,Kl,dh)
+        moved = moved.reshape(Lc, 2, G * pmax, page, Kl, dh)
+        dst = kv_dst.reshape((1, 1) + tp_shape)[0, 0]
+        dst = dst.at[lo:hi, :, flat_dst].set(moved)
+        return dst.reshape(1, 1, NE)
 
-    def tp_to_ep(kv_flat, src_pages, dst_pages, valid):
+    def tp_to_ep(kv_src, kv_dst, src_pages, dst_pages, valid):
         r = lax.axis_index(model_axis)
-        pool = kv_flat.reshape((1, 1) + tp_shape)[0, 0]
+        pool = kv_src.reshape((1, 1) + tp_shape)[0, 0][lo:hi]
         # every rank holds head-slices of ALL pages; send dst d its pages
         sp = jnp.where(valid[0], src_pages[0], 0)     # (G, Pmax)
         gathered = pool[:, :, sp.reshape(-1)].reshape(
-            L, 2, G, pmax, page, Kl, dh)
-        send = jnp.moveaxis(gathered, 2, 0)           # (G_dst,L,2,P,page,Kl,dh)
+            Lc, 2, G, pmax, page, Kl, dh)
+        send = jnp.moveaxis(gathered, 2, 0)           # (G_dst,Lc,2,P,page,Kl,dh)
         recv = lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
                               tiled=True)             # (G_src, ...)
         # reassemble K heads from the G/kv_rep representative sources
-        reps = recv[::kv_rep]                         # (K/Kl, L,2,P,page,Kl,dh)
-        full = jnp.moveaxis(reps, 0, 4)               # (L,2,P,page,K/Kl,Kl,dh)
-        full = full.reshape(L, 2, pmax, page, K, dh)
+        reps = recv[::kv_rep]                         # (K/Kl,Lc,2,P,page,Kl,dh)
+        full = jnp.moveaxis(reps, 0, 4)               # (Lc,2,P,page,K/Kl,Kl,dh)
+        full = full.reshape(Lc, 2, pmax, page, K, dh)
         dp = jnp.where(valid[0][r], dst_pages[0][r], 0)   # my new pages
-        new_ep = jnp.zeros((1, 1) + ep_shape, kv_flat.dtype)[0, 0]
-        new_ep = new_ep.at[:, :, dp].set(full)
-        return new_ep.reshape(1, 1, NE)
+        dst = kv_dst.reshape((1, 1) + ep_shape)[0, 0]
+        dst = dst.at[lo:hi, :, dp].set(full)
+        return dst.reshape(1, 1, NE)
 
-    body = ep_to_tp if direction == "ep_to_tp" else tp_to_ep
-    smapped = jax.shard_map(body, mesh=mesh,
-                            in_specs=(flat_spec, rep_spec, rep_spec, rep_spec),
-                            out_specs=flat_spec)
+    return ep_to_tp if direction == "ep_to_tp" else tp_to_ep
+
+
+def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
+                    pmax: int, *, model_axis: str = "model",
+                    data_axis: str = "data"):
+    """Build the jitted monolithic KV migration for a fixed plan width
+    `pmax`: the shared body over all layers, scattering into a fresh zero
+    buffer; the source is donated (single resident copy)."""
+    G = mesh.shape[model_axis]
+    L = cc.view_shape(cfg, G, EP)[0]
+    inner = _kv_migrate_body(cfg, cc, G, direction, pmax, 0, L, model_axis)
+
+    def body(kv_flat, src_pages, dst_pages, valid):
+        dst = jnp.zeros_like(kv_flat)
+        return inner(kv_flat, dst, src_pages, dst_pages, valid)
+
+    flat_spec = P(data_axis, model_axis)
+    rep_spec = P(data_axis, None, None)          # plans replicated over model
+    smapped = shard_map(body, mesh=mesh,
+                        in_specs=(flat_spec, rep_spec, rep_spec, rep_spec),
+                        out_specs=flat_spec)
     return jax.jit(smapped, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# 4. Layer-chunked movers (overlapped switch, DESIGN.md §4.3)
+#
+# The monolithic movers above convert everything in one call — decode is
+# paused for the whole transfer. The chunked movers below migrate a layer
+# range [lo, hi) from the live *source* buffers into a staged *destination*
+# buffer, so the SwitchExecutor can interleave decode steps (still running
+# on the intact source) between chunks and only pause for a small dirty-page
+# delta at commit.
+# ---------------------------------------------------------------------------
+
+def _layout_names(direction: str) -> tuple[str, str]:
+    return (EP, TP) if direction == "ep_to_tp" else (TP, EP)
+
+
+def expert_converters(cfg: ModelConfig, G: int, direction: str):
+    """Stacked (L, G, ...) src-layout -> dst-layout converters (vmapped)."""
+    src_name, dst_name = _layout_names(direction)
+    E = cfg.num_experts
+    src = make_expert_layout(E, G, src_name)
+    dst = make_expert_layout(E, G, dst_name)
+    cv13 = jax.vmap(lambda w: _convert13(w, src, dst, E))
+    cv2 = jax.vmap(lambda w: _convert(w, src, dst, 2, E))
+    return cv13, cv2
+
+
+def expert_dst_struct(cfg: ModelConfig, G: int, direction: str, experts):
+    """ShapeDtypeStructs of the destination-layout expert store."""
+    cv13, cv2 = expert_converters(cfg, G, direction)
+    return jax.eval_shape(
+        lambda m: {"w13": cv13(m["w13"]), "w2": cv2(m["w2"])},
+        {"w13": experts["w13"], "w2": experts["w2"]})
+
+
+def make_reshard_experts_chunk(cfg: ModelConfig, mesh, direction: str,
+                               lo: int, hi: int, *,
+                               model_axis: str = "model"):
+    """XLA-path chunk mover: convert layers [lo, hi) of the stacked expert
+    store into the (donated) destination buffer; src stays intact."""
+    G = mesh.shape[model_axis]
+    cv13, cv2 = expert_converters(cfg, G, direction)
+    spec = P(None, model_axis, None, None, None)
+    sh = NamedSharding(mesh, spec)
+
+    def fn(w13_src, w2_src, w13_dst, w2_dst):
+        return (w13_dst.at[lo:hi].set(cv13(w13_src[lo:hi])),
+                w2_dst.at[lo:hi].set(cv2(w2_src[lo:hi])))
+
+    return jax.jit(fn, in_shardings=(sh, sh, sh, sh), out_shardings=(sh, sh),
+                   donate_argnums=(2, 3))
+
+
+def make_reshard_experts_direct_chunk(cfg: ModelConfig, mesh, direction: str,
+                                      lo: int, hi: int, *,
+                                      model_axis: str = "model"):
+    """Direct-path chunk mover (pure EP groups): the two-stage shard_map
+    plan of `reshard_experts_direct`, restricted to layers [lo, hi)."""
+    G = mesh.shape[model_axis]
+    lay_ep = make_expert_layout(cfg.num_experts, G, EP)
+    if not lay_ep.is_pure_ep:
+        raise ValueError("direct reshard path requires pure EP (G | E); "
+                         "use the XLA path for hybrid groups")
+    rm = P(None, model_axis, None, None, None)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(rm, rm, rm, rm),
+                       out_specs=(rm, rm))
+    def body(w13, w2, d13, d2):
+        n13, n2 = reshard_experts_direct(
+            cfg, w13[lo:hi].squeeze(1), w2[lo:hi].squeeze(1), direction,
+            model_axis, G)
+        return d13.at[lo:hi].set(n13[:, None]), d2.at[lo:hi].set(n2[:, None])
+
+    return jax.jit(body, donate_argnums=(2, 3))
+
+
+def make_migrate_kv_chunk(cfg: ModelConfig, cc: CacheConfig, mesh,
+                          direction: str, pmax: int, lo: int, hi: int, *,
+                          model_axis: str = "model", data_axis: str = "data"):
+    """Chunked KV migration: move plan pages of KV layers [lo, hi) from the
+    live source buffer into the (donated) staged destination buffer.
+
+    The shared `_kv_migrate_body`, with the source read-only (decode keeps
+    appending to it between chunks) and the destination accumulating
+    across calls. The same builder with (lo, hi) = (0, L) and a small pmax
+    serves as the commit-time dirty-page delta pass.
+    """
+    G = mesh.shape[model_axis]
+    body = _kv_migrate_body(cfg, cc, G, direction, pmax, lo, hi, model_axis)
+    flat_spec = P(data_axis, model_axis)
+    rep_spec = P(data_axis, None, None)
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(flat_spec, flat_spec, rep_spec, rep_spec, rep_spec),
+        out_specs=flat_spec)
+    return jax.jit(smapped, donate_argnums=(1,))

@@ -1,0 +1,415 @@
+"""SwitchExecutor: the runtime that drives live EP<->TP switches.
+
+Two execution modes over the movers in core/switch.py (DESIGN.md §4):
+
+  * **monolithic** — the paper's baseline switch: plan, reshard all expert
+    weights, migrate all planned KV pages, rewrite request metadata. Decode
+    is paused for the whole operation (pause == total).
+
+  * **chunked / overlapped** — pre-copy + delta, the live-migration shape of
+    the paper's "switch between decode steps without draining" claim
+    (§4.3-4.4). The expert store and the KV pool are migrated **layer chunk
+    by layer chunk** into staged destination buffers while the source
+    buffers stay live, so the engine interleaves decode steps between
+    chunks. Decode keeps using the *old* layout, metadata, and allocator
+    (`plan_switch` is pure — nothing on a request changes during the
+    window). At commit the executor:
+
+      1. re-copies the **dirty pages** — pages that received decode writes
+         after the plan snapshot (the tail page(s) of each live request),
+         plus pages allocated during the window — via the same chunk mover
+         over all layers with a small plan width;
+      2. releases destination pages of requests that finished mid-window;
+      3. applies the planned metadata (pages / owner_rank) and returns the
+         staged buffers + the destination allocator.
+
+    Only step 1-3 pause decode, so pause_s is a small fraction of total_s.
+
+The executor owns all jitted-mover caches (compiled once per (direction,
+layer range, plan width); a later switch reuses the executable — runtime
+preservation, paper §4.4).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.layouts import EP, TP
+from repro.core.switch import (Assignment, apply_assignments,
+                               expert_dst_struct, make_migrate_kv,
+                               make_migrate_kv_chunk, make_reshard_experts,
+                               make_reshard_experts_chunk,
+                               make_reshard_experts_direct,
+                               make_reshard_experts_direct_chunk,
+                               pairs_to_plan, plan_switch)
+from repro.models.common import ModelConfig
+from repro.models.moe import make_expert_layout
+from repro.serving.kvcache import CacheConfig, PageAllocator, num_kv_layers
+
+
+def _pow2_pad(n: int, lo: int = 8) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+# Fixed plan width of the commit-time dirty-page delta pass. Wider dirty
+# sets are split into multiple mover calls of this width, so the delta
+# executable is compiled exactly once per direction — a later switch can
+# never hit a compile inside the decode pause because its overlap window
+# happened to dirty more pages.
+DELTA_PMAX = 8
+
+
+@dataclass
+class SwitchStats:
+    direction: str
+    total_s: float = 0.0
+    pause_s: float = 0.0
+    plan_s: float = 0.0
+    weights_s: float = 0.0
+    kv_s: float = 0.0
+    kv_pages: int = 0
+    delta_pages: int = 0
+    chunks: int = 1
+    live_requests: int = 0
+
+
+@dataclass
+class SwitchSession:
+    """State of one in-progress chunked switch."""
+    direction: str
+    t_start: float
+    plan_arrays: tuple                      # (sp, dp, vm) device, (Dd, G, P)
+    pmax: int
+    assignments: list                       # per data group lists merged
+    new_alloc: list
+    chunks: list                            # [(w_lo, w_hi, kv_lo, kv_hi)]
+    next_chunk: int = 0
+    experts_dst: dict | None = None
+    kv_dst: object = None
+    kv_pages: int = 0
+    live_requests: int = 0
+    plan_pause_s: float = 0.0       # decode-blocked time spent in start()
+
+    @property
+    def done(self) -> bool:
+        return self.next_chunk >= len(self.chunks)
+
+
+class SwitchExecutor:
+    """Builds, caches, and drives the jitted movers for live switches."""
+
+    def __init__(self, cfg: ModelConfig, cc: CacheConfig, mesh, *,
+                 model_axis: str = "model", data_axis: str = "data",
+                 direct_reshard: bool = True):
+        self.cfg, self.cc, self.mesh = cfg, cc, mesh
+        self.m, self.da = model_axis, data_axis
+        self.G = mesh.shape[model_axis]
+        self.Dd = mesh.shape[data_axis]
+        self.Lk = num_kv_layers(cfg)
+        self.direct_reshard = direct_reshard
+        self._reshard_fns: dict = {}
+        self._migrate_fns: dict = {}
+        self._chunk_reshard_fns: dict = {}
+        self._chunk_migrate_fns: dict = {}
+        self._zeros_fns: dict = {}
+        self.session: SwitchSession | None = None
+
+    # ------------------------------------------------------------------
+    # mover caches
+    # ------------------------------------------------------------------
+    def _use_direct(self) -> bool:
+        lay_ep = make_expert_layout(self.cfg.num_experts, self.G, EP)
+        return self.direct_reshard and lay_ep.is_pure_ep
+
+    def reshard_fn(self, direction: str, experts):
+        if direction not in self._reshard_fns:
+            if self._use_direct():
+                self._reshard_fns[direction] = (
+                    "direct",
+                    make_reshard_experts_direct(self.cfg, self.mesh,
+                                                direction,
+                                                model_axis=self.m))
+            else:
+                src, dst = (EP, TP) if direction == "ep_to_tp" else (TP, EP)
+                build = make_reshard_experts(self.cfg, self.mesh, src, dst,
+                                             model_axis=self.m)
+                sds = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), experts)
+                self._reshard_fns[direction] = ("xla", build(sds))
+        return self._reshard_fns[direction]
+
+    def migrate_fn(self, direction: str, pmax: int):
+        key = (direction, pmax)
+        if key not in self._migrate_fns:
+            self._migrate_fns[key] = make_migrate_kv(
+                self.cfg, self.cc, self.mesh, direction, pmax,
+                model_axis=self.m, data_axis=self.da)
+        return self._migrate_fns[key]
+
+    def chunk_reshard_fn(self, direction: str, lo: int, hi: int):
+        key = (direction, lo, hi)
+        if key not in self._chunk_reshard_fns:
+            if self._use_direct():
+                fn = make_reshard_experts_direct_chunk(
+                    self.cfg, self.mesh, direction, lo, hi,
+                    model_axis=self.m)
+            else:
+                fn = make_reshard_experts_chunk(
+                    self.cfg, self.mesh, direction, lo, hi,
+                    model_axis=self.m)
+            self._chunk_reshard_fns[key] = fn
+        return self._chunk_reshard_fns[key]
+
+    def chunk_migrate_fn(self, direction: str, lo: int, hi: int, pmax: int):
+        key = (direction, lo, hi, pmax)
+        if key not in self._chunk_migrate_fns:
+            self._chunk_migrate_fns[key] = make_migrate_kv_chunk(
+                self.cfg, self.cc, self.mesh, direction, pmax, lo, hi,
+                model_axis=self.m, data_axis=self.da)
+        return self._chunk_migrate_fns[key]
+
+    def _zeros(self, shape, dtype, spec):
+        """Sharded zero buffer via a cached compiled initializer (staged
+        destination buffers are re-created every chunked switch; the
+        executable must not be)."""
+        key = (tuple(shape), jnp.dtype(dtype).name, tuple(spec))
+        if key not in self._zeros_fns:
+            sh = NamedSharding(self.mesh, P(*spec))
+            self._zeros_fns[key] = jax.jit(
+                functools.partial(jnp.zeros, tuple(shape), dtype),
+                out_shardings=sh)
+        return self._zeros_fns[key]()
+
+    # ------------------------------------------------------------------
+    # shared planning
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _stack_plans(plans, min_width: int = 8) -> tuple:
+        """Per-data-group KVPlans -> pow2-padded stacked (Dd, G, pmax)
+        src/dst/valid arrays, at least min_width wide."""
+        pmax = _pow2_pad(max(p.src_pages.shape[1] for p in plans),
+                         lo=min_width)
+
+        def padp(a):
+            return np.pad(a, ((0, 0), (0, pmax - a.shape[1])))
+
+        sp = np.stack([padp(p.src_pages) for p in plans])
+        dp = np.stack([padp(p.dst_pages) for p in plans])
+        vm = np.stack([padp(p.valid) for p in plans])
+        return (sp, dp, vm), pmax
+
+    def _plan(self, direction: str, live, *, mutate: bool):
+        """Per-data-group plans + fresh allocators. mutate=False keeps the
+        requests untouched (chunked mode applies metadata at commit)."""
+        target = TP if direction == "ep_to_tp" else EP
+        new_alloc = [PageAllocator(self.cc, self.cfg, self.G, target)
+                     for _ in range(self.Dd)]
+        plans, assignments = [], []
+        for d in range(self.Dd):
+            reqs = [r for r in live if r.data_group == d and r.pages]
+            plan, asg = plan_switch(direction, reqs, self.cfg, self.cc,
+                                    new_alloc[d], self.G)
+            plans.append(plan)
+            assignments.extend(asg)
+        if mutate:
+            apply_assignments(assignments)
+        arrays, pmax = self._stack_plans(plans)
+        return arrays, pmax, assignments, new_alloc
+
+    # ------------------------------------------------------------------
+    # monolithic mode (the baseline; pause == total)
+    # ------------------------------------------------------------------
+    def monolithic(self, direction: str, live, experts, kv_flat):
+        """Full stop-the-world switch. Returns (experts', kv_flat', alloc',
+        stats); request metadata is rewritten in place."""
+        t0 = time.perf_counter()
+        (sp, dp, vm), pmax, _, new_alloc = self._plan(direction, live,
+                                                      mutate=True)
+        t_plan = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        if self.cfg.is_moe:
+            kind, fn = self.reshard_fn(direction, experts)
+            if kind == "direct":
+                w13, w2 = fn(experts["w13"], experts["w2"])
+                experts = {"w13": w13, "w2": w2}
+            else:
+                out = fn(experts)
+                experts = {"w13": out["w13"], "w2": out["w2"]}
+            jax.block_until_ready(experts["w13"])
+        t_w = time.perf_counter() - t1
+
+        t2 = time.perf_counter()
+        if self.Lk > 0:
+            mfn = self.migrate_fn(direction, pmax)
+            kv_flat = mfn(kv_flat, jnp.asarray(sp), jnp.asarray(dp),
+                          jnp.asarray(vm))
+            jax.block_until_ready(kv_flat)
+        t_kv = time.perf_counter() - t2
+
+        total = time.perf_counter() - t0
+        stats = SwitchStats(direction=direction, total_s=total,
+                            pause_s=total, plan_s=t_plan, weights_s=t_w,
+                            kv_s=t_kv, kv_pages=int(vm.sum()), chunks=1,
+                            live_requests=len(live))
+        return experts, kv_flat, new_alloc, stats
+
+    # ------------------------------------------------------------------
+    # chunked / overlapped mode
+    # ------------------------------------------------------------------
+    def _layer_chunks(self, chunk_layers: int) -> list:
+        """Even [lo, hi) splits of the expert-stack and KV-layer ranges."""
+        Lw = self.cfg.num_layers if self.cfg.is_moe else 0
+        Lref = max(Lw, self.Lk, 1)
+        n = max(1, -(-Lref // max(1, chunk_layers)))
+        out = []
+        for i in range(n):
+            out.append((Lw * i // n, Lw * (i + 1) // n,
+                        self.Lk * i // n, self.Lk * (i + 1) // n))
+        return out
+
+    def start(self, target: str, live, experts, kv_flat,
+              chunk_layers: int) -> SwitchSession:
+        """Plan the switch and stage the destination buffers. Source
+        buffers and request metadata stay live for overlap decode."""
+        assert self.session is None, "switch already in progress"
+        direction = "ep_to_tp" if target == TP else "tp_to_ep"
+        t0 = time.perf_counter()
+        plan_arrays, pmax, assignments, new_alloc = self._plan(
+            direction, live, mutate=False)
+        experts_dst = None
+        if self.cfg.is_moe:
+            sds = expert_dst_struct(self.cfg, self.G, direction, experts)
+            experts_dst = {
+                k: self._zeros(s.shape, s.dtype,
+                               (None, self.m, None, None, None))
+                for k, s in sds.items()}
+        kv_dst = None
+        if self.Lk > 0:
+            kv_dst = self._zeros(kv_flat.shape, kv_flat.dtype,
+                                 (self.da, self.m))
+        kv_pages = int(plan_arrays[2].sum())
+        self.session = SwitchSession(
+            direction=direction, t_start=t0,
+            plan_arrays=tuple(jnp.asarray(a) for a in plan_arrays),
+            pmax=pmax, assignments=assignments,
+            new_alloc=new_alloc, chunks=self._layer_chunks(chunk_layers),
+            experts_dst=experts_dst, kv_dst=kv_dst,
+            kv_pages=kv_pages, live_requests=len(live),
+            plan_pause_s=time.perf_counter() - t0)
+        return self.session
+
+    def advance(self, experts, kv_flat) -> bool:
+        """Migrate the next layer chunk (dispatched async; decode may run
+        before the chunk completes — both read the same source buffers).
+        Returns True while chunks remain."""
+        s = self.session
+        assert s is not None and not s.done
+        w_lo, w_hi, kv_lo, kv_hi = s.chunks[s.next_chunk]
+        if self.cfg.is_moe and w_hi > w_lo:
+            fn = self.chunk_reshard_fn(s.direction, w_lo, w_hi)
+            d13, d2 = fn(experts["w13"], experts["w2"],
+                         s.experts_dst["w13"], s.experts_dst["w2"])
+            s.experts_dst = {"w13": d13, "w2": d2}
+        if s.kv_dst is not None and kv_hi > kv_lo:
+            sp, dp, vm = s.plan_arrays                 # device-resident
+            mfn = self.chunk_migrate_fn(s.direction, kv_lo, kv_hi, s.pmax)
+            s.kv_dst = mfn(kv_flat, s.kv_dst, sp, dp, vm)
+        s.next_chunk += 1
+        return not s.done
+
+    def _delta_pairs(self, live_ids) -> tuple:
+        """Dirty-page pairs per (data_group, plan row): pages that received
+        decode writes after the plan snapshot, plus pages allocated during
+        the window (destination pages are topped up here)."""
+        s = self.session
+        page = self.cc.page_size
+        per = [{g: [] for g in range(self.G)} for _ in range(self.Dd)]
+        n = 0
+        for a in s.assignments:
+            r = a.req
+            if r.rid not in live_ids or not r.pages:
+                continue
+            if (r.kv_len == a.snap_kv_len
+                    and len(a.new_pages) >= len(r.pages)):
+                continue    # untouched since snapshot: staged copy is final
+            d = r.data_group
+            while len(a.new_pages) < len(r.pages):
+                a.new_pages.extend(
+                    s.new_alloc[d].alloc(max(a.new_owner, 0), 1))
+            lo_idx = max(a.snap_kv_len - 1, 0) // page
+            hi_idx = min(len(r.pages) - 1, max(r.kv_len - 1, 0) // page)
+            row = (r.owner_rank if s.direction == "ep_to_tp"
+                   else a.new_owner)
+            for i in range(lo_idx, hi_idx + 1):
+                per[d][max(row, 0)].append((r.pages[i], a.new_pages[i]))
+                n += 1
+        return per, n
+
+    def commit(self, live, kv_flat):
+        """Pause-phase: delta-copy dirty pages, reconcile allocators, apply
+        metadata, hand over the staged buffers. Returns (experts', kv',
+        alloc', stats)."""
+        s = self.session
+        assert s is not None and s.done
+        t_pause0 = time.perf_counter()
+        live_ids = {r.rid for r in live}
+
+        # requests that finished during the window: return their planned
+        # destination pages to the new allocator
+        for a in s.assignments:
+            if a.req.rid not in live_ids and a.new_pages:
+                s.new_alloc[a.req.data_group].release(
+                    max(a.new_owner, 0), a.new_pages)
+
+        delta_pages = 0
+        if s.kv_dst is not None:
+            per, delta_pages = self._delta_pairs(live_ids)
+            if delta_pages:
+                # fixed-width blocks -> one compiled delta executable per
+                # direction, regardless of how dirty the window got
+                W = DELTA_PMAX
+                mfn = self.chunk_migrate_fn(s.direction, 0, self.Lk, W)
+                nblocks = max(-(-len(pairs) // W)
+                              for rows in per for pairs in rows.values())
+                for b in range(nblocks):
+                    plans = [pairs_to_plan(
+                        s.direction,
+                        {g: per[d][g][b * W:(b + 1) * W]
+                         for g in range(self.G)}, self.G)
+                        for d in range(self.Dd)]
+                    # blocks are <= W wide; min_width=W makes the padded
+                    # width structurally equal to the compiled pmax
+                    (sp, dp, vm), _ = self._stack_plans(plans, min_width=W)
+                    s.kv_dst = mfn(kv_flat, s.kv_dst, jnp.asarray(sp),
+                                   jnp.asarray(dp), jnp.asarray(vm))
+
+        apply_assignments([a for a in s.assignments
+                           if a.req.rid in live_ids])
+        if s.kv_dst is not None:
+            jax.block_until_ready(s.kv_dst)
+        if s.experts_dst is not None:
+            jax.block_until_ready(s.experts_dst["w13"])
+        now = time.perf_counter()
+        # pause = the synchronous plan/staging phase in start() plus this
+        # commit phase — measured consistently with monolithic(), whose
+        # pause likewise includes its plan time
+        stats = SwitchStats(
+            direction=s.direction, total_s=now - s.t_start,
+            pause_s=s.plan_pause_s + (now - t_pause0),
+            plan_s=s.plan_pause_s, kv_pages=s.kv_pages,
+            delta_pages=delta_pages, chunks=len(s.chunks),
+            live_requests=s.live_requests)
+        out = (s.experts_dst, s.kv_dst if s.kv_dst is not None else kv_flat,
+               s.new_alloc, stats)
+        self.session = None
+        return out

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
+
 
 def quantize_int8(x: jax.Array):
     """Per-tensor symmetric int8. Returns (q int8, scale fp32)."""
@@ -55,7 +57,7 @@ def make_compressed_allreduce(mesh, axis: str = "data"):
     """jit(shard_map) wrapper: grads sharded over `axis` -> mean-reduced."""
     from jax.sharding import PartitionSpec as P
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(axis), P(axis)), out_specs=(P(axis), P(axis)))
     def fn(g, res):
         # g: this rank's microbatch grad (leading dummy shard dim of 1)

@@ -24,23 +24,14 @@ import numpy as np
 from repro.core.layouts import EP, TP, group_info, pack_params
 from repro.core.policy import PolicyConfig, SwitchCoordinator
 from repro.core.residency import ResidentRuntime
-from repro.core.switch import (make_migrate_kv, make_reshard_experts,
-                               make_reshard_experts_direct, partition_requests,
-                               plan_ep_to_tp, plan_tp_to_ep)
+from repro.core.switch_exec import SwitchExecutor
 from repro.models.common import ModelConfig
-from repro.models.moe import make_expert_layout
 from repro.models.registry import init_params
 from repro.serving.kvcache import (CacheConfig, PageAllocator,
                                    block_table_array, pages_needed)
 from repro.serving.metrics import ServeMetrics
 from repro.serving.request import Request, State
 from repro.serving.steps import build_decode_pack, build_serve_step
-
-def _pow2_pad(n: int, lo: int = 8) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
 
 
 @dataclass
@@ -51,6 +42,10 @@ class EngineConfig:
     temperature: float = 0.0
     time_scale: float = 1.0            # virtual seconds per wall second
     direct_reshard: bool = True        # paper's fused path when pure-EP
+    # 0 = monolithic switch (decode paused for the whole migration);
+    # k > 0 = overlapped switch migrating k layers per chunk, decode
+    # interleaved between chunks (DESIGN.md §4.3)
+    chunk_layers: int = 0
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -65,6 +60,10 @@ class SwitchRecord:
     plan_s: float
     kv_pages: int
     live_requests: int
+    pause_s: float = 0.0               # decode-blocked time (== total_s
+                                       # for a monolithic switch)
+    chunks: int = 1
+    delta_pages: int = 0
 
 
 class MoebiusEngine:
@@ -111,8 +110,9 @@ class MoebiusEngine:
             b for b in self.ecfg.ladder if b % self.G == 0 or b >= self.G
         ) or (self.G,))
         self._step_fns: dict = {}
-        self._reshard_fns: dict = {}
-        self._migrate_fns: dict = {}
+        self.switcher = SwitchExecutor(
+            cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
+            direct_reshard=self.ecfg.direct_reshard)
 
         # --- host scheduling state ---
         self.pending: deque[Request] = deque()     # not yet arrived
@@ -387,89 +387,59 @@ class MoebiusEngine:
     # ------------------------------------------------------------------
     # switch
     # ------------------------------------------------------------------
-    def _reshard_fn(self, direction: str):
-        if direction not in self._reshard_fns:
-            lay_ep = make_expert_layout(self.cfg.num_experts, self.G, EP)
-            if self.ecfg.direct_reshard and lay_ep.is_pure_ep:
-                self._reshard_fns[direction] = (
-                    "direct",
-                    make_reshard_experts_direct(self.cfg, self.mesh,
-                                                direction,
-                                                model_axis=self.m))
-            else:
-                src, dst = (EP, TP) if direction == "ep_to_tp" else (TP, EP)
-                build = make_reshard_experts(self.cfg, self.mesh, src, dst,
-                                             model_axis=self.m)
-                sds = jax.tree.map(
-                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                    self._experts)
-                self._reshard_fns[direction] = ("xla", build(sds))
-        return self._reshard_fns[direction]
-
-    def _migrate_fn(self, direction: str, pmax: int):
-        key = (direction, pmax)
-        if key not in self._migrate_fns:
-            self._migrate_fns[key] = make_migrate_kv(
-                self.cfg, self.cc, self.mesh, direction, pmax,
-                model_axis=self.m, data_axis=self.da)
-        return self._migrate_fns[key]
+    def _live(self) -> list[Request]:
+        return list(self.running.values()) + list(self.prefilling)
 
     def execute_switch(self, target: str):
-        """Live switch between decode iterations; no request is drained."""
+        """Live switch between decode iterations; no request is drained.
+
+        Monolithic mode (chunk_layers == 0) pauses decode for the whole
+        migration. Chunked mode stages the destination buffers layer chunk
+        by layer chunk with decode steps interleaved in between (still on
+        the intact source layout), then pauses only for the dirty-page
+        delta + commit (DESIGN.md §4.3).
+        """
         assert target != self.active
-        direction = "ep_to_tp" if target == TP else "tp_to_ep"
-        t0 = time.perf_counter()
-        live = [r for r in self.running.values()] + list(self.prefilling)
+        if self.ecfg.chunk_layers > 0:
+            rec = self._execute_switch_chunked(target)
+        else:
+            direction = "ep_to_tp" if target == TP else "tp_to_ep"
+            experts = self._experts if self.cfg.is_moe else None
+            experts, self.kv_flat, self.alloc, st = self.switcher.monolithic(
+                direction, self._live(), experts, self.kv_flat)
+            if self.cfg.is_moe:
+                self._experts = experts
+            self.active = target
+            rec = SwitchRecord(
+                t=self.now(), direction=st.direction, total_s=st.total_s,
+                weights_s=st.weights_s, kv_s=st.kv_s, plan_s=st.plan_s,
+                kv_pages=st.kv_pages, live_requests=st.live_requests,
+                pause_s=st.pause_s, chunks=st.chunks)
+        self.switch_records.append(rec)
+        self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
 
-        # --- plan (host): new allocators + page-indexed descriptors ---
-        new_alloc = [PageAllocator(self.cc, self.cfg, self.G, target)
-                     for _ in range(self.Dd)]
-        plans = []
-        for d in range(self.Dd):
-            reqs = [r for r in live if r.data_group == d and r.pages]
-            if direction == "ep_to_tp":
-                plans.append(plan_ep_to_tp(reqs, self.cfg, self.cc,
-                                           new_alloc[d], self.G))
-            else:
-                plans.append(plan_tp_to_ep(reqs, self.cfg, self.cc,
-                                           new_alloc[d], self.G))
-        pmax = _pow2_pad(max(p.src_pages.shape[1] for p in plans))
-        def padp(a, fill=0):
-            return np.pad(a, ((0, 0), (0, pmax - a.shape[1])),
-                          constant_values=fill)
-        sp = np.stack([padp(p.src_pages) for p in plans])
-        dp = np.stack([padp(p.dst_pages) for p in plans])
-        vm = np.stack([padp(p.valid) for p in plans])
-        t_plan = time.perf_counter() - t0
-
-        # --- weights (data plane, single copy resharded in place) ---
-        t1 = time.perf_counter()
+    def _execute_switch_chunked(self, target: str) -> SwitchRecord:
+        sess = self.switcher.start(
+            target, self._live(), self._experts if self.cfg.is_moe else None,
+            self.kv_flat, self.ecfg.chunk_layers)
+        while not sess.done:
+            self.switcher.advance(
+                self._experts if self.cfg.is_moe else None, self.kv_flat)
+            # overlap: decode continues in the source layout on the source
+            # buffers while the chunk's collectives are in flight
+            self._step_i += 1
+            self._decode_once()
+        experts, self.kv_flat, self.alloc, st = self.switcher.commit(
+            self._live(), self.kv_flat)
         if self.cfg.is_moe:
-            kind, fn = self._reshard_fn(direction)
-            if kind == "direct":
-                w13, w2 = fn(self._experts["w13"], self._experts["w2"])
-                self._experts = {"w13": w13, "w2": w2}
-            else:
-                out = fn(self._experts)
-                self._experts = {"w13": out["w13"], "w2": out["w2"]}
-            jax.block_until_ready(self._experts["w13"])
-        t_w = time.perf_counter() - t1
-
-        # --- KV cache (three-stage gather/exchange/scatter) ---
-        t2 = time.perf_counter()
-        mfn = self._migrate_fn(direction, pmax)
-        self.kv_flat = mfn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
-                           jnp.asarray(vm))
-        jax.block_until_ready(self.kv_flat)
-        t_kv = time.perf_counter() - t2
-
-        self.alloc = new_alloc
+            self._experts = experts
         self.active = target
-        total = time.perf_counter() - t0
-        self.switch_records.append(SwitchRecord(
-            t=self.now(), direction=direction, total_s=total,
-            weights_s=t_w, kv_s=t_kv, plan_s=t_plan,
-            kv_pages=int(vm.sum()), live_requests=len(live)))
+        return SwitchRecord(
+            t=self.now(), direction=st.direction, total_s=st.total_s,
+            weights_s=0.0, kv_s=0.0, plan_s=st.plan_s,
+            kv_pages=st.kv_pages, live_requests=st.live_requests,
+            pause_s=st.pause_s, chunks=st.chunks,
+            delta_pages=st.delta_pages)
 
     # ------------------------------------------------------------------
     # main loop

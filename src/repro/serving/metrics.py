@@ -10,6 +10,7 @@ import numpy as np
 class ServeMetrics:
     records: list = field(default_factory=list)   # (rid, arrival, first, finish, out_len)
     mode_samples: list = field(default_factory=list)  # (t, mode, running)
+    switch_events: list = field(default_factory=list)  # (t, direction, pause_s, total_s)
 
     def finish(self, req) -> None:
         self.records.append((req.rid, req.arrival_s, req.first_token_s,
@@ -17,6 +18,10 @@ class ServeMetrics:
 
     def sample_mode(self, t: float, mode: str, running: int) -> None:
         self.mode_samples.append((t, mode, running))
+
+    def switch(self, t: float, direction: str, pause_s: float,
+               total_s: float) -> None:
+        self.switch_events.append((t, direction, pause_s, total_s))
 
     def ttft(self) -> np.ndarray:
         return np.array([f - a for _, a, f, _, _ in self.records
@@ -32,6 +37,8 @@ class ServeMetrics:
     def summary(self) -> dict:
         tt, tp = self.ttft(), self.tpot()
         fins = [fin for *_, fin, _ in self.records if fin is not None]
+        pauses = np.array([p for *_, p, _ in self.switch_events])
+        totals = np.array([t for *_, t in self.switch_events])
         return {
             "n": len(self.records),
             "ttft_mean_s": float(tt.mean()) if len(tt) else float("nan"),
@@ -39,4 +46,11 @@ class ServeMetrics:
             "tpot_mean_s": float(tp.mean()) if len(tp) else float("nan"),
             "makespan_s": float(max(fins)) if fins else float("nan"),
             "total_tokens": int(sum(n for *_, n in self.records)),
+            "switches": len(self.switch_events),
+            "switch_pause_mean_s": (float(pauses.mean()) if len(pauses)
+                                    else float("nan")),
+            "switch_pause_max_s": (float(pauses.max()) if len(pauses)
+                                   else float("nan")),
+            "switch_total_mean_s": (float(totals.mean()) if len(totals)
+                                    else float("nan")),
         }

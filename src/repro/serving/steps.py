@@ -23,6 +23,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.layouts import (EP, TP, TPEP, attn_rank_major,
                                 expert_layout, group_info, padded_vocab)
 from repro.kernels.paged_attention.ops import paged_attention
@@ -344,7 +345,7 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
     if return_logits:
         out_specs = out_specs + ((P(da, m, None) if layout == EP
                                   else P(da, None, None)),)
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, flat_spec, bspec3, bspec2, bspec2, bspec3, P()),
         out_specs=out_specs, check_vma=False)

@@ -19,6 +19,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.layouts import EP, TP, attn_rank_major, group_info
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models.common import ModelConfig, apply_norm
@@ -154,7 +155,7 @@ def build_ssm_serve_step(cfg: ModelConfig, mesh, layout: str, Bslot: int, *,
         "final_norm": {"scale": P()},
         "layers": {"norm": {"scale": P()}, "ssm": lspec},
     }
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, conv_x_spec, head_spec, head_spec, ssm_spec,
                   bspec3, bspec2, P()),
@@ -294,7 +295,7 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
                     "w_down": P(m, None) if tp else P()},
         },
     }
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, flat_spec, conv_x_spec, conv_spec, conv_spec,
                   ssm_spec, bspec3, bspec2, bspec2, bspec3, P()),
@@ -428,7 +429,7 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
                     "w_down": P(None, m, None) if tp else P()},
         },
     }
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, flat_spec, xkv_spec, bspec3, bspec2, bspec2,
                   bspec3, P()),

@@ -1,0 +1,91 @@
+"""Deterministic fallback for `hypothesis` when the real package is absent
+(offline CI containers). Provides the tiny subset this suite uses —
+`given`, `settings`, and the `integers` / `sampled_from` / `lists` /
+`booleans` strategies — running each property as a fixed number of
+seeded example-based cases. The seed derives from the test's qualified
+name, so failures reproduce exactly across runs.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from tests._hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    xs = list(elements)
+    return _Strategy(lambda rng: xs[rng.randrange(len(xs))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.example_from(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                example = {k: s.example_from(rng)
+                           for k, s in strategies.items()}
+                fn(*args, **kwargs, **example)
+        wrapper._max_examples = DEFAULT_MAX_EXAMPLES
+        # hide the strategy-filled params from pytest's fixture resolution
+        # (functools.wraps would otherwise expose the original signature)
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        return wrapper
+    return deco
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", DEFAULT_MAX_EXAMPLES)
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    lists = staticmethod(lists)
+
+
+strategies = _StrategiesModule()

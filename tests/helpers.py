@@ -7,10 +7,26 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
+# Default host-device count for multidevice tests. Overridable via env so
+# CI / developers can scale it without touching test code.
+DEFAULT_DEVICES = int(os.environ.get("REPRO_TEST_DEVICES", "8"))
 
-def run_multidevice(code: str, devices: int = 8, timeout: int = 900) -> str:
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def device_flags(devices: int, base: str = "") -> str:
+    """Merge the host-device-count flag into an existing XLA_FLAGS string,
+    preserving any unrelated flags the caller's environment already set."""
+    kept = [f for f in base.split() if not f.startswith(_COUNT_FLAG + "=")]
+    kept.append(f"{_COUNT_FLAG}={devices}")
+    return " ".join(kept)
+
+
+def run_multidevice(code: str, devices: int | None = None,
+                    timeout: int = 900) -> str:
+    devices = DEFAULT_DEVICES if devices is None else devices
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["XLA_FLAGS"] = device_flags(devices, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = str(REPO / "src")
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout)

@@ -4,7 +4,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline fallback (tests/_hypothesis_compat.py)
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.models.common import (apply_rope, flash_attention, rope_cos_sin)
 

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline fallback (tests/_hypothesis_compat.py)
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.expert_reshard.kernel import (interleave_shards_pallas,
                                                  pack_peer_chunks_pallas)

@@ -3,7 +3,10 @@ vs per-token reference, layout invariance of the global path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline fallback (tests/_hypothesis_compat.py)
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.models.moe import (make_expert_layout, moe_ffn_global,
                               pack_experts, pack_w13, route, unpack_experts,

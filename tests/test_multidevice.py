@@ -15,8 +15,8 @@ COMMON = """
 import jax, jax.numpy as jnp, numpy as np
 import jax.random as jr
 from repro.configs import get_config
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("mixtral-8x7b").reduced(
     num_heads=8, num_kv_heads=2, head_dim=8, d_model=32, num_layers=2,
     num_experts=8, top_k=2, d_expert=32, vocab_size=256, capacity_factor=8.0,
@@ -98,6 +98,60 @@ assert run(None, EP) == base, "static EP != static TP"
 for at in (2, 5, 9):
     assert run(at, TP) == base, f"TP->EP@{at}"
     assert run(at, EP) == base, f"EP->TP@{at}"
+print("OK")
+""", timeout=1200)
+
+
+def test_chunked_switch_preserves_outputs_and_shrinks_pause():
+    """Overlapped layer-chunked switch (EngineConfig.chunk_layers > 0):
+    outputs must match the static baseline exactly, pause_s must be
+    recorded strictly below total_s once the movers are warm."""
+    run_multidevice(COMMON + """
+from repro.core.layouts import EP, TP
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+def make_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200,
+            int(rng.integers(3, 10)))), max_new_tokens=int(rng.integers(4, 12)),
+            arrival_s=0.0) for i in range(6)]
+def run(switch_at=None, start=TP, chunk=0):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout=start, ladder=(4, 8), prefill_chunk=8,
+        temperature=0.0, policy=pol, seed=0, chunk_layers=chunk))
+    for r in make_reqs(): eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if switch_at is not None and i == switch_at:
+            eng.execute_switch(EP if eng.active == TP else TP)
+        eng.step(); i += 1
+        assert i < 500
+    return {r.rid: r.output for r in eng.finished}, eng
+base, _ = run(None, TP)
+for at in (2, 5, 9):
+    for start in (TP, EP):
+        out, eng = run(at, start, chunk=1)
+        assert out == base, (at, start)
+        r = eng.switch_records[-1]
+        assert r.chunks == 2 and r.pause_s <= r.total_s, vars(r)
+        assert eng.metrics.switch_events, "switch not recorded in metrics"
+# warm movers inside one engine: pause strictly below total
+pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+    start_layout=TP, ladder=(4, 8), prefill_chunk=8, temperature=0.0,
+    policy=pol, seed=0, chunk_layers=1))
+for r in make_reqs(): eng.submit(r)
+for i in range(6): eng.step()
+for target in (EP, TP, EP, TP):
+    eng.execute_switch(target)
+    eng.step()
+warm = eng.switch_records[-2:]
+assert all(r.pause_s < r.total_s for r in warm), \
+    [(r.pause_s, r.total_s) for r in warm]
 print("OK")
 """, timeout=1200)
 
@@ -226,8 +280,8 @@ from repro.core.layouts import EP, TP, pack_params
 from repro.models.registry import init_params
 from repro.models.ssm_lm import ssm_lm_forward
 from repro.serving.steps_extra import build_ssm_serve_step, ssm_state_shapes
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 G, Dd, Bslot = 4, 2, 4
 cfg = get_config("mamba2-780m").reduced(
     num_layers=2, d_model=32, vocab_size=256, ssm_state=8, ssm_head_dim=8,

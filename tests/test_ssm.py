@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline fallback (tests/_hypothesis_compat.py)
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.models.ssm import ssd_chunked, ssd_decode_step
 

@@ -1,6 +1,9 @@
 """Property tests for the switch's host planning (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline fallback (tests/_hypothesis_compat.py)
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.layouts import EP, TP

@@ -64,3 +64,38 @@ def test_forced_length_replay(tiny_dense, mesh11):
         r.forced_len = 5
     eng = _run(tiny_dense, mesh11, reqs)
     assert all(len(r.output) == 5 for r in eng.finished)
+
+
+def test_chunked_switch_single_device(tiny_moe, mesh11):
+    """Chunked and monolithic switches agree on a 1x1 mesh and both record
+    pause_s/total_s (chunked pause <= total by construction)."""
+    outs = {}
+    for chunk in (0, 1):
+        pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+        eng = MoebiusEngine(tiny_moe, mesh11,
+                            CacheConfig(page_size=4, pages_ep=64,
+                                        max_pages_per_req=16),
+                            ecfg=EngineConfig(start_layout="tp",
+                                              ladder=(4, 8), prefill_chunk=8,
+                                              temperature=0.0, policy=pol,
+                                              chunk_layers=chunk))
+        for r in _reqs():
+            eng.submit(r)
+        i = 0
+        switched = False
+        while eng.pending or eng.waiting or eng.prefilling or eng.running:
+            if not switched and eng.running:
+                eng.execute_switch("ep")
+                switched = True
+            eng.step()
+            i += 1
+            assert i < 1000
+        assert switched and len(eng.switch_records) == 1
+        rec = eng.switch_records[0]
+        assert rec.total_s > 0 and 0 <= rec.pause_s <= rec.total_s
+        s = eng.metrics.summary()
+        assert s["switches"] == 1
+        assert s["switch_pause_mean_s"] <= s["switch_total_mean_s"]
+        outs[chunk] = {r.rid: r.output for r in eng.finished}
+        assert eng.alloc[0].total_free() > 0
+    assert outs[0] == outs[1], "chunked switch diverged from monolithic"
