@@ -14,13 +14,15 @@ def run(measured: bool = True):
     rows = []
     from repro.configs import get_config
     from repro.core.cost_model import H200, TPU_V5E, crossover_batch, sweep
+    from repro.core.layouts import EP, TP, TPEP
     cfg235 = get_config("qwen3-235b-a22b")
+    # three-layout sweep: tpep scored over a 64-chip full mesh (8 groups)
     for r in sweep(cfg235, [8, 32, 64, 128, 256, 512, 1024, 2048],
-                   kv_len=2048, hw=H200, G=8):
-        rows.append((f"crossover.h200.B{r['B']}.tp_ms", r["tp_ms"] * 1e3,
-                     r["winner"]))
-        rows.append((f"crossover.h200.B{r['B']}.ep_ms", r["ep_ms"] * 1e3,
-                     r["winner"]))
+                   kv_len=2048, hw=H200, G=8, layouts=(TP, EP, TPEP),
+                   chips=64):
+        for lo in (TP, EP, TPEP):
+            rows.append((f"crossover.h200.B{r['B']}.{lo}_ms",
+                         r[f"{lo}_ms"] * 1e3, r["winner"]))
     xb = crossover_batch(cfg235, 2048, H200, 8)
     rows.append(("crossover.h200.switch_point", float(xb),
                  "paper: between 128 and 256"))

@@ -1,8 +1,10 @@
 """Benchmark driver: one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. The dynamic benchmarks need
-multiple host devices: we force 8 (not 512 — that count is dry-run-only)
-before jax initializes.
+Prints ``name,us_per_call,derived`` CSV; ``--json-dir DIR`` additionally
+writes one machine-readable ``BENCH_<name>.json`` per benchmark (the CI
+artifact that records the perf trajectory across PRs). The dynamic
+benchmarks need multiple host devices: we force 8 (not 512 — that count is
+dry-run-only) before jax initializes.
 """
 import pathlib
 import sys
@@ -11,6 +13,8 @@ from _bootstrap import ensure_env_and_path
 ensure_env_and_path()
 
 import argparse
+import json
+import time
 import traceback
 
 
@@ -20,6 +24,8 @@ def main() -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--fast", action="store_true",
                     help="smaller workloads (CI mode)")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<name>.json per benchmark to this dir")
     args = ap.parse_args()
 
     from benchmarks import (bench_bursty, bench_crossover, bench_graphs,
@@ -40,9 +46,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         try:
-            for row in benches[name]():
-                nm, us, derived = row
+            rows = list(benches[name]())
+            for nm, us, derived in rows:
                 print(f"{nm},{us:.2f},{derived}", flush=True)
+            if args.json_dir:
+                out = pathlib.Path(args.json_dir) / f"BENCH_{name}.json"
+                out.write_text(json.dumps({
+                    "benchmark": name,
+                    "fast": args.fast,
+                    "unix_time": time.time(),
+                    "rows": [{"name": nm, "value": us, "derived": derived}
+                             for nm, us, derived in rows],
+                }, indent=1))
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from repro.core.layouts import EP, TP, expert_layout, group_info
+from repro.core.layouts import EP, TP, expert_layout, get_layout, group_info
 from repro.models.common import ModelConfig
 
 
@@ -42,9 +42,18 @@ def _expected_activated(E: int, k: int, tokens: float) -> float:
 
 
 def decode_step_time(cfg: ModelConfig, layout: str, B: int, kv_len: int,
-                     hw: HWSpec = TPU_V5E, G: int = 8) -> dict:
+                     hw: HWSpec = TPU_V5E, G: int = 8,
+                     chips: int | None = None) -> dict:
     """Per-decode-step time (s) for a G-rank switch group serving B in-flight
-    requests with kv_len cached tokens each. Returns a term breakdown."""
+    requests with kv_len cached tokens each. Returns a term breakdown.
+
+    `chips`: total mesh size for full-mesh layouts (tpep shards experts over
+    the whole data x model mesh; defaults to G, i.e. one switch group).
+    Dispatch is on the registered LayoutSpec's structure (attention sharding,
+    expert kind/extent), so any registered layout can be scored.
+    """
+    spec = get_layout(layout)
+    chips = chips or G
     gi = group_info(cfg, G)
     D, dh = cfg.d_model, cfg.dh
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -58,7 +67,36 @@ def decode_step_time(cfg: ModelConfig, layout: str, B: int, kv_len: int,
                 if cfg.num_shared_experts else 0)
     E, k = cfg.num_experts, cfg.top_k
 
-    if layout == TP:
+    if spec.expert_full_mesh:
+        # TPEP-style hybrid: TP attention within the switch group, whole
+        # experts over the full mesh — MixServe's intermediate-concurrency
+        # operating point.
+        tok_rank = B                       # batch replicated over the group
+        attn_w_rank = attn_w / G
+        kv_read = B * kv_len * gi.kv_local * dh * 2 * bpe
+        attn_flops = 2 * B * (attn_w / bpe) / G \
+            + 2 * B * kv_len * gi.q_local * dh * 2
+        if cfg.is_moe:
+            lay = spec.expert_layout(cfg, G, chips)
+            E_loc = E // lay.ep
+            routed_here = B * k / lay.ep / max(1, lay.tp_inner)
+            act = _expected_activated(E_loc, min(k, E_loc), routed_here)
+            ffn_w_rank = act * (expert_w / max(1, lay.tp_inner)) + shared_w
+            ffn_flops = 2 * B * k * 3 * D * cfg.d_expert / chips \
+                + 2 * (B / G) * (3 * D * cfg.num_shared_experts
+                                 * cfg.d_expert)
+        else:
+            # dense archs have no full-mesh expert state: Megatron MLP
+            ffn_w_rank = dense_mlp_w / G
+            ffn_flops = 2 * B * (dense_mlp_w / bpe) / G
+        # attention all-reduce over the group + expert all_to_all over the
+        # full mesh on the 1/G token slice + output all_gather over the group
+        ar_bytes = 2 * (G - 1) / G * B * D * bpe
+        a2a_bytes = 2 * (B / G) * k * D * bpe * (chips - 1) / chips
+        ag_bytes = (G - 1) / G * B * D * bpe
+        comm = (ar_bytes + a2a_bytes + ag_bytes) / hw.link_bw \
+            + hw.msg_latency * (2 * (chips - 1) + 2 * (G - 1))
+    elif spec.dense_tp:
         tok_rank = B                       # full batch on every rank
         attn_w_rank = attn_w / G
         kv_read = B * kv_len * gi.kv_local * dh * 2 * bpe
@@ -132,12 +170,19 @@ def crossover_batch(cfg: ModelConfig, kv_len: int = 4096,
 
 
 def sweep(cfg: ModelConfig, batches, kv_len: int = 4096,
-          hw: HWSpec = TPU_V5E, G: int = 8) -> list[dict]:
+          hw: HWSpec = TPU_V5E, G: int = 8,
+          layouts=(TP, EP), chips: int | None = None) -> list[dict]:
+    """Per-batch decode times for every requested layout. Rows carry one
+    `<layout>_ms` column per layout plus the argmin `winner` (ties go to
+    the earlier layout in `layouts`)."""
     rows = []
     for b in batches:
-        tp = decode_step_time(cfg, TP, b, kv_len, hw, G)
-        ep = decode_step_time(cfg, EP, b, kv_len, hw, G)
-        rows.append({"B": b, "tp_ms": tp["total"] * 1e3,
-                     "ep_ms": ep["total"] * 1e3,
-                     "winner": TP if tp["total"] <= ep["total"] else EP})
+        times = {str(l): decode_step_time(cfg, l, b, kv_len, hw, G,
+                                          chips=chips)["total"]
+                 for l in layouts}
+        row = {"B": b}
+        for name, t in times.items():
+            row[f"{name}_ms"] = t * 1e3
+        row["winner"] = min(times, key=times.get)
+        rows.append(row)
     return rows

@@ -1,20 +1,38 @@
-"""Switch coordinator (paper §4.5): asymmetric hysteresis policy.
+"""Switch policy (paper §4.5): pluggable N-layout scoring + the paper's
+asymmetric hysteresis.
 
-Host-side pure logic (single-controller JAX replaces rank-0 broadcast).
-  * TP -> EP: immediately when the latest in-flight count > T_h.
-  * EP -> TP: only when the mean count over the last W iterations < T_l,
-    AND the TP layout's KV capacity fits the live token set (kv-head
-    replication penalty), AND the cooldown has elapsed.
-Thresholds auto-calibrate from the analytical cost model (or measured probes).
+Host-side pure logic (single-controller JAX replaces rank-0 broadcast),
+split into three composable pieces:
+
+  * a **scorer** answers "which registered layout is best at concurrency
+    `count`?" — `ThresholdScorer` is the paper's two-layout T_h/T_l band;
+    `CostModelScorer` (the N-layout default) ranks every registered layout
+    with `cost_model.decode_step_time` and filters KV-infeasible candidates;
+  * `HysteresisPolicy` wraps any scorer with the paper's asymmetry: moves
+    *up* the concurrency order (toward the layout that wins at high load,
+    e.g. TP -> EP on a burst) fire on the instantaneous in-flight count;
+    moves *down* (e.g. EP -> TP) require the mean count over the last W
+    iterations — a sustained dip, not a blip;
+  * `SwitchCoordinator` drives the policy once per decode iteration: it
+    owns the history window, the cooldown (on the engine's *virtual* clock,
+    injected as `clock` — never wall time, so `time_scale != 1` replay
+    keeps cooldowns correct), and the final KV-capacity veto (a vetoed
+    switch counts as `canceled` and re-arms after the cooldown).
+
+Thresholds auto-calibrate from the analytical cost model (or measured
+probes). Any object implementing the `SwitchPolicy` protocol can replace
+the default (pass `scorer=` / `policy_impl=` to the coordinator).
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 from repro.core.cost_model import HWSpec, TPU_V5E, decode_step_time
-from repro.core.layouts import EP, TP, group_info
+from repro.core.layouts import EP, TP, LayoutSpec, get_layout
 from repro.models.common import ModelConfig
 
 
@@ -63,6 +81,157 @@ def calibrate_threshold(cfg: ModelConfig, G: int, kv_len: int = 4096,
     return hi_b
 
 
+# ---------------------------------------------------------------------------
+# Observation / decision / protocol
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PolicyObservation:
+    """What the coordinator shows the policy, once per decode iteration."""
+    active: LayoutSpec
+    in_flight: int                 # instantaneous count (burst detector)
+    window_mean: float | None      # mean over last W iterations; None until
+                                   # the window has filled
+    live_tokens: int
+    ep_capacity_tokens: int        # group KV capacity under the EP view
+
+
+@dataclass(frozen=True)
+class Proposal:
+    target: LayoutSpec
+    reason: str
+
+
+@runtime_checkable
+class SwitchPolicy(Protocol):
+    """A pluggable switch policy: observation -> proposal (or hold)."""
+
+    def propose(self, obs: PolicyObservation) -> Proposal | None:
+        ...
+
+
+class LayoutScorer(Protocol):
+    """Scores layouts at a given concurrency; `ordered` ranks the layouts
+    from low-concurrency-optimal to high-concurrency-optimal (the axis the
+    hysteresis asymmetry runs along)."""
+
+    ordered: tuple
+
+    def best_at(self, count: float, obs: PolicyObservation) -> LayoutSpec | None:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Scorers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ThresholdScorer:
+    """The paper's two-layout threshold band: above T_h the high-concurrency
+    layout wins, below T_l the low-concurrency layout; the band between is
+    a hold (the hysteresis dead zone)."""
+    pcfg: PolicyConfig
+    low: LayoutSpec = TP
+    high: LayoutSpec = EP
+
+    def __post_init__(self):
+        self.low = get_layout(self.low)
+        self.high = get_layout(self.high)
+        self.ordered = (self.low, self.high)
+
+    def best_at(self, count: float, obs: PolicyObservation):
+        if count > self.pcfg.t_high:
+            return self.high
+        if count < self.pcfg.t_low:
+            return self.low
+        return None
+
+
+@dataclass
+class CostModelScorer:
+    """N-layout default: rank every registered layout at concurrency
+    `count` with the analytical decode-step model, dropping candidates
+    whose KV capacity cannot hold the live token set (KV-feasibility is
+    part of the score, not an afterthought)."""
+    cfg: ModelConfig
+    G: int
+    layouts: tuple
+    hw: HWSpec = TPU_V5E
+    kv_len: int | None = None      # None: derive mean context from the obs
+    chips: int | None = None       # full-mesh extent for tpep-style layouts
+
+    def __post_init__(self):
+        self.layouts = tuple(get_layout(l) for l in self.layouts)
+        # order layouts by onset concurrency: the smallest count at which
+        # each becomes the best choice (never-winning layouts sort last and
+        # are simply unreachable via the hysteresis walk)
+        kv = self.kv_len or 4096
+        onset = {l: math.inf for l in self.layouts}
+        b = 1
+        while b <= 4096:
+            w = min(self.layouts, key=lambda l: self._time(l, b, kv))
+            onset[w] = min(onset[w], b)
+            b *= 2
+        self.ordered = tuple(sorted(self.layouts,
+                                    key=lambda l: (onset[l], str(l))))
+
+    def _time(self, layout: LayoutSpec, count: float, kv_len: int) -> float:
+        return decode_step_time(self.cfg, layout, max(1, int(count)), kv_len,
+                                self.hw, self.G, chips=self.chips)["total"]
+
+    def _feasible(self, layout: LayoutSpec, obs: PolicyObservation) -> bool:
+        cap = layout.kv_capacity_tokens(self.cfg, self.G,
+                                        obs.ep_capacity_tokens)
+        return obs.live_tokens <= cap
+
+    def best_at(self, count: float, obs: PolicyObservation):
+        kv = self.kv_len or max(1, obs.live_tokens // max(1, obs.in_flight))
+        cands = [l for l in self.layouts if self._feasible(l, obs)]
+        if not cands:
+            return None
+        return min(cands, key=lambda l: self._time(l, count, kv))
+
+
+# ---------------------------------------------------------------------------
+# The asymmetric-hysteresis wrapper (paper §4.5, generalized to N layouts)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HysteresisPolicy:
+    """Wrap any LayoutScorer with the paper's asymmetry:
+      * up-moves (toward the high-concurrency end of `scorer.ordered`) fire
+        on the instantaneous in-flight count, and only when it exceeds
+        T_high — bursts must react now;
+      * down-moves require the windowed mean below T_low — a sustained dip,
+        so one quiet iteration can't thrash the runtime back.
+
+    The PolicyConfig band decides WHEN a move may fire; the scorer decides
+    WHERE to go among the registered layouts (with the cost-model scorer an
+    intermediate count can land on a hybrid layout like tpep). A "static"
+    config (t_high huge, t_low < 0) therefore disables any scorer.
+    """
+    scorer: LayoutScorer
+    pcfg: PolicyConfig
+
+    def propose(self, obs: PolicyObservation) -> Proposal | None:
+        rank = {l: i for i, l in enumerate(self.scorer.ordered)}
+        here = rank.get(obs.active)
+        if here is None:
+            return None
+        if obs.in_flight > self.pcfg.t_high:
+            up = self.scorer.best_at(obs.in_flight, obs)
+            if up is not None and rank.get(up, -1) > here:
+                return Proposal(up, f"count {obs.in_flight} -> {up}")
+        if obs.window_mean is None:
+            return None                       # warmup window
+        if obs.window_mean < self.pcfg.t_low:
+            down = self.scorer.best_at(obs.window_mean, obs)
+            if down is not None and rank.get(down, here) < here:
+                return Proposal(down,
+                                f"mean {obs.window_mean:.0f} -> {down}")
+        return None
+
+
 @dataclass
 class SwitchDecision:
     switch: bool
@@ -72,15 +241,34 @@ class SwitchDecision:
 
 @dataclass
 class SwitchCoordinator:
+    """Engine-facing driver: history window, cooldown on the injected
+    (virtual) clock, KV-capacity veto, switch bookkeeping. The scoring
+    itself is delegated to a SwitchPolicy (default: HysteresisPolicy over
+    ThresholdScorer for the paper's tp/ep pair, CostModelScorer whenever
+    more layouts are registered with the engine)."""
     cfg: ModelConfig
     G: int
     policy: PolicyConfig
     active: str = EP
     clock: object = time.monotonic
+    layouts: tuple = (TP, EP)
+    chips: int | None = None
+    policy_impl: SwitchPolicy | None = None
     _history: deque = field(default_factory=lambda: deque(maxlen=64))
     _last_switch: float = -1e18
     switches: list = field(default_factory=list)
     canceled: int = 0
+
+    def __post_init__(self):
+        self.active = get_layout(self.active)
+        self.layouts = tuple(get_layout(l) for l in self.layouts)
+        if self.policy_impl is None:
+            if set(self.layouts) == {TP, EP}:
+                scorer = ThresholdScorer(self.policy)
+            else:
+                scorer = CostModelScorer(self.cfg, self.G, self.layouts,
+                                         chips=self.chips)
+            self.policy_impl = HysteresisPolicy(scorer, self.policy)
 
     def tp_kv_capacity_tokens(self, ep_capacity_tokens: int) -> int:
         """Group KV capacity under TP given EP capacity (same byte budget).
@@ -88,8 +276,7 @@ class SwitchCoordinator:
         TP replicates each KV head kv_rep times (paper: Qwen3's 4 KV heads on
         8 ranks -> 2x), shrinking token capacity by that factor.
         """
-        gi = group_info(self.cfg, self.G)
-        return ep_capacity_tokens // gi.kv_rep
+        return TP.kv_capacity_tokens(self.cfg, self.G, ep_capacity_tokens)
 
     def observe(self, in_flight: int, live_tokens: int,
                 ep_capacity_tokens: int) -> SwitchDecision:
@@ -98,25 +285,26 @@ class SwitchCoordinator:
         now = self.clock()
         if now - self._last_switch < self.policy.cooldown_s:
             return SwitchDecision(False, self.active, "cooldown")
-        if self.active == TP:
-            if in_flight > self.policy.t_high:
-                return self._commit(EP, now, f"count {in_flight} > T_h")
-            return SwitchDecision(False, TP, "below T_h")
-        # active == EP: require sustained dip below T_l
         w = self.policy.window
-        if len(self._history) < w:
-            return SwitchDecision(False, EP, "warmup window")
-        mean = sum(list(self._history)[-w:]) / w
-        if mean >= self.policy.t_low:
-            return SwitchDecision(False, EP, "mean above T_l")
-        if live_tokens > self.tp_kv_capacity_tokens(ep_capacity_tokens):
+        mean = (sum(list(self._history)[-w:]) / w
+                if len(self._history) >= w else None)
+        obs = PolicyObservation(active=self.active, in_flight=in_flight,
+                                window_mean=mean, live_tokens=live_tokens,
+                                ep_capacity_tokens=ep_capacity_tokens)
+        prop = self.policy_impl.propose(obs)
+        if prop is None:
+            return SwitchDecision(False, self.active, "hold")
+        target = get_layout(prop.target)
+        cap = target.kv_capacity_tokens(self.cfg, self.G, ep_capacity_tokens)
+        if live_tokens > cap:
             self.canceled += 1
             self._last_switch = now          # retry after cooldown
-            return SwitchDecision(False, EP, "TP KV capacity infeasible")
-        return self._commit(TP, now, f"mean {mean:.0f} < T_l")
+            return SwitchDecision(False, self.active,
+                                  f"{target} KV capacity infeasible")
+        return self._commit(target, now, prop.reason)
 
     def _commit(self, target: str, now: float, reason: str) -> SwitchDecision:
         self._last_switch = now
         self.switches.append((now, self.active, target, reason))
-        self.active = target
-        return SwitchDecision(True, target, reason)
+        self.active = get_layout(target)
+        return SwitchDecision(True, self.active, reason)

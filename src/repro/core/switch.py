@@ -1,5 +1,14 @@
-"""The EP<->TP switch: weights reshard, paged-KV migration, request
-redistribution (paper §3, §4.3).
+"""The layout switch: weights reshard, paged-KV migration, request
+redistribution (paper §3, §4.3) — generalized to any ordered pair of
+registered `LayoutSpec`s.
+
+A switch plan is a *slice-ownership diff* between the source and the
+destination spec: the KV side diffs the two specs' `kv_view`s (same view ->
+identity, no pages move; "ep" -> "tp" gathers per-rank pages into the pooled
+head-sliced view and vice versa), and the weight side diffs the two specs'
+`ExpertLayout`s (any src rank-major form -> any dst rank-major form,
+including across different expert-group sizes, e.g. TP over the 8-rank
+switch group -> EP over the full data x model mesh).
 
 Three movers, all operating on the single resident copy:
 
@@ -32,11 +41,37 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.layouts import EP, TP, group_info
+from repro.core.layouts import EP, TP, get_layout, group_info
 from repro.models.common import ModelConfig
 from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
                               pack_w13, unpack_experts, unpack_w13)
 from repro.serving.kvcache import CacheConfig, PageAllocator, pages_needed
+
+
+# ---------------------------------------------------------------------------
+# 0. Pairwise switch geometry (slice-ownership diff between two specs)
+# ---------------------------------------------------------------------------
+
+def kv_migration_direction(src, dst) -> str | None:
+    """Device-mover direction for the KV side of a src->dst switch.
+
+    None when both specs share a KV view (the unified buffer is already in
+    the destination form — identity migration, no pages move). Otherwise
+    "ep_to_tp" / "tp_to_ep" names the view conversion, independent of which
+    *layouts* are switching (e.g. tpep -> ep is a "tp_to_ep" KV move).
+    """
+    src, dst = get_layout(src), get_layout(dst)
+    if src.kv_view == dst.kv_view:
+        return None
+    return "ep_to_tp" if src.kv_view == "ep" else "tp_to_ep"
+
+
+def pair_expert_layouts(cfg: ModelConfig, src, dst, G: int,
+                        chips: int | None = None
+                        ) -> tuple[ExpertLayout, ExpertLayout]:
+    """Source/destination rank-major ExpertLayouts of a src->dst switch."""
+    src, dst = get_layout(src), get_layout(dst)
+    return (src.expert_layout(cfg, G, chips), dst.expert_layout(cfg, G, chips))
 
 
 # ---------------------------------------------------------------------------
@@ -56,36 +91,61 @@ def make_reshard_experts(cfg: ModelConfig, mesh, src_layout: str,
                          donate: bool = True, stacked: bool = True):
     """XLA-path reshard: moe params pytree src rank-major -> dst rank-major.
 
-    Compiled once; a switch calls the compiled executable (runtime
-    preservation — paper §4.4).
+    Same-extent wrapper over `make_reshard_experts_pair` (the tp<->ep call
+    sites and benchmarks). Compiled once; a switch calls the compiled
+    executable (runtime preservation — paper §4.4).
     """
-    E, G = cfg.num_experts, mesh.shape[model_axis]
-    src = make_expert_layout(E, G, src_layout)
-    dst = make_expert_layout(E, G, dst_layout)
+    data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    return make_reshard_experts_pair(cfg, mesh, src_layout, dst_layout,
+                                     model_axis=model_axis,
+                                     data_axes=data_axes, donate=donate,
+                                     stacked=stacked)
+
+
+def make_reshard_experts_pair(cfg: ModelConfig, mesh, src, dst, *,
+                              model_axis: str = "model",
+                              data_axes=("data",), donate: bool = True,
+                              stacked: bool = True):
+    """Generic XLA-path reshard between ANY ordered pair of registered
+    layout specs — including pairs whose expert shards span different mesh
+    extents (tp/ep over the G-rank switch group vs tpep over the full
+    data x model mesh). XLA emits the collectives from the in/out sharding
+    diff of unpack(src) ∘ pack(dst). Compiled once per pair (runtime
+    preservation, paper §4.4); returns `build(moe_example)`.
+    """
+    E = cfg.num_experts
+    G = mesh.shape[model_axis]
+    chips = int(np.prod([mesh.shape[a]
+                         for a in tuple(data_axes) + (model_axis,)]))
+    src_s, dst_s = get_layout(src), get_layout(dst)
+    src_lay, dst_lay = pair_expert_layouts(cfg, src_s, dst_s, G, chips)
+    src_ax = src_s.expert_axes(data_axes, model_axis)
+    dst_ax = dst_s.expert_axes(data_axes, model_axis)
     nd_extra = 1 if stacked else 0
 
-    def spec(ndim):
+    def spec(ndim, ax):
         s = [None] * ndim
-        s[nd_extra] = model_axis       # rank-major G dim
+        s[nd_extra] = ax               # rank-major dim over the spec's axes
         return P(*s)
 
     def fn(moe):
         out = dict(moe)
-        cv13 = lambda w: _convert13(w, src, dst, E)
-        cv2 = lambda w: _convert(w, src, dst, 2, E)
+        cv13 = lambda w: _convert13(w, src_lay, dst_lay, E)
+        cv2 = lambda w: _convert(w, src_lay, dst_lay, 2, E)
         if stacked:
             cv13, cv2 = jax.vmap(cv13), jax.vmap(cv2)
         out["w13"] = cv13(moe["w13"])
         out["w2"] = cv2(moe["w2"])
         return out
 
-    def shardings(moe):
-        return {k: NamedSharding(mesh, spec(v.ndim) if k in ("w13", "w2")
-                                 else P()) for k, v in moe.items()}
+    def shardings(moe, ax):
+        return {k: NamedSharding(mesh, spec(v.ndim, ax)
+                                 if k in ("w13", "w2") else P())
+                for k, v in moe.items()}
 
     def build(moe_example):
-        in_sh = shardings(moe_example)
-        out_sh = shardings(jax.eval_shape(fn, moe_example))
+        in_sh = shardings(moe_example, src_ax)
+        out_sh = shardings(jax.eval_shape(fn, moe_example), dst_ax)
         return jax.jit(fn, in_shardings=(in_sh,), out_shardings=out_sh,
                        donate_argnums=(0,) if donate else ())
 
@@ -378,45 +438,50 @@ def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
 # delta at commit.
 # ---------------------------------------------------------------------------
 
-def _layout_names(direction: str) -> tuple[str, str]:
-    return (EP, TP) if direction == "ep_to_tp" else (TP, EP)
-
-
-def expert_converters(cfg: ModelConfig, G: int, direction: str):
-    """Stacked (L, G, ...) src-layout -> dst-layout converters (vmapped)."""
-    src_name, dst_name = _layout_names(direction)
+def expert_pair_converters(cfg: ModelConfig, src_lay: ExpertLayout,
+                           dst_lay: ExpertLayout):
+    """Stacked (L, G_src, ...) -> (L, G_dst, ...) converters (vmapped)."""
     E = cfg.num_experts
-    src = make_expert_layout(E, G, src_name)
-    dst = make_expert_layout(E, G, dst_name)
-    cv13 = jax.vmap(lambda w: _convert13(w, src, dst, E))
-    cv2 = jax.vmap(lambda w: _convert(w, src, dst, 2, E))
+    cv13 = jax.vmap(lambda w: _convert13(w, src_lay, dst_lay, E))
+    cv2 = jax.vmap(lambda w: _convert(w, src_lay, dst_lay, 2, E))
     return cv13, cv2
 
 
-def expert_dst_struct(cfg: ModelConfig, G: int, direction: str, experts):
+def expert_pair_dst_struct(cfg: ModelConfig, src_lay: ExpertLayout,
+                           dst_lay: ExpertLayout, experts):
     """ShapeDtypeStructs of the destination-layout expert store."""
-    cv13, cv2 = expert_converters(cfg, G, direction)
+    cv13, cv2 = expert_pair_converters(cfg, src_lay, dst_lay)
     return jax.eval_shape(
         lambda m: {"w13": cv13(m["w13"]), "w2": cv2(m["w2"])},
         {"w13": experts["w13"], "w2": experts["w2"]})
 
 
-def make_reshard_experts_chunk(cfg: ModelConfig, mesh, direction: str,
-                               lo: int, hi: int, *,
-                               model_axis: str = "model"):
-    """XLA-path chunk mover: convert layers [lo, hi) of the stacked expert
-    store into the (donated) destination buffer; src stays intact."""
+def make_reshard_experts_pair_chunk(cfg: ModelConfig, mesh, src, dst,
+                                    lo: int, hi: int, *,
+                                    model_axis: str = "model",
+                                    data_axes=("data",)):
+    """XLA-path chunk mover for any ordered spec pair: convert layers
+    [lo, hi) of the stacked expert store into the (donated) destination
+    buffer; src stays intact."""
     G = mesh.shape[model_axis]
-    cv13, cv2 = expert_converters(cfg, G, direction)
-    spec = P(None, model_axis, None, None, None)
-    sh = NamedSharding(mesh, spec)
+    chips = int(np.prod([mesh.shape[a]
+                         for a in tuple(data_axes) + (model_axis,)]))
+    src_s, dst_s = get_layout(src), get_layout(dst)
+    src_lay, dst_lay = pair_expert_layouts(cfg, src_s, dst_s, G, chips)
+    cv13, cv2 = expert_pair_converters(cfg, src_lay, dst_lay)
+
+    def sh(ax):
+        return NamedSharding(mesh, P(None, ax, None, None, None))
+
+    s_sh = sh(src_s.expert_axes(data_axes, model_axis))
+    d_sh = sh(dst_s.expert_axes(data_axes, model_axis))
 
     def fn(w13_src, w2_src, w13_dst, w2_dst):
         return (w13_dst.at[lo:hi].set(cv13(w13_src[lo:hi])),
                 w2_dst.at[lo:hi].set(cv2(w2_src[lo:hi])))
 
-    return jax.jit(fn, in_shardings=(sh, sh, sh, sh), out_shardings=(sh, sh),
-                   donate_argnums=(2, 3))
+    return jax.jit(fn, in_shardings=(s_sh, s_sh, d_sh, d_sh),
+                   out_shardings=(d_sh, d_sh), donate_argnums=(2, 3))
 
 
 def make_reshard_experts_direct_chunk(cfg: ModelConfig, mesh, direction: str,

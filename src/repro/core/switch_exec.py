@@ -1,4 +1,10 @@
-"""SwitchExecutor: the runtime that drives live EP<->TP switches.
+"""SwitchExecutor: the runtime that drives live layout switches.
+
+Switches are planned between ANY ordered pair of registered `LayoutSpec`s:
+the executor diffs the two specs' KV views (same view -> identity, the
+allocators and pages pass through untouched) and their ExpertLayouts (the
+generic pair resharder covers pairs across different expert-group sizes;
+the paper's fused direct path is kept for the pure-EP tp<->ep pair).
 
 Two execution modes over the movers in core/switch.py (DESIGN.md §4):
 
@@ -40,14 +46,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.layouts import EP, TP
-from repro.core.switch import (Assignment, apply_assignments,
-                               expert_dst_struct, make_migrate_kv,
-                               make_migrate_kv_chunk, make_reshard_experts,
-                               make_reshard_experts_chunk,
+from repro.core.layouts import EP, TP, get_layout
+from repro.core.switch import (apply_assignments,
+                               expert_pair_dst_struct, kv_migration_direction,
+                               make_migrate_kv, make_migrate_kv_chunk,
                                make_reshard_experts_direct,
                                make_reshard_experts_direct_chunk,
-                               pairs_to_plan, plan_switch)
+                               make_reshard_experts_pair,
+                               make_reshard_experts_pair_chunk,
+                               pair_expert_layouts, pairs_to_plan,
+                               plan_switch)
 from repro.models.common import ModelConfig
 from repro.models.moe import make_expert_layout
 from repro.serving.kvcache import CacheConfig, PageAllocator, num_kv_layers
@@ -85,7 +93,10 @@ class SwitchStats:
 @dataclass
 class SwitchSession:
     """State of one in-progress chunked switch."""
-    direction: str
+    src: object                             # source LayoutSpec
+    dst: object                             # destination LayoutSpec
+    direction: str                          # "<src>_to_<dst>" (stats label)
+    kv_dir: str | None                      # KV-view mover direction
     t_start: float
     plan_arrays: tuple                      # (sp, dp, vm) device, (Dd, G, P)
     pmax: int
@@ -114,6 +125,7 @@ class SwitchExecutor:
         self.m, self.da = model_axis, data_axis
         self.G = mesh.shape[model_axis]
         self.Dd = mesh.shape[data_axis]
+        self.chips = self.Dd * self.G
         self.Lk = num_kv_layers(cfg)
         self.direct_reshard = direct_reshard
         self._reshard_fns: dict = {}
@@ -126,26 +138,34 @@ class SwitchExecutor:
     # ------------------------------------------------------------------
     # mover caches
     # ------------------------------------------------------------------
-    def _use_direct(self) -> bool:
+    def _use_direct(self, src, dst) -> bool:
+        """The paper's fused shard_map path: pure-EP tp<->ep pairs only."""
+        if {src, dst} != {TP, EP}:
+            return False
         lay_ep = make_expert_layout(self.cfg.num_experts, self.G, EP)
         return self.direct_reshard and lay_ep.is_pure_ep
 
-    def reshard_fn(self, direction: str, experts):
-        if direction not in self._reshard_fns:
-            if self._use_direct():
-                self._reshard_fns[direction] = (
+    @staticmethod
+    def _direct_direction(src) -> str:
+        return "ep_to_tp" if src is EP else "tp_to_ep"
+
+    def reshard_fn(self, src, dst, experts):
+        key = (src, dst)
+        if key not in self._reshard_fns:
+            if self._use_direct(src, dst):
+                self._reshard_fns[key] = (
                     "direct",
                     make_reshard_experts_direct(self.cfg, self.mesh,
-                                                direction,
+                                                self._direct_direction(src),
                                                 model_axis=self.m))
             else:
-                src, dst = (EP, TP) if direction == "ep_to_tp" else (TP, EP)
-                build = make_reshard_experts(self.cfg, self.mesh, src, dst,
-                                             model_axis=self.m)
+                build = make_reshard_experts_pair(
+                    self.cfg, self.mesh, src, dst, model_axis=self.m,
+                    data_axes=(self.da,))
                 sds = jax.tree.map(
                     lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), experts)
-                self._reshard_fns[direction] = ("xla", build(sds))
-        return self._reshard_fns[direction]
+                self._reshard_fns[key] = ("xla", build(sds))
+        return self._reshard_fns[key]
 
     def migrate_fn(self, direction: str, pmax: int):
         key = (direction, pmax)
@@ -155,17 +175,17 @@ class SwitchExecutor:
                 model_axis=self.m, data_axis=self.da)
         return self._migrate_fns[key]
 
-    def chunk_reshard_fn(self, direction: str, lo: int, hi: int):
-        key = (direction, lo, hi)
+    def chunk_reshard_fn(self, src, dst, lo: int, hi: int):
+        key = (src, dst, lo, hi)
         if key not in self._chunk_reshard_fns:
-            if self._use_direct():
+            if self._use_direct(src, dst):
                 fn = make_reshard_experts_direct_chunk(
-                    self.cfg, self.mesh, direction, lo, hi,
+                    self.cfg, self.mesh, self._direct_direction(src), lo, hi,
                     model_axis=self.m)
             else:
-                fn = make_reshard_experts_chunk(
-                    self.cfg, self.mesh, direction, lo, hi,
-                    model_axis=self.m)
+                fn = make_reshard_experts_pair_chunk(
+                    self.cfg, self.mesh, src, dst, lo, hi,
+                    model_axis=self.m, data_axes=(self.da,))
             self._chunk_reshard_fns[key] = fn
         return self._chunk_reshard_fns[key]
 
@@ -207,38 +227,47 @@ class SwitchExecutor:
         vm = np.stack([padp(p.valid) for p in plans])
         return (sp, dp, vm), pmax
 
-    def _plan(self, direction: str, live, *, mutate: bool):
-        """Per-data-group plans + fresh allocators. mutate=False keeps the
-        requests untouched (chunked mode applies metadata at commit)."""
-        target = TP if direction == "ep_to_tp" else EP
-        new_alloc = [PageAllocator(self.cc, self.cfg, self.G, target)
+    def _plan(self, src, dst, live, *, mutate: bool, cur_alloc=None):
+        """Per-data-group plans + destination allocators for a src->dst
+        switch. Same-KV-view pairs are identity on the KV side: the live
+        allocators and every request's pages/owner pass through untouched.
+        mutate=False keeps the requests untouched (chunked mode applies
+        metadata at commit)."""
+        kv_dir = kv_migration_direction(src, dst)
+        if kv_dir is None:
+            empty = (np.zeros((self.Dd, self.G, 8), np.int32),
+                     np.zeros((self.Dd, self.G, 8), np.int32),
+                     np.zeros((self.Dd, self.G, 8), bool))
+            return empty, 8, [], cur_alloc, None
+        new_alloc = [PageAllocator(self.cc, self.cfg, self.G, dst)
                      for _ in range(self.Dd)]
         plans, assignments = [], []
         for d in range(self.Dd):
             reqs = [r for r in live if r.data_group == d and r.pages]
-            plan, asg = plan_switch(direction, reqs, self.cfg, self.cc,
+            plan, asg = plan_switch(kv_dir, reqs, self.cfg, self.cc,
                                     new_alloc[d], self.G)
             plans.append(plan)
             assignments.extend(asg)
         if mutate:
             apply_assignments(assignments)
         arrays, pmax = self._stack_plans(plans)
-        return arrays, pmax, assignments, new_alloc
+        return arrays, pmax, assignments, new_alloc, kv_dir
 
     # ------------------------------------------------------------------
     # monolithic mode (the baseline; pause == total)
     # ------------------------------------------------------------------
-    def monolithic(self, direction: str, live, experts, kv_flat):
-        """Full stop-the-world switch. Returns (experts', kv_flat', alloc',
-        stats); request metadata is rewritten in place."""
+    def monolithic(self, src, dst, live, experts, kv_flat, cur_alloc=None):
+        """Full stop-the-world src->dst switch. Returns (experts', kv_flat',
+        alloc', stats); request metadata is rewritten in place."""
+        src, dst = get_layout(src), get_layout(dst)
         t0 = time.perf_counter()
-        (sp, dp, vm), pmax, _, new_alloc = self._plan(direction, live,
-                                                      mutate=True)
+        (sp, dp, vm), pmax, _, new_alloc, kv_dir = self._plan(
+            src, dst, live, mutate=True, cur_alloc=cur_alloc)
         t_plan = time.perf_counter() - t0
 
         t1 = time.perf_counter()
         if self.cfg.is_moe:
-            kind, fn = self.reshard_fn(direction, experts)
+            kind, fn = self.reshard_fn(src, dst, experts)
             if kind == "direct":
                 w13, w2 = fn(experts["w13"], experts["w2"])
                 experts = {"w13": w13, "w2": w2}
@@ -249,15 +278,15 @@ class SwitchExecutor:
         t_w = time.perf_counter() - t1
 
         t2 = time.perf_counter()
-        if self.Lk > 0:
-            mfn = self.migrate_fn(direction, pmax)
+        if self.Lk > 0 and kv_dir is not None:
+            mfn = self.migrate_fn(kv_dir, pmax)
             kv_flat = mfn(kv_flat, jnp.asarray(sp), jnp.asarray(dp),
                           jnp.asarray(vm))
             jax.block_until_ready(kv_flat)
         t_kv = time.perf_counter() - t2
 
         total = time.perf_counter() - t0
-        stats = SwitchStats(direction=direction, total_s=total,
+        stats = SwitchStats(direction=f"{src}_to_{dst}", total_s=total,
                             pause_s=total, plan_s=t_plan, weights_s=t_w,
                             kv_s=t_kv, kv_pages=int(vm.sum()), chunks=1,
                             live_requests=len(live))
@@ -277,29 +306,33 @@ class SwitchExecutor:
                         self.Lk * i // n, self.Lk * (i + 1) // n))
         return out
 
-    def start(self, target: str, live, experts, kv_flat,
-              chunk_layers: int) -> SwitchSession:
-        """Plan the switch and stage the destination buffers. Source
-        buffers and request metadata stay live for overlap decode."""
+    def start(self, src, dst, live, experts, kv_flat,
+              chunk_layers: int, cur_alloc=None) -> SwitchSession:
+        """Plan the src->dst switch and stage the destination buffers.
+        Source buffers and request metadata stay live for overlap decode."""
         assert self.session is None, "switch already in progress"
-        direction = "ep_to_tp" if target == TP else "tp_to_ep"
+        src, dst = get_layout(src), get_layout(dst)
         t0 = time.perf_counter()
-        plan_arrays, pmax, assignments, new_alloc = self._plan(
-            direction, live, mutate=False)
+        plan_arrays, pmax, assignments, new_alloc, kv_dir = self._plan(
+            src, dst, live, mutate=False, cur_alloc=cur_alloc)
         experts_dst = None
         if self.cfg.is_moe:
-            sds = expert_dst_struct(self.cfg, self.G, direction, experts)
+            src_lay, dst_lay = pair_expert_layouts(self.cfg, src, dst,
+                                                   self.G, self.chips)
+            sds = expert_pair_dst_struct(self.cfg, src_lay, dst_lay, experts)
+            dst_ax = dst.expert_axes((self.da,), self.m)
             experts_dst = {
                 k: self._zeros(s.shape, s.dtype,
-                               (None, self.m, None, None, None))
+                               (None, dst_ax, None, None, None))
                 for k, s in sds.items()}
         kv_dst = None
-        if self.Lk > 0:
+        if self.Lk > 0 and kv_dir is not None:
             kv_dst = self._zeros(kv_flat.shape, kv_flat.dtype,
                                  (self.da, self.m))
         kv_pages = int(plan_arrays[2].sum())
         self.session = SwitchSession(
-            direction=direction, t_start=t0,
+            src=src, dst=dst, direction=f"{src}_to_{dst}", kv_dir=kv_dir,
+            t_start=t0,
             plan_arrays=tuple(jnp.asarray(a) for a in plan_arrays),
             pmax=pmax, assignments=assignments,
             new_alloc=new_alloc, chunks=self._layer_chunks(chunk_layers),
@@ -316,13 +349,13 @@ class SwitchExecutor:
         assert s is not None and not s.done
         w_lo, w_hi, kv_lo, kv_hi = s.chunks[s.next_chunk]
         if self.cfg.is_moe and w_hi > w_lo:
-            fn = self.chunk_reshard_fn(s.direction, w_lo, w_hi)
+            fn = self.chunk_reshard_fn(s.src, s.dst, w_lo, w_hi)
             d13, d2 = fn(experts["w13"], experts["w2"],
                          s.experts_dst["w13"], s.experts_dst["w2"])
             s.experts_dst = {"w13": d13, "w2": d2}
         if s.kv_dst is not None and kv_hi > kv_lo:
             sp, dp, vm = s.plan_arrays                 # device-resident
-            mfn = self.chunk_migrate_fn(s.direction, kv_lo, kv_hi, s.pmax)
+            mfn = self.chunk_migrate_fn(s.kv_dir, kv_lo, kv_hi, s.pmax)
             s.kv_dst = mfn(kv_flat, s.kv_dst, sp, dp, vm)
         s.next_chunk += 1
         return not s.done
@@ -348,7 +381,7 @@ class SwitchExecutor:
                     s.new_alloc[d].alloc(max(a.new_owner, 0), 1))
             lo_idx = max(a.snap_kv_len - 1, 0) // page
             hi_idx = min(len(r.pages) - 1, max(r.kv_len - 1, 0) // page)
-            row = (r.owner_rank if s.direction == "ep_to_tp"
+            row = (r.owner_rank if s.kv_dir == "ep_to_tp"
                    else a.new_owner)
             for i in range(lo_idx, hi_idx + 1):
                 per[d][max(row, 0)].append((r.pages[i], a.new_pages[i]))
@@ -378,12 +411,12 @@ class SwitchExecutor:
                 # fixed-width blocks -> one compiled delta executable per
                 # direction, regardless of how dirty the window got
                 W = DELTA_PMAX
-                mfn = self.chunk_migrate_fn(s.direction, 0, self.Lk, W)
+                mfn = self.chunk_migrate_fn(s.kv_dir, 0, self.Lk, W)
                 nblocks = max(-(-len(pairs) // W)
                               for rows in per for pairs in rows.values())
                 for b in range(nblocks):
                     plans = [pairs_to_plan(
-                        s.direction,
+                        s.kv_dir,
                         {g: per[d][g][b * W:(b + 1) * W]
                          for g in range(self.G)}, self.G)
                         for d in range(self.Dd)]

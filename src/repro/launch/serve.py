@@ -1,10 +1,23 @@
 """Serving launcher: run the Moebius engine on a workload.
 
+The engine keeps every layout named in ``--layouts`` resident and the
+switch policy picks between them: the registered specs are ``tp``, ``ep``,
+and the hybrid ``tpep`` (TP attention + experts over the full mesh). With
+more than two layouts the coordinator scores candidates with the analytical
+cost model (KV-feasibility included) behind the paper's hysteresis band.
+
 Examples (CPU, 8 host devices):
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload rollout --scale 0.02 --mesh 1x4 --policy rollout
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload bursty --scale 0.05 --mesh 2x4
+  # three-layout runtime: tpep is a reachable operating point
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload bursty --scale 0.05 --mesh 2x4 --layouts tp,ep,tpep
+  # serve statically on the hybrid layout
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload rollout --scale 0.02 --mesh 2x4 --policy static-tpep \
+      --layouts tp,ep,tpep
 """
 import os
 if "REPRO_HOST_DEVICES" in os.environ:
@@ -19,7 +32,7 @@ def main():
     import jax
 
     from repro.configs import get_config
-    from repro.core.layouts import EP, TP
+    from repro.core.layouts import EP, TP, get_layout
     from repro.core.policy import PolicyConfig, calibrate_threshold
     from repro.launch.mesh import make_mesh
     from repro.serving.engine import EngineConfig, MoebiusEngine
@@ -34,9 +47,12 @@ def main():
     ap.add_argument("--workload", default="rollout",
                     choices=["rollout", "bursty"])
     ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--layouts", default="tp,ep",
+                    help="comma-separated registered layouts the engine "
+                         "keeps resident (e.g. tp,ep,tpep)")
     ap.add_argument("--policy", default="interactive",
                     choices=["interactive", "rollout", "static-tp",
-                             "static-ep"])
+                             "static-ep", "static-tpep"])
     ap.add_argument("--t-high", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=5000)
@@ -47,6 +63,8 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    layouts = tuple(get_layout(l.strip())
+                    for l in args.layouts.split(",") if l.strip())
     th = args.t_high or max(8, calibrate_threshold(cfg, g))
     if args.policy == "interactive":
         pol = PolicyConfig.interactive(th)
@@ -56,10 +74,11 @@ def main():
         start = EP
     else:
         pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
-        start = TP if args.policy == "static-tp" else EP
+        start = get_layout(args.policy.removeprefix("static-"))
     cc = CacheConfig(page_size=16, pages_ep=256, max_pages_per_req=64)
     eng = MoebiusEngine(cfg, mesh, cc,
                         ecfg=EngineConfig(start_layout=start,
+                                          layouts=layouts,
                                           ladder=(g, 4 * g, 16 * g),
                                           prefill_chunk=64, policy=pol,
                                           seed=args.seed))
@@ -72,6 +91,7 @@ def main():
     summary = eng.run(max_steps=args.max_steps)
     summary["switches"] = len(eng.switch_records)
     summary["final_layout"] = eng.active
+    summary["layouts"] = [str(l) for l in eng.layouts]
     print(json.dumps(summary, indent=1))
 
 

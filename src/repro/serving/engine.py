@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layouts import EP, TP, group_info, pack_params
+from repro.core.layouts import (EP, TP, LayoutSpec, get_layout, group_info,
+                                pack_params)
 from repro.core.policy import PolicyConfig, SwitchCoordinator
 from repro.core.residency import ResidentRuntime
 from repro.core.switch_exec import SwitchExecutor
@@ -37,6 +38,9 @@ from repro.serving.steps import build_decode_pack, build_serve_step
 @dataclass
 class EngineConfig:
     start_layout: str = TP
+    # layouts the engine keeps resident and the policy may switch between
+    # (any registered LayoutSpec names, e.g. ("tp", "ep", "tpep"))
+    layouts: tuple = (TP, EP)
     ladder: tuple = (4, 8, 16, 32)
     prefill_chunk: int = 32
     temperature: float = 0.0
@@ -76,26 +80,36 @@ class MoebiusEngine:
         self.m, self.da = model_axis, data_axis
         self.G = mesh.shape[model_axis]
         self.Dd = mesh.shape[data_axis]
+        self.chips = self.Dd * self.G
         self.gi = group_info(cfg, self.G)
+        self.layouts: tuple[LayoutSpec, ...] = tuple(
+            get_layout(l) for l in self.ecfg.layouts)
+        start = get_layout(self.ecfg.start_layout)
+        if start not in self.layouts:
+            self.layouts = self.layouts + (start,)
+        # full-mesh layouts split each prefill chunk 1/G per rank
+        q = max(s.prefill_quantum(self.G) for s in self.layouts)
+        self.prefill_chunk = -(-self.ecfg.prefill_chunk // q) * q
         if params_global is None:
             params_global = init_params(cfg, jax.random.PRNGKey(self.ecfg.seed))
 
-        # --- dual-resident control plane; single-copy expert data plane ---
+        # --- N-resident control plane; single-copy expert data plane ---
         self.packs: dict[str, dict] = {}
         self._expert_store: dict[str, dict] = {}   # only active layout kept
-        for layout in (TP, EP):
-            stored = pack_params(cfg, params_global, layout, self.G)
-            pk = build_decode_pack(cfg, stored, layout, self.G)
+        for spec in self.layouts:
+            stored = pack_params(cfg, params_global, spec, self.G,
+                                 expert_G=spec.expert_group(self.G,
+                                                            self.chips))
+            pk = build_decode_pack(cfg, stored, spec, self.G)
             if cfg.is_moe:
                 moe = pk["layers"]["moe"]
-                self._expert_store[layout] = {
+                self._expert_store[spec] = {
                     "w13": moe.pop("w13"), "w2": moe.pop("w2")}
-            self.packs[layout] = pk
-        self.active = self.ecfg.start_layout
+            self.packs[spec] = pk
+        self.active = start
         if cfg.is_moe:
-            # free the inactive layout's expert copy (single resident copy)
-            inactive = EP if self.active == TP else TP
-            self._experts = self._expert_store[self.active]
+            # free the inactive layouts' expert copies (single resident copy)
+            self._experts = self._expert_store.pop(self.active)
             del self._expert_store
 
         # --- unified KV buffer ---
@@ -105,7 +119,7 @@ class MoebiusEngine:
         self.alloc = [PageAllocator(cc, cfg, self.G, self.active)
                       for _ in range(self.Dd)]
 
-        # --- resident runtimes (both layouts, ladder of decode rungs) ---
+        # --- resident runtimes (all layouts, ladder of decode rungs) ---
         self.rt = ResidentRuntime(ladder=tuple(
             b for b in self.ecfg.ladder if b % self.G == 0 or b >= self.G
         ) or (self.G,))
@@ -122,8 +136,12 @@ class MoebiusEngine:
         self.finished: list[Request] = []
         self.metrics = ServeMetrics()
         self.switch_records: list[SwitchRecord] = []
+        # the policy runs on the engine's virtual clock (time_scale-aware),
+        # never wall time: cooldowns stay correct under scaled replay
         self.coord = SwitchCoordinator(cfg, self.G, self.ecfg.policy,
-                                       active=self.active)
+                                       active=self.active, clock=self.now,
+                                       layouts=self.layouts,
+                                       chips=self.chips)
         self._step_i = 0
         self._key = jax.random.PRNGKey(self.ecfg.seed + 1)
         self._t0 = time.monotonic()
@@ -137,13 +155,19 @@ class MoebiusEngine:
     # ------------------------------------------------------------------
     # step functions (resident; warmed at startup or first use)
     # ------------------------------------------------------------------
-    def _ladder_for(self, layout: str):
-        if layout == EP:
-            return tuple(sorted({max(self.G, -(-b // self.G) * self.G)
-                                 for b in self.rt.ladder}))
-        return self.rt.ladder
+    def _ladder_for(self, layout: LayoutSpec):
+        return get_layout(layout).decode_ladder(self.rt.ladder, self.G)
 
-    def _decode_fn(self, layout: str, B: int):
+    def _pick_B(self, layout: LayoutSpec, need_slots: int) -> int:
+        """Smallest ladder rung (in this layout's quantum) with
+        >= need_slots batch slots."""
+        ladder = self._ladder_for(layout)
+        for b in ladder:
+            if b >= need_slots:
+                return b
+        return ladder[-1]
+
+    def _decode_fn(self, layout: LayoutSpec, B: int):
         key = (layout, "decode", B)
         if key not in self._step_fns:
             self._step_fns[key] = build_serve_step(
@@ -152,20 +176,20 @@ class MoebiusEngine:
                 model_axis=self.m)
         return self._step_fns[key]
 
-    def _prefill_fn(self, layout: str):
+    def _prefill_fn(self, layout: LayoutSpec):
         key = (layout, "prefill")
         if key not in self._step_fns:
-            Bp = 1 if layout == TP else self.G
+            Bp = get_layout(layout).prefill_width(self.G)
             self._step_fns[key] = build_serve_step(
                 self.cfg, self.mesh, layout, self.cc, Bp,
-                Sq=self.ecfg.prefill_chunk,
+                Sq=self.prefill_chunk,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
                 model_axis=self.m)
         return self._step_fns[key]
 
-    def warmup(self, layouts=(TP, EP)):
-        """Compile both layouts' runtimes at startup (paper §4.4)."""
-        for lo in layouts:
+    def warmup(self, layouts=None):
+        """Compile every resident layout's runtime at startup (paper §4.4)."""
+        for lo in (self.layouts if layouts is None else layouts):
             self._prefill_fn(lo)
             for b in self._ladder_for(lo):
                 self._decode_fn(lo, b)
@@ -187,11 +211,16 @@ class MoebiusEngine:
 
     def _admit(self):
         t = self.now()
+        # balance on every request the group still has to serve — running,
+        # prefilling, AND waiting — so a burst admitted in one iteration
+        # doesn't pile onto whichever group momentarily runs the least
+        load = [0] * self.Dd
+        for q in list(self.running.values()) + self.prefilling + self.waiting:
+            load[q.data_group] += 1
         while self.pending and self.pending[0].arrival_s <= t:
             r = self.pending.popleft()
-            r.data_group = min(range(self.Dd),
-                               key=lambda d: sum(1 for q in self.running.values()
-                                                 if q.data_group == d))
+            r.data_group = min(range(self.Dd), key=lambda d: load[d])
+            load[r.data_group] += 1
             max_tok = (self.cc.max_pages_per_req * self.cc.page_size
                        - r.prompt_len - 1)
             r.max_new_tokens = max(1, min(r.max_new_tokens, max_tok))
@@ -215,9 +244,9 @@ class MoebiusEngine:
         n_pages = pages_needed(r.prompt_len + r.target_len + 1,
                                self.cc.page_size)
         n_pages = min(n_pages, self.cc.max_pages_per_req)
-        if self.active == EP:
+        if self.active.kv_per_rank:
             load = self._ep_rank_load(d)
-            cap = self._ladder_for(EP)[-1] // self.G
+            cap = self._ladder_for(self.active)[-1] // self.G
             order = sorted(range(self.G), key=lambda g: load[g])
             for g in order:
                 if load[g] < cap and self.alloc[d].free_pages(g) >= n_pages:
@@ -236,12 +265,17 @@ class MoebiusEngine:
         self.prefilling.append(r)
         return True
 
+    def _prefill_row(self, r: Request) -> int:
+        """Batch row of a prefilling request: rank-sharded layouts run one
+        request per owning model rank; replicated layouts use row 0."""
+        return r.owner_rank if self.active.slots_sharded else 0
+
     def _run_prefill(self):
-        """One chunked prefill step (batched across data groups / EP ranks)."""
+        """One chunked prefill step (batched across data groups / ranks)."""
         if not self.prefilling:
             return
-        chunk = self.ecfg.prefill_chunk
-        Bp = 1 if self.active == TP else self.G
+        chunk = self.prefill_chunk
+        Bp = self.active.prefill_width(self.G)
         maxp = self.cc.max_pages_per_req
         toks = np.zeros((self.Dd, Bp, chunk), np.int32)
         pos = np.zeros((self.Dd, Bp), np.int32)
@@ -250,7 +284,7 @@ class MoebiusEngine:
         picked: list[Request] = []
         for r in self.prefilling:
             d = r.data_group
-            row = 0 if self.active == TP else r.owner_rank
+            row = self._prefill_row(r)
             if vl[d, row] > 0:
                 continue                      # row already used this step
             n = min(chunk, r.prompt_len - r.prefill_pos)
@@ -270,7 +304,7 @@ class MoebiusEngine:
         t = self.now()
         for r in picked:
             d = r.data_group
-            row = 0 if self.active == TP else r.owner_rank
+            row = self._prefill_row(r)
             r.prefill_pos += int(vl[d, row])
             if r.prefill_pos >= r.prompt_len:
                 first = int(nxt[d, row])
@@ -290,7 +324,7 @@ class MoebiusEngine:
         r.finish_s = self.now()
         self.running.pop(r.rid, None)
         d = r.data_group
-        rank = r.owner_rank if self.active == EP else 0
+        rank = r.owner_rank if self.active.kv_per_rank else 0
         self.alloc[d].release(max(rank, 0), r.pages)
         r.pages = []
         self.finished.append(r)
@@ -303,7 +337,7 @@ class MoebiusEngine:
         if need > self.cc.max_pages_per_req:
             return False
         d = r.data_group
-        rank = r.owner_rank if self.active == EP else 0
+        rank = r.owner_rank if self.active.kv_per_rank else 0
         try:
             r.pages.extend(self.alloc[d].alloc(max(rank, 0),
                                                need - len(r.pages)))
@@ -325,9 +359,9 @@ class MoebiusEngine:
             off = self._step_i % len(lst)      # fairness under oversubscription
             return lst[off:] + lst[:off]
 
-        if self.active == TP:
+        if not self.active.slots_sharded:
             need = max(len(v) for v in per_group.values())
-            B = self.rt.pick_bs(need)
+            B = self._pick_B(self.active, need)
             for d, reqs in per_group.items():
                 for i, r in enumerate(rotated(reqs)):
                     r.slot = i if i < B else None
@@ -342,12 +376,7 @@ class MoebiusEngine:
                     r.slot_local = load[g]
                     load[g] += 1
                 bs_need = max(bs_need, max(load))
-            B = None
-            for b in self._ladder_for(EP):
-                if b // self.G >= bs_need:
-                    B = b
-                    break
-            B = B or self._ladder_for(EP)[-1]
+            B = self._pick_B(self.active, bs_need * self.G)
             bs_loc = B // self.G
             for r in self.running.values():
                 # requests beyond this rung's per-rank slots wait a turn
@@ -392,6 +421,8 @@ class MoebiusEngine:
 
     def execute_switch(self, target: str):
         """Live switch between decode iterations; no request is drained.
+        The target may be ANY registered layout the engine keeps resident —
+        the switch plan is the src->target slice-ownership diff.
 
         Monolithic mode (chunk_layers == 0) pauses decode for the whole
         migration. Chunked mode stages the destination buffers layer chunk
@@ -399,14 +430,17 @@ class MoebiusEngine:
         the intact source layout), then pauses only for the dirty-page
         delta + commit (DESIGN.md §4.3).
         """
-        assert target != self.active
+        target = get_layout(target)
+        assert target is not self.active, "switch target == active layout"
+        assert target in self.layouts, \
+            f"layout {target} not resident (EngineConfig.layouts)"
         if self.ecfg.chunk_layers > 0:
             rec = self._execute_switch_chunked(target)
         else:
-            direction = "ep_to_tp" if target == TP else "tp_to_ep"
             experts = self._experts if self.cfg.is_moe else None
             experts, self.kv_flat, self.alloc, st = self.switcher.monolithic(
-                direction, self._live(), experts, self.kv_flat)
+                self.active, target, self._live(), experts, self.kv_flat,
+                cur_alloc=self.alloc)
             if self.cfg.is_moe:
                 self._experts = experts
             self.active = target
@@ -418,10 +452,11 @@ class MoebiusEngine:
         self.switch_records.append(rec)
         self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
 
-    def _execute_switch_chunked(self, target: str) -> SwitchRecord:
+    def _execute_switch_chunked(self, target: LayoutSpec) -> SwitchRecord:
         sess = self.switcher.start(
-            target, self._live(), self._experts if self.cfg.is_moe else None,
-            self.kv_flat, self.ecfg.chunk_layers)
+            self.active, target, self._live(),
+            self._experts if self.cfg.is_moe else None,
+            self.kv_flat, self.ecfg.chunk_layers, cur_alloc=self.alloc)
         while not sess.done:
             self.switcher.advance(
                 self._experts if self.cfg.is_moe else None, self.kv_flat)

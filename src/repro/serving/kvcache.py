@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.layouts import EP, TP, GroupInfo, group_info
+from repro.core.layouts import LayoutSpec, get_layout, group_info
 from repro.models.common import ModelConfig
 
 
@@ -44,9 +44,10 @@ class CacheConfig:
         return self.pages_ep * cfg.num_kv_heads // gi.kv_local
 
     def view_shape(self, cfg: ModelConfig, G: int, layout: str) -> tuple:
+        """Shape of the flat pool under `layout`'s KV view (spec.kv_view)."""
         gi = group_info(cfg, G)
         L = num_kv_layers(cfg)
-        if layout == EP:
+        if get_layout(layout).kv_view == "ep":
             return (L, 2, self.pages_ep, self.page_size,
                     cfg.num_kv_heads, cfg.dh)
         return (L, 2, self.pages_tp(cfg, G), self.page_size,
@@ -54,7 +55,7 @@ class CacheConfig:
 
     def capacity_tokens(self, cfg: ModelConfig, G: int, layout: str) -> int:
         """Group-wide token capacity (excluding the null pages)."""
-        if layout == EP:
+        if get_layout(layout).kv_view == "ep":
             return G * (self.pages_ep - 1) * self.page_size
         return (self.pages_tp(cfg, G) - 1) * self.page_size
 
@@ -73,23 +74,25 @@ def num_kv_layers(cfg: ModelConfig) -> int:
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Page allocator for one data group under one layout.
+    """Page allocator for one data group under one layout spec.
 
-    EP: pages are per-model-rank pools (page ids local to the rank).
-    TP: one shared pool (page ids global to the group).
+    spec.kv_per_rank: pages are per-model-rank pools (page ids local to the
+    rank). Pooled views: one shared pool (page ids global to the group).
     Page 0 is reserved (null page).
     """
 
-    def __init__(self, cc: CacheConfig, cfg: ModelConfig, G: int, layout: str):
-        self.cc, self.layout, self.G = cc, layout, G
-        if layout == EP:
+    def __init__(self, cc: CacheConfig, cfg: ModelConfig, G: int,
+                 layout: str | LayoutSpec):
+        self.spec = get_layout(layout)
+        self.cc, self.layout, self.G = cc, self.spec, G
+        if self.spec.kv_per_rank:
             self.free = [list(range(cc.pages_ep - 1, 0, -1)) for _ in range(G)]
         else:
             n = cc.pages_tp(cfg, G)
             self.free = [list(range(n - 1, 0, -1))]
 
     def pool_of(self, rank: int) -> list:
-        return self.free[rank if self.layout == EP else 0]
+        return self.free[rank if self.spec.kv_per_rank else 0]
 
     def free_pages(self, rank: int) -> int:
         return len(self.pool_of(rank))

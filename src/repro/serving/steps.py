@@ -24,8 +24,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.layouts import (EP, TP, TPEP, attn_rank_major,
-                                expert_layout, group_info, padded_vocab)
+from repro.core.layouts import (LayoutSpec, attn_rank_major, get_layout,
+                                group_info)
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models.common import (ModelConfig, apply_norm, apply_rope,
                                  rmsnorm, rope_cos_sin)
@@ -45,12 +45,13 @@ def build_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
     TP expands attention to rank-major (the paper's dual-mode attention
     buffer); EP keeps global attention weights replicated.
     """
+    spec = get_layout(layout)
     lp = params["layers"]
     pack = {"embed": params["embed"], "final_norm": params["final_norm"]}
     if "lm_head" in params:
         pack["lm_head"] = params["lm_head"]
     lpack = {"attn_norm": lp["attn_norm"], "mlp_norm": lp["mlp_norm"]}
-    if layout != EP:
+    if spec.dense_tp:
         lpack["attn"] = attn_rank_major(cfg, lp["attn"], G)   # (L, G, ...)
     else:
         lpack["attn"] = lp["attn"]
@@ -65,9 +66,10 @@ def build_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
 def decode_pack_specs(cfg: ModelConfig, pack, layout: str,
                       m: str = "model", ep_axes=None):
     """PartitionSpec pytree matching a decode pack (works on shapes).
-    ep_axes: expert-sharding axes (TPEP: the full mesh)."""
-    exp_ax = ep_axes if (layout == TPEP and ep_axes) else m
-    vocab_spec = P(m, None) if layout != EP else P()
+    ep_axes: expert-sharding axes (full-mesh layouts: data x model)."""
+    spec = get_layout(layout)
+    exp_ax = ep_axes if (spec.expert_full_mesh and ep_axes) else m
+    vocab_spec = P(m, None) if spec.dense_tp else P()
     specs = {"embed": vocab_spec,
              "final_norm": jax.tree.map(lambda _: P(), pack["final_norm"])}
     if "lm_head" in pack:
@@ -75,20 +77,23 @@ def decode_pack_specs(cfg: ModelConfig, pack, layout: str,
     lp = pack["layers"]
     lspec = {"attn_norm": jax.tree.map(lambda _: P(), lp["attn_norm"]),
              "mlp_norm": jax.tree.map(lambda _: P(), lp["mlp_norm"])}
-    if layout != EP:
+    if spec.dense_tp:
         lspec["attn"] = {k: P(*([None, m] + [None] * (v.ndim - 2)))
                          for k, v in lp["attn"].items()}
     else:
         lspec["attn"] = jax.tree.map(lambda _: P(), lp["attn"])
     if cfg.is_moe:
+        # shared experts follow the expert compute path: width-sharded under
+        # the TP expert rule (partial-psum), replicated under EP dispatch
+        shared_tp = spec.expert_kind == "tp"
         ms: dict = {"router": P(),
                     "w13": P(None, exp_ax, None, None, None),
                     "w2": P(None, exp_ax, None, None, None)}
         for k in ("shared_wg", "shared_wu", "shared_w2", "shared_gate"):
             if k in lp["moe"]:
-                if layout == TP and k in ("shared_wg", "shared_wu"):
+                if shared_tp and k in ("shared_wg", "shared_wu"):
                     ms[k] = P(None, m, None)
-                elif layout == TP and k == "shared_w2":
+                elif shared_tp and k == "shared_w2":
                     ms[k] = P(None, None, m)
                 else:
                     ms[k] = P()
@@ -105,9 +110,9 @@ def decode_pack_specs(cfg: ModelConfig, pack, layout: str,
 # Per-rank building blocks (inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _embed_lookup(cfg, pack, tokens, layout: str, m: str,
+def _embed_lookup(cfg, pack, tokens, spec: LayoutSpec, m: str,
                   scale: bool | None = None):
-    """tokens (bs,) -> x (bs, D). TP: vocab-sharded gather + psum.
+    """tokens (bs,) -> x (bs, D). TP-like: vocab-sharded gather + psum.
     The sqrt(D) embed scale applies only to families whose reference
     forward scales (transformer lm_forward); ssm/hybrid/encdec do not."""
     emb = pack["embed"]
@@ -115,7 +120,7 @@ def _embed_lookup(cfg, pack, tokens, layout: str, m: str,
         scale = cfg.family in ("dense", "moe", "vlm")
     sc = (jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.compute_dtype)
           if scale else jnp.ones((), cfg.compute_dtype))
-    if layout == EP:
+    if not spec.dense_tp:
         return emb[tokens].astype(cfg.compute_dtype) * sc
     Vloc = emb.shape[0]
     r = lax.axis_index(m)
@@ -158,14 +163,15 @@ def _write_pages(pool_l, k, v, page_ids, slots):
     return pool_l.at[:, pid, sl].set(kv.astype(pool_l.dtype))
 
 
-def _ffn(cfg, lpk, h_flat, layout, m, lay_exp, cap_factor, ep_axes=None):
-    """h_flat (T, D) -> (T, D) ffn output; TP returns AFTER psum."""
+def _ffn(cfg, lpk, h_flat, spec: LayoutSpec, m, lay_exp, cap_factor,
+         ep_axes=None):
+    """h_flat (T, D) -> (T, D) ffn output; TP-style paths return AFTER psum."""
     if cfg.is_moe:
-        if layout == TP:
+        if spec.expert_kind == "tp":
             part = moe_decode_tp(cfg, lpk["moe"], h_flat, m,
                                  cap_factor=cap_factor)
             return lax.psum(part, m)
-        if layout == TPEP:
+        if spec.expert_full_mesh:
             # TP attention feeds a replicated batch; each model rank owns
             # its 1/G token slice and dispatches over the FULL mesh
             r = lax.axis_index(m)
@@ -179,13 +185,13 @@ def _ffn(cfg, lpk, h_flat, layout, m, lay_exp, cap_factor, ep_axes=None):
         return moe_decode_ep(cfg, lpk["moe"], h_flat, m, lay_exp,
                              cap_factor=cap_factor)
     mlp = lpk["mlp"]
-    if layout == TP:
+    if spec.dense_tp:
         if cfg.mlp_type == "swiglu":
             hh = jax.nn.silu(h_flat @ mlp["w_gate"]) * (h_flat @ mlp["w_up"])
         else:
             hh = jax.nn.gelu(h_flat @ mlp["w_up"])
         return lax.psum(hh @ mlp["w_down"], m)
-    # EP dense: DP attention + TP MLP -> all_gather tokens, width-local MLP,
+    # DP dense: DP attention + TP MLP -> all_gather tokens, width-local MLP,
     # reduce_scatter back (same per-layer volume as TP's all-reduce)
     full = lax.all_gather(h_flat, m, axis=0, tiled=True)       # (T*G, D)
     if cfg.mlp_type == "swiglu":
@@ -196,14 +202,14 @@ def _ffn(cfg, lpk, h_flat, layout, m, lay_exp, cap_factor, ep_axes=None):
     return lax.psum_scatter(out, m, scatter_dimension=0, tiled=True)
 
 
-def _sample(cfg, pack, x, layout, m, key, temperature, slot0):
+def _sample(cfg, pack, x, spec: LayoutSpec, m, key, temperature, slot0):
     """x (bs, D) -> sampled tokens (bs,) int32 (Gumbel-max; exact)."""
     head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
     logits = (x @ head.T.astype(x.dtype)).astype(jnp.float32)
     V = cfg.vocab_size
     bs = x.shape[0]
-    r = lax.axis_index(m) if layout != EP else None
-    if layout != EP:
+    r = lax.axis_index(m) if spec.dense_tp else None
+    if spec.dense_tp:
         Vloc = head.shape[0]
         col0 = r * Vloc
         cols = col0 + jnp.arange(Vloc)
@@ -248,24 +254,21 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
     `valid_len` = #valid tokens in the chunk (1 for decode).
     """
     m, da = model_axis, data_axes
+    spec = get_layout(layout)
     G = mesh.shape[m]
     gi = group_info(cfg, G)
     ep_axes = tuple(da) + (m,)
-    if layout == TPEP:
-        G_exp = int(np.prod([mesh.shape[a] for a in ep_axes]))
-        lay_exp = expert_layout(cfg, G_exp, EP)
-    else:
-        G_exp = G
-        lay_exp = expert_layout(cfg, G, layout)
+    chips = int(np.prod([mesh.shape[a] for a in ep_axes]))
+    G_exp = spec.expert_group(G, chips)
+    lay_exp = spec.expert_layout(cfg, G, chips)
     page = cc.page_size
     maxp = cc.max_pages_per_req
-    kv_layout = TP if layout == TPEP else layout
-    view = cc.view_shape(cfg, G, kv_layout)   # (L,2,pages,page,Kh,dh)
+    view = cc.view_shape(cfg, G, spec)        # (L,2,pages,page,Kh,dh)
     Lk = view[0]
-    bs = Bslot // G if layout == EP else Bslot
+    bs = Bslot // G if spec.slots_sharded else Bslot
 
-    bspec2 = P(da, m) if layout == EP else P(da, None)
-    bspec3 = P(da, m, None) if layout == EP else P(da, None, None)
+    bspec2 = P(da, m) if spec.slots_sharded else P(da, None)
+    bspec3 = P(da, m, None) if spec.slots_sharded else P(da, None, None)
     flat_spec = P(da, m)
 
     def body(pack, kv_flat, tokens, positions, valid_len, block_table, key):
@@ -277,7 +280,7 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         key = jax.random.wrap_key_data(key)
         # squeeze the rank-major G dim (local size 1) out of TP tensors
         layers = dict(pack["layers"])
-        if layout != EP:
+        if spec.dense_tp:
             layers["attn"] = {k: v.squeeze(1)
                               for k, v in layers["attn"].items()}
         if cfg.is_moe:
@@ -288,7 +291,7 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         pack = dict(pack)
         pack["layers"] = layers
 
-        x = _embed_lookup(cfg, pack, tokens.reshape(-1), layout, m)
+        x = _embed_lookup(cfg, pack, tokens.reshape(-1), spec, m)
         x = x.reshape(bs, Sq, cfg.d_model)
         # zero dead slots: garbage hiddens would otherwise contaminate
         # shared dispatch einsums (NaN*0 == NaN)
@@ -305,18 +308,18 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         def layer_fn(h, xs):
             lpk, pool_l = xs
             hn = apply_norm(cfg, h, lpk["attn_norm"])
-            q, k, v = _project_heads(cfg, lpk["attn"], hn, pos_mat, layout)
+            q, k, v = _project_heads(cfg, lpk["attn"], hn, pos_mat, spec)
             pool_l = _write_pages(pool_l, k, v, page_ids, slots)
             attn = paged_attention(
                 q, pool_l[0], pool_l[1], bt, kv_total,
                 q_offset=positions, window=cfg.sliding_window,
                 backend=attn_backend)
             attn = attn.reshape(bs, Sq, -1) @ lpk["attn"]["wo"]
-            if layout != EP:        # TP and TPEP: heads are sharded
+            if spec.dense_tp:       # heads are sharded -> partial outputs
                 attn = lax.psum(attn, m)
             h = h + attn.astype(h.dtype)
             hn = apply_norm(cfg, h, lpk["mlp_norm"])
-            y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), layout, m, lay_exp,
+            y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), spec, m, lay_exp,
                      cap_factor=None, ep_axes=ep_axes)
             h = h + y.reshape(bs, Sq, -1).astype(h.dtype)
             return h, pool_l
@@ -326,12 +329,12 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         # sample at the last valid position of each slot
         last = jnp.clip(valid_len - 1, 0, Sq - 1)
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
-        nxt = _sample(cfg, pack, xl, layout, m, key, temperature, 0)
+        nxt = _sample(cfg, pack, xl, spec, m, key, temperature, 0)
         out = (nxt.reshape(1, bs), new_pool.reshape(1, 1, -1))
         if return_logits:
             head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
             lg = (xl @ head.T.astype(xl.dtype)).astype(jnp.float32)
-            if layout != EP:
+            if spec.dense_tp:
                 lg = lax.all_gather(lg, m, axis=1, tiled=True)  # (bs, Vp)
             out = out + (lg.reshape(1, bs, -1),)
         return out
@@ -343,7 +346,7 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
 
     out_specs = (bspec2, flat_spec)
     if return_logits:
-        out_specs = out_specs + ((P(da, m, None) if layout == EP
+        out_specs = out_specs + ((P(da, m, None) if spec.slots_sharded
                                   else P(da, None, None)),)
     smapped = shard_map(
         body, mesh=mesh,

@@ -20,7 +20,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.layouts import EP, TP, attn_rank_major, group_info
+from repro.core.layouts import (EP, TP, attn_rank_major, get_layout,
+                                group_info)
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models.common import ModelConfig, apply_norm
 from repro.models.ssm import ssd_decode_step
@@ -103,6 +104,7 @@ def build_ssm_serve_step(cfg: ModelConfig, mesh, layout: str, Bslot: int, *,
       conv: (Dd, B, L, 3, K-1, C) packed [x|B|C] tails (C = max channel dim)
       ssm:  (Dd, B, L, H, P, N)
     TP shards conv x-channels / heads; EP(DP) shards the batch dim."""
+    layout = get_layout(layout)
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     L = cfg.num_layers
@@ -190,6 +192,7 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
     TP: mamba channels + attn heads sharded. EP: full DP (batch sharded,
     weights replicated) — the attention stack replication of the paper's EP.
     """
+    layout = get_layout(layout)
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     L, k_every = cfg.num_layers, cfg.attn_every
@@ -332,6 +335,7 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
     """Decoder decode step. cross_kv (Dd, Bslot, L, 2, T_enc, K, dh) is the
     per-slot cross-attention cache (computed once per request at admission).
     """
+    layout = get_layout(layout)
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     gi = group_info(cfg, G)

@@ -156,6 +156,50 @@ print("OK")
 """, timeout=1200)
 
 
+LAYOUT_NAMES = ("tp", "ep", "tpep")
+ORDERED_PAIRS = [(a, b) for a in LAYOUT_NAMES for b in LAYOUT_NAMES
+                 if a != b]
+
+
+@pytest.mark.parametrize("src,dst", ORDERED_PAIRS,
+                         ids=[f"{a}_to_{b}" for a, b in ORDERED_PAIRS])
+def test_pairwise_switch_preserves_outputs(src, dst):
+    """N-layout acceptance: for EVERY ordered pair of registered layouts
+    (including the hybrid tpep), serving statically on the source and
+    live-switching source -> destination mid-flight must both be
+    byte-identical to a never-switched baseline."""
+    run_multidevice(COMMON + f"""
+src, dst = {src!r}, {dst!r}
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+def make_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200,
+            int(rng.integers(3, 10)))), max_new_tokens=int(rng.integers(4, 12)),
+            arrival_s=0.0) for i in range(6)]
+def run(start, switch_at=None, target=None):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout=start, layouts=("tp", "ep", "tpep"), ladder=(4, 8),
+        prefill_chunk=8, temperature=0.0, policy=pol, seed=0))
+    for r in make_reqs(): eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if switch_at is not None and i == switch_at:
+            eng.execute_switch(target)
+        eng.step(); i += 1
+        assert i < 500
+    return {{r.rid: r.output for r in eng.finished}}
+base = run("tp")                          # never-switched baseline
+assert run(src) == base, f"static {{src}} != baseline"
+assert run(src, 4, dst) == base, f"{{src}}->{{dst}} diverged"
+print("OK")
+""", timeout=1200)
+
+
 def test_reshard_paths_agree():
     run_multidevice(COMMON + """
 from repro.core.switch import (make_reshard_experts,

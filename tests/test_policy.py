@@ -1,7 +1,10 @@
-"""Switch-policy unit tests: hysteresis, cooldown, capacity veto (fake clock)."""
+"""Switch-policy unit tests: hysteresis, cooldown, capacity veto (fake
+clock), N-layout cost-model scoring, and the engine's virtual-clock
+injection."""
 from repro.configs import get_config
-from repro.core.layouts import EP, TP
-from repro.core.policy import (PolicyConfig, SwitchCoordinator,
+from repro.core.layouts import EP, TP, TPEP, get_layout
+from repro.core.policy import (CostModelScorer, HysteresisPolicy,
+                               PolicyConfig, SwitchCoordinator, SwitchPolicy,
                                calibrate_threshold)
 
 
@@ -78,3 +81,96 @@ def test_calibrated_threshold_in_paper_band():
     from repro.core.cost_model import H200
     th = calibrate_threshold(cfg, 8, kv_len=2048, hw=H200)
     assert 128 < th <= 256, th          # paper: crossover in (128, 256]
+
+
+# ---------------------------------------------------------------------------
+# N-layout cost-model policy
+# ---------------------------------------------------------------------------
+
+def _coord3(active=TP, t_high=100, t_low=80, window=2, cooldown=5.0):
+    cfg = get_config("qwen3-235b-a22b")
+    clock = FakeClock()
+    c = SwitchCoordinator(cfg, 8, PolicyConfig(t_high=t_high, t_low=t_low,
+                                               window=window,
+                                               cooldown_s=cooldown),
+                          active=active, clock=clock,
+                          layouts=(TP, EP, TPEP), chips=64)
+    return c, clock
+
+
+def test_three_layouts_use_cost_model_scorer():
+    c, _ = _coord3()
+    assert isinstance(c.policy_impl, SwitchPolicy)
+    assert isinstance(c.policy_impl, HysteresisPolicy)
+    scorer = c.policy_impl.scorer
+    assert isinstance(scorer, CostModelScorer)
+    # every registered layout is ranked along the concurrency order
+    assert set(scorer.ordered) == {TP, EP, TPEP}
+    assert scorer.ordered[0] is TP      # TP wins the low-concurrency end
+
+
+def test_cost_policy_burst_moves_up_and_dip_moves_down():
+    c, clock = _coord3(active=TP)
+    clock.t = 10.0
+    assert not c.observe(50, 0, 10**9).switch          # inside the band
+    d = c.observe(4096, 0, 10**9)                      # burst above T_h
+    assert d.switch and get_layout(d.target) is not TP
+    # sustained dip below T_l walks back down to TP
+    clock.t = 100.0
+    for _ in range(4):
+        d = c.observe(1, 0, 10**9)
+        clock.t += 0.1
+    assert c.active is TP, c.active
+
+
+def test_cost_policy_respects_kv_feasibility():
+    """Pooled-view candidates (tp/tpep, kv_rep=2 on qwen3) are infeasible
+    when the live token set exceeds their halved capacity: the proposal is
+    vetoed and counted, exactly like the 2-layout capacity veto."""
+    c, clock = _coord3(active=EP, window=1)
+    clock.t = 100.0
+    cap_ep = 1000
+    d = c.observe(5, live_tokens=900, ep_capacity_tokens=cap_ep)
+    assert not d.switch
+    assert c.active is EP and c.canceled == 0          # scorer filtered them
+    clock.t = 110.0
+    d = c.observe(5, live_tokens=100, ep_capacity_tokens=cap_ep)
+    assert d.switch and get_layout(d.target) is not EP
+
+
+def test_static_config_disables_any_scorer():
+    """The huge-T_h / negative-T_l convention must stay a hard off switch
+    even when the cost-model scorer is active (benchmarks rely on it)."""
+    c, clock = _coord3(t_high=10**9, t_low=-1, window=1, cooldown=10**9)
+    clock.t = 10.0
+    for count in (1, 500, 10**6):
+        assert not c.observe(count, 0, 10**9).switch
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: the policy clock is the engine's VIRTUAL clock
+# ---------------------------------------------------------------------------
+
+def test_engine_policy_runs_on_virtual_clock(tiny_dense):
+    """Regression: cooldown_s used wall-clock time.monotonic while the
+    engine ran on a scaled virtual clock (EngineConfig.time_scale), so
+    cooldowns were wrong whenever time_scale != 1. The coordinator must use
+    engine.now — virtual seconds — as its clock."""
+    from repro.launch.mesh import make_mesh
+    from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.kvcache import CacheConfig
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = MoebiusEngine(
+        tiny_dense, mesh,
+        CacheConfig(page_size=4, pages_ep=16, max_pages_per_req=8),
+        ecfg=EngineConfig(policy=PolicyConfig(t_high=10**9, t_low=-1,
+                                              cooldown_s=5.0),
+                          time_scale=60.0))
+    assert eng.coord.clock == eng.now
+    # pin a switch at virtual-now; wall time stays ~0 for the whole test,
+    # so under the old wall-clock policy the cooldown could never elapse
+    eng.coord._last_switch = eng.now()
+    assert eng.coord.observe(0, 0, 10**9).reason == "cooldown"
+    # advance the VIRTUAL clock by 12s (0.2 wall-s * time_scale=60)
+    eng._t0 -= 0.2
+    assert eng.coord.observe(0, 0, 10**9).reason != "cooldown"
