@@ -28,12 +28,14 @@ def main() -> None:
                     help="write BENCH_<name>.json per benchmark to this dir")
     args = ap.parse_args()
 
-    from benchmarks import (bench_bursty, bench_crossover, bench_graphs,
-                            bench_memory, bench_roofline, bench_rollout,
-                            bench_switch_cost)
+    from benchmarks import (bench_bursty, bench_crossover,
+                            bench_decode_hotloop, bench_graphs, bench_memory,
+                            bench_roofline, bench_rollout, bench_switch_cost)
     benches = {
         "crossover": lambda: bench_crossover.run(measured=True),
         "switch_cost": bench_switch_cost.run,
+        "decode_hotloop": (lambda: bench_decode_hotloop.run(smoke=True))
+        if args.fast else bench_decode_hotloop.run,
         "graphs": bench_graphs.run,
         "memory": bench_memory.run,
         "rollout": (lambda: bench_rollout.run(steps=1, scale=0.008))

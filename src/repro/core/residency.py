@@ -5,7 +5,9 @@ Each layout's step functions are AOT-compiled once at startup against fixed
 aval/sharding signatures (a ladder of batch-slot sizes, like the paper's
 36-graph capture set). A switch *selects* the other layout's executables —
 a host pointer swap — instead of recompiling. Executables are keyed on
-(layout, kind, batch_slots).
+(layout, kind, batch_slots) — `kind` covers prefill, single-step decode,
+AND the fused decode loop, whose key carries the fused step count:
+(layout, "decode_loop", bs, steps).
 """
 from __future__ import annotations
 
@@ -15,34 +17,20 @@ from dataclasses import dataclass, field
 
 @dataclass
 class ResidentRuntime:
-    executables: dict = field(default_factory=dict)   # (layout, kind, bs) -> compiled
+    # key tuple (layout, kind, *geometry) -> compiled/jitted step fn
+    executables: dict = field(default_factory=dict)
     build_times: dict = field(default_factory=dict)
     ladder: tuple = (4, 8, 16, 32, 64, 128, 256)
 
-    def put(self, layout: str, kind: str, bs: int, compiled, dt: float = 0.0):
-        self.executables[(layout, kind, bs)] = compiled
-        self.build_times[(layout, kind, bs)] = dt
-
-    def get(self, layout: str, kind: str, bs: int):
-        return self.executables[(layout, kind, bs)]
-
-    def pick_bs(self, active: int) -> int:
-        """Smallest ladder rung that fits `active` slots."""
-        for b in self.ladder:
-            if active <= b:
-                return b
-        return self.ladder[-1]
-
-    def has(self, layout: str, kind: str, bs: int) -> bool:
-        return (layout, kind, bs) in self.executables
-
-    def compile_and_put(self, layout: str, kind: str, bs: int, jitted, *args):
-        """AOT lower+compile with ShapeDtypeStruct args; records build time."""
-        t0 = time.perf_counter()
-        compiled = jitted.lower(*args).compile()
-        dt = time.perf_counter() - t0
-        self.put(layout, kind, bs, compiled, dt)
-        return compiled
+    def get_or_build(self, key: tuple, builder):
+        """Resident lookup by full key tuple; builds (and records the build
+        time) on first use. The engine routes every step-fn cache through
+        here so warmup, switch, and steady state share one registry."""
+        if key not in self.executables:
+            t0 = time.perf_counter()
+            self.executables[key] = builder()
+            self.build_times[key] = time.perf_counter() - t0
+        return self.executables[key]
 
     def total_build_time(self) -> float:
         return sum(self.build_times.values())

@@ -54,6 +54,10 @@ def main():
                     choices=["interactive", "rollout", "static-tp",
                              "static-ep", "static-tpep"])
     ap.add_argument("--t-high", type=int, default=None)
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="fuse N decode steps under one dispatch (device-"
+                         "resident decode state; N=1 is the classic "
+                         "per-token host loop)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=5000)
     args = ap.parse_args()
@@ -81,6 +85,7 @@ def main():
                                           layouts=layouts,
                                           ladder=(g, 4 * g, 16 * g),
                                           prefill_chunk=64, policy=pol,
+                                          decode_steps=args.decode_steps,
                                           seed=args.seed))
     if args.workload == "rollout":
         reqs = rollout_batch(RolloutSpec(scale=args.scale), seed=args.seed)

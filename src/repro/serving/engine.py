@@ -28,11 +28,13 @@ from repro.core.residency import ResidentRuntime
 from repro.core.switch_exec import SwitchExecutor
 from repro.models.common import ModelConfig
 from repro.models.registry import init_params
+from repro.serving.device_state import DeviceDecodeState
 from repro.serving.kvcache import (CacheConfig, PageAllocator,
                                    block_table_array, pages_needed)
 from repro.serving.metrics import ServeMetrics
 from repro.serving.request import Request, State
-from repro.serving.steps import build_decode_pack, build_serve_step
+from repro.serving.steps import (build_decode_loop, build_decode_pack,
+                                 build_serve_step)
 
 
 @dataclass
@@ -50,6 +52,16 @@ class EngineConfig:
     # k > 0 = overlapped switch migrating k layers per chunk, decode
     # interleaved between chunks (DESIGN.md §4.3)
     chunk_layers: int = 0
+    # N > 1 fuses N decode steps under one dispatch (lax.fori_loop feeding
+    # sampled tokens back on device, DESIGN.md §5): decode state lives on
+    # device, outputs are fetched once per N steps and consumed one engine
+    # iteration late, and the engine drains to a step boundary before any
+    # switch. N == 1 keeps the classic per-token host loop.
+    decode_steps: int = 1
+    # paged-attention backend for the step fns (None = auto: Pallas on TPU,
+    # interpret elsewhere; "ref" = the pure-jnp oracle — the fast path on
+    # CPU hosts, where interpret-mode Pallas is a debugging mode)
+    attn_backend: str | None = None
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -112,10 +124,14 @@ class MoebiusEngine:
             self._experts = self._expert_store.pop(self.active)
             del self._expert_store
 
-        # --- unified KV buffer ---
+        # --- unified KV buffer (committed to its serve-step sharding up
+        # front: a lazily-committed buffer would change sharding signature
+        # after the first dispatch and recompile every warmed executable) ---
         self.NE = cc.nelems(cfg, self.G)
-        self.kv_flat = jnp.zeros((self.Dd, self.G, self.NE),
-                                 cfg.param_dtype)
+        self.kv_flat = jax.device_put(
+            jnp.zeros((self.Dd, self.G, self.NE), cfg.param_dtype),
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(data_axis, model_axis)))
         self.alloc = [PageAllocator(cc, cfg, self.G, self.active)
                       for _ in range(self.Dd)]
 
@@ -123,7 +139,11 @@ class MoebiusEngine:
         self.rt = ResidentRuntime(ladder=tuple(
             b for b in self.ecfg.ladder if b % self.G == 0 or b >= self.G
         ) or (self.G,))
-        self._step_fns: dict = {}
+        self._pack_cache: dict = {}        # assembled packs, per layout
+        # fused decode (decode_steps > 1): device-resident state + the
+        # one-deep dispatch pipeline (outputs consumed one iteration late)
+        self._dstate: DeviceDecodeState | None = None
+        self._pending: tuple | None = None
         self.switcher = SwitchExecutor(
             cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
             direct_reshard=self.ecfg.direct_reshard)
@@ -168,39 +188,85 @@ class MoebiusEngine:
         return ladder[-1]
 
     def _decode_fn(self, layout: LayoutSpec, B: int):
-        key = (layout, "decode", B)
-        if key not in self._step_fns:
-            self._step_fns[key] = build_serve_step(
+        return self.rt.get_or_build(
+            (layout, "decode", B),
+            lambda: build_serve_step(
                 self.cfg, self.mesh, layout, self.cc, B, Sq=1,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m)
-        return self._step_fns[key]
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+
+    def _decode_loop_fn(self, layout: LayoutSpec, B: int, N: int):
+        return self.rt.get_or_build(
+            (layout, "decode_loop", B, N),
+            lambda: build_decode_loop(
+                self.cfg, self.mesh, layout, self.cc, B, N,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
 
     def _prefill_fn(self, layout: LayoutSpec):
-        key = (layout, "prefill")
-        if key not in self._step_fns:
-            Bp = get_layout(layout).prefill_width(self.G)
-            self._step_fns[key] = build_serve_step(
+        Bp = get_layout(layout).prefill_width(self.G)
+        return self.rt.get_or_build(
+            (layout, "prefill", Bp),
+            lambda: build_serve_step(
                 self.cfg, self.mesh, layout, self.cc, Bp,
                 Sq=self.prefill_chunk,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m)
-        return self._step_fns[key]
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
 
     def warmup(self, layouts=None):
-        """Compile every resident layout's runtime at startup (paper §4.4)."""
+        """Compile every resident layout's runtime at startup (paper §4.4).
+
+        The ACTIVE layout's step fns also run once on throwaway zero
+        inputs shaped/sharded exactly like live traffic, so the XLA
+        compile and the jit fast path are paid here and never inside a
+        serving iteration (jax.jit alone is lazy — building the wrapper
+        compiles nothing). Inactive layouts are built only; their first
+        execution happens behind a switch, whose benches warm explicitly.
+        """
         for lo in (self.layouts if layouts is None else layouts):
             self._prefill_fn(lo)
             for b in self._ladder_for(lo):
                 self._decode_fn(lo, b)
+                if self.ecfg.decode_steps > 1:
+                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)
+            if lo is not self.active:
+                continue
+            pk = self._assemble_pack(lo)
+            key = jax.random.key_data(jax.random.PRNGKey(0))
+            maxp = self.cc.max_pages_per_req
+            Bp = get_layout(lo).prefill_width(self.G)
+            toks = jnp.zeros((self.Dd, Bp, self.prefill_chunk), jnp.int32)
+            z2 = jnp.zeros((self.Dd, Bp), jnp.int32)
+            bt = jnp.zeros((self.Dd, Bp, maxp), jnp.int32)
+            self._prefill_fn(lo)(pk, jnp.zeros_like(self.kv_flat),
+                                 toks, z2, z2, bt, key)
+            for b in self._ladder_for(lo):
+                z2 = jnp.zeros((self.Dd, b), jnp.int32)
+                bt = jnp.zeros((self.Dd, b, maxp), jnp.int32)
+                self._decode_fn(lo, b)(
+                    pk, jnp.zeros_like(self.kv_flat),
+                    jnp.zeros((self.Dd, b, 1), jnp.int32), z2, z2, bt, key)
+                if self.ecfg.decode_steps > 1:
+                    # match the live call's committed shardings exactly
+                    st = DeviceDecodeState(self.mesh, lo, self.Dd, b, maxp,
+                                           da=self.da, m=self.m)
+                    st.warm_scatters()
+                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)(
+                        pk, jnp.zeros_like(self.kv_flat), st.tokens,
+                        st.positions, st.budgets, st.block_tables, key)
 
     def _assemble_pack(self, layout: str) -> dict:
-        pk = self.packs[layout]
-        if self.cfg.is_moe:
-            pk = dict(pk)
-            layers = dict(pk["layers"])
-            layers["moe"] = {**layers["moe"], **self._experts}
-            pk["layers"] = layers
+        """Assembled (control-plane pack + resident experts) pytree, cached
+        per layout; invalidated when a switch reshards the expert store."""
+        pk = self._pack_cache.get(layout)
+        if pk is None:
+            pk = self.packs[layout]
+            if self.cfg.is_moe:
+                pk = dict(pk)
+                layers = dict(pk["layers"])
+                layers["moe"] = {**layers["moe"], **self._experts}
+                pk["layers"] = layers
+            self._pack_cache[layout] = pk
         return pk
 
     # ------------------------------------------------------------------
@@ -408,10 +474,179 @@ class MoebiusEngine:
                                jnp.asarray(toks), jnp.asarray(pos),
                                jnp.asarray(vl), jnp.asarray(bt), key)
         nxt = np.asarray(nxt)
+        self.metrics.decode(len(stepped), 1)
         for r in stepped:
             r.output.append(int(nxt[r.data_group, r.slot]))
             if r.done():
                 self._finish(r)
+
+    # ------------------------------------------------------------------
+    # fused decode (decode_steps > 1): device-resident state, N-step loop
+    # ------------------------------------------------------------------
+    def _decode_step(self):
+        """Dispatch one decode iteration on whichever control plane the
+        engine is configured for (also the overlap step during a chunked
+        switch)."""
+        if self.ecfg.decode_steps > 1:
+            self._decode_fused()
+        else:
+            self._decode_once()
+
+    def _fused_rung(self) -> int:
+        """Ladder rung for the current running set (same sizing rule as the
+        single-step path; slots are sticky between rung changes)."""
+        if not self.active.slots_sharded:
+            per_group = [0] * self.Dd
+            for r in self.running.values():
+                per_group[r.data_group] += 1
+            need = max(per_group)
+        else:
+            load: dict = {}
+            for r in self.running.values():
+                k = (r.data_group, r.owner_rank)
+                load[k] = load.get(k, 0) + 1
+            need = max(load.values()) * self.G
+        return self._pick_B(self.active, max(1, need))
+
+    def _rebuild_dstate(self, B: int) -> DeviceDecodeState:
+        """Fresh device state for a new rung/layout; every running request
+        re-joins through the next `_plan_fused` pass (requires a drained
+        pipeline — callers consume in-flight outputs first)."""
+        for r in self.running.values():
+            r.slot = None
+            r.budget_dev = 0
+        self._dstate = DeviceDecodeState(self.mesh, self.active, self.Dd, B,
+                                         self.cc.max_pages_per_req,
+                                         da=self.da, m=self.m)
+        return self._dstate
+
+    def _plan_fused(self, st: DeviceDecodeState, N: int):
+        """Join free slots, preallocate the next N tokens of pages, and
+        compute the per-slot delta scatters.
+
+        Device budgets hold each slot's TOTAL remaining tokens (decremented
+        on device), so a steady-state slot needs no per-step host writes at
+        all; a budget is clamped to what its allocated pages can hold when
+        the pool runs dry and restored (with the grown block-table row)
+        once pages free up.
+        """
+        page = self.cc.page_size
+        maxp = self.cc.max_pages_per_req
+        joins, grows, plan = [], [], []
+        bs_loc = st.B // self.G if self.active.slots_sharded else st.B
+        # slots are sticky (rotation would re-scatter device rows every
+        # step); fairness under oversubscription comes from join order —
+        # least-served requests claim freed slots first, so no request
+        # waits more than one occupant's remaining budget
+        order = sorted(self.running.values(),
+                       key=lambda q: (len(q.output), q.rid))
+        for r in order:
+            d = r.data_group
+            is_join = False
+            if r.slot is None or r.slot < 0:   # -1 = never slotted (default)
+                if r.inflight:
+                    continue               # mid-flight; never re-slotted
+                if self.active.slots_sharded:
+                    g = r.owner_rank
+                    s = st.free_slot(d, g * bs_loc, (g + 1) * bs_loc)
+                else:
+                    s = st.free_slot(d, 0, st.B)
+                if s is None:
+                    continue               # oversubscribed: waits for a slot
+                st.slot_rid[d, s] = r.rid
+                r.slot = s
+                is_join = True
+            s = r.slot
+            remaining = r.target_len - len(r.output) - r.inflight
+            if remaining <= 0:
+                continue                   # finished on device; awaiting fetch
+            kv_eff = r.kv_len + r.inflight
+            horizon = min(remaining, N)
+            rank = max(r.owner_rank, 0) if self.active.kv_per_rank else 0
+            need = min(pages_needed(kv_eff + horizon - 1, page), maxp)
+            grew = False
+            if need > len(r.pages):
+                got = self.alloc[d].try_alloc(rank, need - len(r.pages))
+                if got:
+                    r.pages.extend(got)
+                    grew = True
+            # tokens the allocated pages can still absorb (the fed token
+            # sits at kv_eff - 1; substep j writes position kv_eff - 1 + j)
+            afford = len(r.pages) * page - kv_eff + 1
+            b_target = remaining if afford >= horizon else max(0, afford)
+            if is_join:
+                joins.append((d, s, r.output[-1], kv_eff - 1, b_target,
+                              r.pages))
+            elif grew or b_target != r.budget_dev:
+                grows.append((d, s, b_target, r.pages))
+            r.budget_dev = b_target
+            steps = min(N, b_target)
+            if steps > 0:
+                plan.append((d, s, r, steps))
+        return joins, grows, plan
+
+    def _decode_fused(self):
+        N = self.ecfg.decode_steps
+        if not self.running:
+            self._drain_decode()
+            return
+        B = self._fused_rung()
+        st = self._dstate
+        if st is None or st.B != B or st.layout is not self.active:
+            self._drain_decode()           # step boundary before a rebuild
+            st = self._rebuild_dstate(B)
+        joins, grows, plan = self._plan_fused(st, N)
+        # deltas must land even when nothing steps: _plan_fused already
+        # recorded the joins in the host mirror, and a budget-clamped join
+        # still needs its token/position/table row on device for later
+        st.apply(joins, grows)
+        if not plan:
+            self._drain_decode()           # nothing live; flush the pipeline
+            return
+        fn = self._decode_loop_fn(self.active, st.B, N)
+        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
+        out, self.kv_flat, tok, pos, bud = fn(
+            self._assemble_pack(self.active), self.kv_flat, st.tokens,
+            st.positions, st.budgets, st.block_tables, key)
+        st.advance(tok, pos, bud)
+        # start the device->host copy now; the tokens are read one engine
+        # iteration later, so host dispatch runs ahead of the device
+        if hasattr(out, "copy_to_host_async"):
+            out.copy_to_host_async()
+        total = 0
+        for d, s, r, steps in plan:
+            r.inflight += steps
+            r.budget_dev -= steps
+            total += steps
+        self.metrics.decode(total, N)
+        prev, self._pending = self._pending, (out, plan, st)
+        if prev is not None:
+            self._consume(prev)
+
+    def _consume(self, pending):
+        """Fetch one fused dispatch's tokens and retire finished requests.
+        Output rows are deterministic in shape: slot budgets stop a request
+        exactly at its target length on device, so `steps` per slot is
+        known at dispatch time."""
+        out, plan, st = pending
+        arr = np.asarray(out)
+        for d, s, r, steps in plan:
+            for j in range(steps):
+                r.output.append(int(arr[d, s, j]))
+            r.inflight -= steps
+            if r.inflight == 0 and r.done():
+                self._finish(r)
+                st.slot_rid[d, s] = -1
+                r.slot = None
+                r.budget_dev = 0
+
+    def _drain_decode(self):
+        """Consume any in-flight fused outputs: request metadata reaches a
+        decode step boundary (required before switch planning, rung/layout
+        rebuilds, and at shutdown)."""
+        if self._pending is not None:
+            prev, self._pending = self._pending, None
+            self._consume(prev)
 
     # ------------------------------------------------------------------
     # switch
@@ -434,6 +669,9 @@ class MoebiusEngine:
         assert target is not self.active, "switch target == active layout"
         assert target in self.layouts, \
             f"layout {target} not resident (EngineConfig.layouts)"
+        # fused decode: fetch in-flight tokens so every request's kv_len and
+        # pages sit at a step boundary before the plan snapshot
+        self._drain_decode()
         if self.ecfg.chunk_layers > 0:
             rec = self._execute_switch_chunked(target)
         else:
@@ -449,6 +687,10 @@ class MoebiusEngine:
                 weights_s=st.weights_s, kv_s=st.kv_s, plan_s=st.plan_s,
                 kv_pages=st.kv_pages, live_requests=st.live_requests,
                 pause_s=st.pause_s, chunks=st.chunks)
+        # layout geometry changed: the device decode state must be rebuilt
+        # and the assembled packs re-point at the resharded expert store
+        self._dstate = None
+        self._pack_cache.clear()
         self.switch_records.append(rec)
         self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
 
@@ -463,7 +705,10 @@ class MoebiusEngine:
             # overlap: decode continues in the source layout on the source
             # buffers while the chunk's collectives are in flight
             self._step_i += 1
-            self._decode_once()
+            self._decode_step()
+        # drain to a step boundary so the commit-time dirty-page delta sees
+        # every KV write the overlap window produced
+        self._drain_decode()
         experts, self.kv_flat, self.alloc, st = self.switcher.commit(
             self._live(), self.kv_flat)
         if self.cfg.is_moe:
@@ -482,9 +727,11 @@ class MoebiusEngine:
     def step(self):
         self._step_i += 1
         self._admit()
-        # policy: sample once per iteration, between steps
+        # policy: sample once per iteration, between steps (in-flight fused
+        # tokens count toward the live-token load)
         in_flight = len(self.running) + len(self.waiting) + len(self.prefilling)
-        live_tokens = sum(r.kv_len + 1 for r in self.running.values())
+        live_tokens = sum(r.kv_len + r.inflight + 1
+                          for r in self.running.values())
         cap_ep = self.cc.capacity_tokens(self.cfg, self.G, EP)
         dec = self.coord.observe(in_flight, live_tokens, cap_ep)
         if dec.switch:
@@ -496,7 +743,7 @@ class MoebiusEngine:
                 still.append(r)
         self.waiting = still
         self._run_prefill()
-        self._decode_once()
+        self._decode_step()
         self.metrics.sample_mode(self.now(), self.active, len(self.running))
 
     def run(self, max_steps: int = 100000):
@@ -505,4 +752,5 @@ class MoebiusEngine:
                     or self.running):
                 break
             self.step()
+        self._drain_decode()           # flush a half-open fused pipeline
         return self.metrics.summary()

@@ -98,10 +98,18 @@ class PageAllocator:
         return len(self.pool_of(rank))
 
     def alloc(self, rank: int, n: int) -> list[int]:
+        got = self.try_alloc(rank, n)
+        if got is None:
+            raise MemoryError(f"KV pool exhausted (rank={rank}, want {n}, "
+                              f"have {self.free_pages(rank)})")
+        return got
+
+    def try_alloc(self, rank: int, n: int) -> list[int] | None:
+        """Like alloc, but returns None instead of raising when the pool
+        can't satisfy the request (fused decode clamps budgets instead)."""
         pool = self.pool_of(rank)
         if len(pool) < n:
-            raise MemoryError(f"KV pool exhausted (rank={rank}, want {n}, "
-                              f"have {len(pool)})")
+            return None
         return [pool.pop() for _ in range(n)]
 
     def release(self, rank: int, pages: list[int]) -> None:

@@ -11,6 +11,11 @@ class ServeMetrics:
     records: list = field(default_factory=list)   # (rid, arrival, first, finish, out_len)
     mode_samples: list = field(default_factory=list)  # (t, mode, running)
     switch_events: list = field(default_factory=list)  # (t, direction, pause_s, total_s)
+    # decode control-plane accounting: one dispatch may cover many substeps
+    # (fused decode loop); tokens = scheduled slot-substeps of the dispatch
+    decode_dispatches: int = 0
+    decode_substeps: int = 0
+    decode_tokens: int = 0
 
     def finish(self, req) -> None:
         self.records.append((req.rid, req.arrival_s, req.first_token_s,
@@ -22,6 +27,11 @@ class ServeMetrics:
     def switch(self, t: float, direction: str, pause_s: float,
                total_s: float) -> None:
         self.switch_events.append((t, direction, pause_s, total_s))
+
+    def decode(self, tokens: int, substeps: int) -> None:
+        self.decode_dispatches += 1
+        self.decode_substeps += substeps
+        self.decode_tokens += tokens
 
     def ttft(self) -> np.ndarray:
         return np.array([f - a for _, a, f, _, _ in self.records
@@ -53,4 +63,10 @@ class ServeMetrics:
                                    else float("nan")),
             "switch_total_mean_s": (float(totals.mean()) if len(totals)
                                     else float("nan")),
+            "decode_dispatches": self.decode_dispatches,
+            "decode_substeps": self.decode_substeps,
+            "decode_tokens": self.decode_tokens,
+            "decode_tokens_per_dispatch": (
+                self.decode_tokens / self.decode_dispatches
+                if self.decode_dispatches else float("nan")),
         }

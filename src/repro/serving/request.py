@@ -29,6 +29,11 @@ class Request:
     slot: int | None = -1          # decode batch slot
     slot_local: int = 0            # EP: slot within the owner rank
     pages: list[int] = field(default_factory=list)
+    # fused-decode bookkeeping (engine decode_steps > 1): tokens dispatched
+    # on device but not yet fetched, and the remaining-token budget the
+    # DeviceDecodeState currently holds for this request's slot
+    inflight: int = 0
+    budget_dev: int = 0
     # metrics
     first_token_s: float | None = None
     finish_s: float | None = None

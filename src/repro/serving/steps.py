@@ -24,8 +24,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.layouts import (LayoutSpec, attn_rank_major, get_layout,
-                                group_info)
+from repro.core.layouts import LayoutSpec, attn_rank_major, get_layout
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models.common import (ModelConfig, apply_norm, apply_rope,
                                  rmsnorm, rope_cos_sin)
@@ -130,9 +129,11 @@ def _embed_lookup(cfg, pack, tokens, spec: LayoutSpec, m: str,
     return lax.psum(x.astype(cfg.compute_dtype), m) * sc
 
 
-def _project_heads(cfg, ap, x, positions, layout):
+def _project_heads(cfg, ap, x, cos, sin):
     """x (bs, S, D) -> q (bs,S,hl,dh), k/v (bs,S,kl,dh) with rope+qknorm.
-    ap: TP rank-major local slices (L-dim and G-dim already consumed)."""
+    ap: TP rank-major local slices (L-dim and G-dim already consumed).
+    cos/sin: rope tables for the chunk's positions, computed ONCE per step
+    (they are layer-invariant) and threaded through the layer scan."""
     bs, S, D = x.shape
     dh = cfg.dh
     q = (x @ ap["wq"])
@@ -146,7 +147,6 @@ def _project_heads(cfg, ap, x, positions, layout):
     if cfg.qk_norm:
         q = rmsnorm(q, ap["q_norm"])
         k = rmsnorm(k, ap["k_norm"])
-    cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     return q, k, v
@@ -239,6 +239,112 @@ def _sample(cfg, pack, x, spec: LayoutSpec, m, key, temperature, slot0):
 # Step builders
 # ---------------------------------------------------------------------------
 
+def _squeeze_pack(cfg, spec: LayoutSpec, pack: dict) -> dict:
+    """Squeeze the rank-major G dim (local size 1) out of per-rank tensors."""
+    layers = dict(pack["layers"])
+    if spec.dense_tp:
+        layers["attn"] = {k: v.squeeze(1)
+                          for k, v in layers["attn"].items()}
+    if cfg.is_moe:
+        mo = dict(layers["moe"])
+        mo["w13"] = mo["w13"].squeeze(1)
+        mo["w2"] = mo["w2"].squeeze(1)
+        layers["moe"] = mo
+    pack = dict(pack)
+    pack["layers"] = layers
+    return pack
+
+
+def _chunk_core(cfg, spec: LayoutSpec, pack, pool, tokens, positions,
+                valid_len, bt, key, *, m, lay_exp, ep_axes, attn_backend,
+                temperature, page, maxp, Sq):
+    """One Sq-token step on squeezed per-rank params (inside shard_map).
+
+    tokens (bs, Sq); positions/valid_len (bs,); bt (bs, maxp); pool = the
+    layout's KV view. Returns (next_token (bs,), new_pool, last_hidden).
+    Shared verbatim by the single-step builder and the fused decode loop so
+    both paths run byte-identical math.
+    """
+    bs = tokens.shape[0]
+    x = _embed_lookup(cfg, pack, tokens.reshape(-1), spec, m)
+    x = x.reshape(bs, Sq, cfg.d_model)
+    # zero dead slots: garbage hiddens would otherwise contaminate
+    # shared dispatch einsums (NaN*0 == NaN)
+    x = x * (valid_len > 0).astype(x.dtype)[:, None, None]
+    pos_mat = positions[:, None] + jnp.arange(Sq)[None, :]   # (bs,Sq)
+    # page targets for the chunk's K/V (invalid tail -> null page 0)
+    pidx = jnp.clip(pos_mat // page, 0, maxp - 1)
+    in_chunk = jnp.arange(Sq)[None, :] < valid_len[:, None]
+    page_ids = jnp.where(in_chunk,
+                         jnp.take_along_axis(bt, pidx, axis=1), 0)
+    slots = pos_mat % page
+    kv_total = positions + valid_len                   # (bs,)
+    # rope tables are layer-invariant: compute once, thread into the scan
+    cos, sin = rope_cos_sin(pos_mat, cfg.dh, cfg.rope_theta)
+
+    def layer_fn(carry, xs):
+        h, pool = carry
+        lpk, li = xs
+        # the pool rides the CARRY (dynamic per-layer slice update) rather
+        # than the scan's xs/ys: emitting a stacked new pool per step would
+        # materialize a full pool copy per call — per *substep* in the
+        # fused loop — which XLA can elide for an in-place carry update
+        pool_l = lax.dynamic_index_in_dim(pool, li, axis=0, keepdims=False)
+        hn = apply_norm(cfg, h, lpk["attn_norm"])
+        q, k, v = _project_heads(cfg, lpk["attn"], hn, cos, sin)
+        pool_l = _write_pages(pool_l, k, v, page_ids, slots)
+        attn = paged_attention(
+            q, pool_l[0], pool_l[1], bt, kv_total,
+            q_offset=positions, window=cfg.sliding_window,
+            backend=attn_backend)
+        attn = attn.reshape(bs, Sq, -1) @ lpk["attn"]["wo"]
+        if spec.dense_tp:       # heads are sharded -> partial outputs
+            attn = lax.psum(attn, m)
+        h = h + attn.astype(h.dtype)
+        hn = apply_norm(cfg, h, lpk["mlp_norm"])
+        y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), spec, m, lay_exp,
+                 cap_factor=None, ep_axes=ep_axes)
+        h = h + y.reshape(bs, Sq, -1).astype(h.dtype)
+        pool = lax.dynamic_update_index_in_dim(pool, pool_l, li, axis=0)
+        return (h, pool), None
+
+    L = pool.shape[0]
+    (x, new_pool), _ = lax.scan(
+        layer_fn, (x, pool), (pack["layers"], jnp.arange(L)))
+    x = apply_norm(cfg, x, pack["final_norm"])
+    # sample at the last valid position of each slot
+    last = jnp.clip(valid_len - 1, 0, Sq - 1)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    nxt = _sample(cfg, pack, xl, spec, m, key, temperature, 0)
+    return nxt, new_pool, xl
+
+
+def _layout_geometry(cfg, mesh, layout, cc, Bslot, m, da):
+    """Shared builder geometry: spec, shard specs, expert layout, KV view."""
+    spec = get_layout(layout)
+    G = mesh.shape[m]
+    ep_axes = tuple(da) + (m,)
+    chips = int(np.prod([mesh.shape[a] for a in ep_axes]))
+    geo = dict(
+        spec=spec, G=G, ep_axes=ep_axes,
+        G_exp=spec.expert_group(G, chips),
+        lay_exp=spec.expert_layout(cfg, G, chips),
+        page=cc.page_size, maxp=cc.max_pages_per_req,
+        view=cc.view_shape(cfg, G, spec),      # (L,2,pages,page,Kh,dh)
+        bs=Bslot // G if spec.slots_sharded else Bslot,
+        bspec2=P(da, m) if spec.slots_sharded else P(da, None),
+        bspec3=P(da, m, None) if spec.slots_sharded else P(da, None, None),
+        flat_spec=P(da, m))
+    return geo
+
+
+def _pack_specs_for(cfg, layout, G, G_exp, m, ep_axes):
+    pack_shapes = jax.eval_shape(
+        lambda p: build_decode_pack(cfg, p, layout, G),
+        _params_like(cfg, layout, G, G_exp))
+    return decode_pack_specs(cfg, pack_shapes, layout, m, ep_axes=ep_axes)
+
+
 def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
                      Bslot: int, Sq: int = 1, *, temperature: float = 0.0,
                      data_axes=("data",), model_axis: str = "model",
@@ -254,82 +360,23 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
     `valid_len` = #valid tokens in the chunk (1 for decode).
     """
     m, da = model_axis, data_axes
-    spec = get_layout(layout)
-    G = mesh.shape[m]
-    gi = group_info(cfg, G)
-    ep_axes = tuple(da) + (m,)
-    chips = int(np.prod([mesh.shape[a] for a in ep_axes]))
-    G_exp = spec.expert_group(G, chips)
-    lay_exp = spec.expert_layout(cfg, G, chips)
-    page = cc.page_size
-    maxp = cc.max_pages_per_req
-    view = cc.view_shape(cfg, G, spec)        # (L,2,pages,page,Kh,dh)
-    Lk = view[0]
-    bs = Bslot // G if spec.slots_sharded else Bslot
-
-    bspec2 = P(da, m) if spec.slots_sharded else P(da, None)
-    bspec3 = P(da, m, None) if spec.slots_sharded else P(da, None, None)
-    flat_spec = P(da, m)
+    g = _layout_geometry(cfg, mesh, layout, cc, Bslot, m, da)
+    spec, bs, maxp = g["spec"], g["bs"], g["maxp"]
+    bspec2, bspec3, flat_spec = g["bspec2"], g["bspec3"], g["flat_spec"]
 
     def body(pack, kv_flat, tokens, positions, valid_len, block_table, key):
         tokens = tokens.reshape(bs, Sq)
         positions = positions.reshape(bs)
         valid_len = valid_len.reshape(bs)
         bt = block_table.reshape(bs, maxp)
-        pool = kv_flat.reshape(view)                       # (L,2,pages,...)
+        pool = kv_flat.reshape(g["view"])                  # (L,2,pages,...)
         key = jax.random.wrap_key_data(key)
-        # squeeze the rank-major G dim (local size 1) out of TP tensors
-        layers = dict(pack["layers"])
-        if spec.dense_tp:
-            layers["attn"] = {k: v.squeeze(1)
-                              for k, v in layers["attn"].items()}
-        if cfg.is_moe:
-            mo = dict(layers["moe"])
-            mo["w13"] = mo["w13"].squeeze(1)
-            mo["w2"] = mo["w2"].squeeze(1)
-            layers["moe"] = mo
-        pack = dict(pack)
-        pack["layers"] = layers
-
-        x = _embed_lookup(cfg, pack, tokens.reshape(-1), spec, m)
-        x = x.reshape(bs, Sq, cfg.d_model)
-        # zero dead slots: garbage hiddens would otherwise contaminate
-        # shared dispatch einsums (NaN*0 == NaN)
-        x = x * (valid_len > 0).astype(x.dtype)[:, None, None]
-        pos_mat = positions[:, None] + jnp.arange(Sq)[None, :]   # (bs,Sq)
-        # page targets for the chunk's K/V (invalid tail -> null page 0)
-        pidx = jnp.clip(pos_mat // page, 0, maxp - 1)
-        in_chunk = jnp.arange(Sq)[None, :] < valid_len[:, None]
-        page_ids = jnp.where(in_chunk,
-                             jnp.take_along_axis(bt, pidx, axis=1), 0)
-        slots = pos_mat % page
-        kv_total = positions + valid_len                   # (bs,)
-
-        def layer_fn(h, xs):
-            lpk, pool_l = xs
-            hn = apply_norm(cfg, h, lpk["attn_norm"])
-            q, k, v = _project_heads(cfg, lpk["attn"], hn, pos_mat, spec)
-            pool_l = _write_pages(pool_l, k, v, page_ids, slots)
-            attn = paged_attention(
-                q, pool_l[0], pool_l[1], bt, kv_total,
-                q_offset=positions, window=cfg.sliding_window,
-                backend=attn_backend)
-            attn = attn.reshape(bs, Sq, -1) @ lpk["attn"]["wo"]
-            if spec.dense_tp:       # heads are sharded -> partial outputs
-                attn = lax.psum(attn, m)
-            h = h + attn.astype(h.dtype)
-            hn = apply_norm(cfg, h, lpk["mlp_norm"])
-            y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), spec, m, lay_exp,
-                     cap_factor=None, ep_axes=ep_axes)
-            h = h + y.reshape(bs, Sq, -1).astype(h.dtype)
-            return h, pool_l
-
-        x, new_pool = lax.scan(layer_fn, x, (pack["layers"], pool))
-        x = apply_norm(cfg, x, pack["final_norm"])
-        # sample at the last valid position of each slot
-        last = jnp.clip(valid_len - 1, 0, Sq - 1)
-        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
-        nxt = _sample(cfg, pack, xl, spec, m, key, temperature, 0)
+        pack = _squeeze_pack(cfg, spec, pack)
+        nxt, new_pool, xl = _chunk_core(
+            cfg, spec, pack, pool, tokens, positions, valid_len, bt, key,
+            m=m, lay_exp=g["lay_exp"], ep_axes=g["ep_axes"],
+            attn_backend=attn_backend, temperature=temperature,
+            page=g["page"], maxp=maxp, Sq=Sq)
         out = (nxt.reshape(1, bs), new_pool.reshape(1, 1, -1))
         if return_logits:
             head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
@@ -339,11 +386,7 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
             out = out + (lg.reshape(1, bs, -1),)
         return out
 
-    pack_shapes = jax.eval_shape(
-        lambda p: build_decode_pack(cfg, p, layout, G),
-        _params_like(cfg, layout, G, G_exp))
-    pspecs = decode_pack_specs(cfg, pack_shapes, layout, m, ep_axes=ep_axes)
-
+    pspecs = _pack_specs_for(cfg, layout, g["G"], g["G_exp"], m, g["ep_axes"])
     out_specs = (bspec2, flat_spec)
     if return_logits:
         out_specs = out_specs + ((P(da, m, None) if spec.slots_sharded
@@ -352,6 +395,76 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         body, mesh=mesh,
         in_specs=(pspecs, flat_spec, bspec3, bspec2, bspec2, bspec3, P()),
         out_specs=out_specs, check_vma=False)
+    donate_args = (1,) if donate else ()
+    return jax.jit(smapped, donate_argnums=donate_args)
+
+
+def build_decode_loop(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
+                      Bslot: int, steps: int, *, temperature: float = 0.0,
+                      data_axes=("data",), model_axis: str = "model",
+                      attn_backend: str | None = None, donate: bool = True):
+    """Fuse `steps` decode substeps under ONE dispatch (DESIGN.md §5).
+
+    A `lax.fori_loop` over the single-step body: the sampled token is fed
+    straight back as the next input on device, positions and page slots
+    advance on device, and slots whose remaining-token budget hits zero are
+    masked out (their KV writes land on the null page, their outputs are 0).
+
+    Global signature:
+      pack, kv_flat (Dd, G, NE), tokens (Dd, B), positions (Dd, B),
+      budgets (Dd, B), block_table (Dd, B, maxp), key
+      -> (out_tokens (Dd, B, steps), kv_flat',
+          tokens' (Dd, B), positions' (Dd, B), budgets' (Dd, B))
+
+    `tokens` = last generated token per slot (its KV is written at
+    `positions` on the first substep, mirroring the single-step feed).
+    `budgets` = remaining tokens each slot may generate, decremented per
+    substep on device; substep i of a slot with budget b is active iff
+    i < b. out_tokens[:, :, i] is substep i's sample (0 when inactive).
+    At temperature 0 (greedy) the fused loop is byte-identical to `steps`
+    single-step calls; with sampling the key is folded per substep, which
+    is a different stream than the engine's per-step fold.
+    """
+    m, da = model_axis, data_axes
+    g = _layout_geometry(cfg, mesh, layout, cc, Bslot, m, da)
+    spec, bs, maxp = g["spec"], g["bs"], g["maxp"]
+    bspec2, bspec3, flat_spec = g["bspec2"], g["bspec3"], g["flat_spec"]
+
+    def body(pack, kv_flat, tokens, positions, budgets, block_table, key):
+        tokens = tokens.reshape(bs)
+        positions = positions.reshape(bs)
+        budgets = budgets.reshape(bs)
+        bt = block_table.reshape(bs, maxp)
+        pool = kv_flat.reshape(g["view"])
+        key = jax.random.wrap_key_data(key)
+        pack = _squeeze_pack(cfg, spec, pack)     # hoisted out of the loop
+
+        def substep(i, carry):
+            pool, tok, pos, bud, out = carry
+            active = (bud > 0).astype(jnp.int32)
+            nxt, pool, _ = _chunk_core(
+                cfg, spec, pack, pool, tok[:, None], pos, active, bt,
+                jax.random.fold_in(key, i),
+                m=m, lay_exp=g["lay_exp"], ep_axes=g["ep_axes"],
+                attn_backend=attn_backend, temperature=temperature,
+                page=g["page"], maxp=maxp, Sq=1)
+            live = active > 0
+            out = out.at[:, i].set(jnp.where(live, nxt, 0))
+            return (pool, jnp.where(live, nxt, tok), pos + active,
+                    bud - active, out)
+
+        out0 = jnp.zeros((bs, steps), jnp.int32)
+        pool, tok, pos, bud, out = lax.fori_loop(
+            0, steps, substep, (pool, tokens, positions, budgets, out0))
+        return (out.reshape(1, bs, steps), pool.reshape(1, 1, -1),
+                tok.reshape(1, bs), pos.reshape(1, bs), bud.reshape(1, bs))
+
+    pspecs = _pack_specs_for(cfg, layout, g["G"], g["G_exp"], m, g["ep_axes"])
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, flat_spec, bspec2, bspec2, bspec2, bspec3, P()),
+        out_specs=(bspec3, flat_spec, bspec2, bspec2, bspec2),
+        check_vma=False)
     donate_args = (1,) if donate else ()
     return jax.jit(smapped, donate_argnums=donate_args)
 

@@ -23,7 +23,7 @@ from repro.compat import shard_map
 from repro.core.layouts import (EP, TP, attn_rank_major, get_layout,
                                 group_info)
 from repro.kernels.paged_attention.ops import paged_attention
-from repro.models.common import ModelConfig, apply_norm
+from repro.models.common import ModelConfig, apply_norm, rope_cos_sin
 from repro.models.ssm import ssd_decode_step
 from repro.serving.kvcache import CacheConfig
 from repro.serving.steps import (_embed_lookup, _project_heads, _sample,
@@ -229,6 +229,8 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
                              jnp.take_along_axis(bt, pidx, axis=1), 0)
         slots = pos_mat % page
         kv_total = positions + 1
+        # rope tables are attention-site-invariant: compute once
+        cos, sin = rope_cos_sin(pos_mat, cfg.dh, cfg.rope_theta)
 
         mv = lambda a: jnp.moveaxis(
             a.reshape((bs,) + a.shape[2:]), 1, 0)     # (L, bs, ...)
@@ -255,7 +257,7 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
             new_states.append(outs)
             # shared attention site g
             hn = apply_norm(cfg, x[:, None], sp["attn_norm"])
-            q, kk, vv = _project_heads(cfg, sp["attn"], hn, pos_mat, layout)
+            q, kk, vv = _project_heads(cfg, sp["attn"], hn, cos, sin)
             pool_g = _write_pages(pool[g], kk, vv, page_ids, slots)
             at = paged_attention(q, pool_g[0], pool_g[1], bt, kv_total,
                                  q_offset=positions, window=0,
@@ -368,6 +370,8 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
                              jnp.take_along_axis(bt, pidx, axis=1), 0)
         slots = pos_mat % page
         kv_total = positions + 1
+        # rope tables are layer-invariant: compute once, not per layer
+        cos, sin = rope_cos_sin(pos_mat, cfg.dh, cfg.rope_theta)
 
         def layer_fn(h, xs):
             lp, pool_l, xkv_l = xs                    # xkv_l (bs,2,T,Kl,dh)
@@ -377,7 +381,7 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
                 lp["xattn"] = {k: v.squeeze(0)
                                for k, v in lp["xattn"].items()}
             hn = apply_norm(cfg, h[:, None], lp["attn_norm"])
-            q, kk, vv = _project_heads(cfg, lp["attn"], hn, pos_mat, layout)
+            q, kk, vv = _project_heads(cfg, lp["attn"], hn, cos, sin)
             pool_l = _write_pages(pool_l, kk, vv, page_ids, slots)
             at = paged_attention(q, pool_l[0], pool_l[1], bt, kv_total,
                                  q_offset=positions, window=0,

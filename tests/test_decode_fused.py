@@ -1,0 +1,188 @@
+"""Fused multi-step decode (EngineConfig.decode_steps > 1), single device.
+
+The fused loop must be an invisible optimization: byte-identical outputs to
+the per-token host loop for any N, across finishes/joins/page growth, with
+all pages returned and the pipeline drained at shutdown. Multidevice
+equivalence (per-layout, and switches mid-stream) lives in
+tests/test_multidevice.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policy import PolicyConfig
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _reqs(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200,
+                    int(rng.integers(3, 9)))),
+                    max_new_tokens=int(rng.integers(3, 14)), arrival_s=0.0)
+            for i in range(n)]
+
+
+def _run(cfg, mesh, reqs, **kw):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh,
+                        CacheConfig(page_size=4, pages_ep=64,
+                                    max_pages_per_req=16),
+                        ecfg=EngineConfig(start_layout="tp", ladder=(4, 8),
+                                          prefill_chunk=8, temperature=0.0,
+                                          policy=pol, **kw))
+    for r in reqs:
+        eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        eng.step()
+        i += 1
+        assert i < 1000, "engine made no progress"
+    return eng
+
+
+def test_fused_moe_matches_single_step(tiny_moe, mesh11):
+    base = _run(tiny_moe, mesh11, _reqs())
+    ref = {r.rid: r.output for r in base.finished}
+    for n in (2, 4, 8):
+        eng = _run(tiny_moe, mesh11, _reqs(), decode_steps=n)
+        assert {r.rid: r.output for r in eng.finished} == ref, n
+        # pipeline drained, every request's inflight settled, pages freed
+        assert eng._pending is None
+        assert all(r.inflight == 0 for r in eng.finished)
+        assert eng.alloc[0].total_free() == 63
+        # fused control plane actually amortized dispatches
+        assert eng.metrics.decode_dispatches < base.metrics.decode_dispatches
+
+
+def test_fused_dense_matches_single_step(tiny_dense, mesh11):
+    base = _run(tiny_dense, mesh11, _reqs(seed=3))
+    eng = _run(tiny_dense, mesh11, _reqs(seed=3), decode_steps=4)
+    assert ({r.rid: r.output for r in eng.finished}
+            == {r.rid: r.output for r in base.finished})
+
+
+def test_fused_forced_length_replay(tiny_moe, mesh11):
+    reqs = _reqs()
+    for r in reqs:
+        r.forced_len = 7
+    eng = _run(tiny_moe, mesh11, reqs, decode_steps=4)
+    assert all(len(r.output) == 7 for r in eng.finished)
+
+
+def test_fused_switch_drains_to_boundary(tiny_moe, mesh11):
+    """A live switch mid-stream under fused decode (monolithic AND chunked)
+    must drain the pipeline to a step boundary and stay byte-identical to
+    the never-switched single-step baseline."""
+    base = _run(tiny_moe, mesh11, _reqs())
+    ref = {r.rid: r.output for r in base.finished}
+    for chunk in (0, 1):
+        pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+        eng = MoebiusEngine(tiny_moe, mesh11,
+                            CacheConfig(page_size=4, pages_ep=64,
+                                        max_pages_per_req=16),
+                            ecfg=EngineConfig(start_layout="tp",
+                                              ladder=(4, 8), prefill_chunk=8,
+                                              temperature=0.0, policy=pol,
+                                              decode_steps=4,
+                                              chunk_layers=chunk))
+        for r in _reqs():
+            eng.submit(r)
+        i = 0
+        switched = False
+        while eng.pending or eng.waiting or eng.prefilling or eng.running:
+            if not switched and eng.running:
+                eng.execute_switch("ep")
+                switched = True
+                # drain-to-boundary invariant: the switch consumed every
+                # in-flight fused dispatch before planning
+                assert eng._pending is None
+            eng.step()
+            i += 1
+            assert i < 1000
+        assert switched and len(eng.switch_records) == 1
+        assert {r.rid: r.output for r in eng.finished} == ref, chunk
+        assert eng.alloc[0].total_free() > 0
+
+
+def test_fused_budget_clamp_on_page_exhaustion(tiny_moe, mesh11):
+    """With a pool too small to preallocate every request's horizon, fused
+    budgets clamp and recover; outputs still match the single-step engine
+    run against the same tight pool."""
+    def run(n):
+        pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+        eng = MoebiusEngine(tiny_moe, mesh11,
+                            CacheConfig(page_size=4, pages_ep=24,
+                                        max_pages_per_req=8),
+                            ecfg=EngineConfig(start_layout="tp",
+                                              ladder=(4,), prefill_chunk=8,
+                                              temperature=0.0, policy=pol,
+                                              decode_steps=n))
+        rng = np.random.default_rng(7)
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=list(rng.integers(5, 200, 6)),
+                               max_new_tokens=12, arrival_s=0.0))
+        i = 0
+        while eng.pending or eng.waiting or eng.prefilling or eng.running:
+            eng.step()
+            i += 1
+            assert i < 2000
+        return {r.rid: r.output for r in eng.finished}
+
+    assert run(8) == run(1)
+
+
+def test_fused_oversubscribed_slots_make_progress(tiny_moe, mesh11):
+    """More running requests than the ladder's largest rung: sticky fused
+    slots must still serve everyone (least-served requests claim freed
+    slots first), byte-identical to the rotating single-step engine."""
+    def run(n):
+        pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+        eng = MoebiusEngine(tiny_moe, mesh11,
+                            CacheConfig(page_size=4, pages_ep=64,
+                                        max_pages_per_req=16),
+                            ecfg=EngineConfig(start_layout="tp",
+                                              ladder=(4,), prefill_chunk=8,
+                                              temperature=0.0, policy=pol,
+                                              decode_steps=n))
+        rng = np.random.default_rng(11)
+        for i in range(9):          # 9 running > 4 slots
+            eng.submit(Request(rid=i, prompt=list(rng.integers(5, 200, 4)),
+                               max_new_tokens=int(rng.integers(4, 10)),
+                               arrival_s=0.0))
+        i = 0
+        while eng.pending or eng.waiting or eng.prefilling or eng.running:
+            eng.step()
+            i += 1
+            assert i < 2000
+        assert len(eng.finished) == 9
+        return {r.rid: r.output for r in eng.finished}
+
+    assert run(4) == run(1)
+
+
+def test_device_state_scatter_oob_rows_dropped(mesh11):
+    from repro.core.layouts import get_layout
+    from repro.serving.device_state import DeviceDecodeState
+
+    st = DeviceDecodeState(mesh11, get_layout("tp"), 1, 4, 8)
+    st.apply([(0, 1, 42, 7, 5, [3, 4])], [])
+    assert int(np.asarray(st.tokens)[0, 1]) == 42
+    assert int(np.asarray(st.positions)[0, 1]) == 7
+    assert int(np.asarray(st.budgets)[0, 1]) == 5
+    assert np.asarray(st.block_tables)[0, 1, :2].tolist() == [3, 4]
+    before = np.asarray(st.tokens).copy()
+    # a full-padding block (slot index == B, out of bounds) must be a no-op
+    st.apply([(0, 4, 99, 9, 9, [1])], [(0, 4, 9, [1])])
+    assert np.array_equal(np.asarray(st.tokens), before)
+    # grow updates budget + block table but never token/position
+    st.apply([], [(0, 1, 2, [3, 4, 5])])
+    assert int(np.asarray(st.tokens)[0, 1]) == 42
+    assert int(np.asarray(st.budgets)[0, 1]) == 2
+    assert np.asarray(st.block_tables)[0, 1, :3].tolist() == [3, 4, 5]

@@ -200,6 +200,115 @@ print("OK")
 """, timeout=1200)
 
 
+def test_fused_decode_loop_matches_single_steps_per_layout():
+    """Satellite acceptance: N fused decode steps must be byte-identical —
+    sampled tokens AND KV bytes — to N single-step calls, for EVERY
+    registered layout (tp / ep / tpep)."""
+    run_multidevice(COMMON + """
+from repro.core.layouts import EP, TP, TPEP, pack_params
+from repro.models.registry import init_params
+from repro.serving.kvcache import CacheConfig
+from repro.serving.steps import (build_serve_step, build_decode_pack,
+                                 build_decode_loop)
+params = init_params(cfg, jr.PRNGKey(0))
+cc = CacheConfig(page_size=4, pages_ep=16, max_pages_per_req=8)
+key = jr.key_data(jr.PRNGKey(1))
+N = 4
+prompts = {0: [5, 9, 17, 3, 101], 1: [42, 7, 88]}
+for layout in (TP, EP, TPEP):
+    G = 4
+    sp = pack_params(cfg, params, layout, G,
+                     expert_G=8 if layout == TPEP else None)
+    pack = build_decode_pack(cfg, sp, layout, G)
+    B = 4
+    # prefill two requests into separate slots/pages
+    kv = jnp.zeros((2, G, cc.nelems(cfg, G)), jnp.float32)
+    pre = build_serve_step(cfg, mesh, layout, cc, B, Sq=8, donate=False)
+    ti = np.zeros((2, B, 8), np.int32); pos = np.zeros((2, B), np.int32)
+    vl = np.zeros((2, B), np.int32); bt = np.zeros((2, B, 8), np.int32)
+    pages = {0: [1, 2, 3], 1: [4, 5, 6]}
+    # slot-sharded layouts: rows 0 and 1 live on model ranks 0 and 1, with
+    # per-rank page pools; pooled layouts share one pool
+    for i, p in prompts.items():
+        ti[:, i, :len(p)] = p; vl[:, i] = len(p)
+        bt[:, i, :3] = pages[i]
+    nxt, kv = pre(pack, kv, jnp.asarray(ti), jnp.asarray(pos),
+                  jnp.asarray(vl), jnp.asarray(bt), key)
+    nxt = np.asarray(nxt)
+    first = {i: int(nxt[0, i]) for i in prompts}
+    # path A: N single steps with host feedback
+    dec = build_serve_step(cfg, mesh, layout, cc, B, Sq=1, donate=False)
+    kv_a = kv; cur = dict(first); kl = {i: len(p) for i, p in prompts.items()}
+    outs_a = {i: [] for i in prompts}
+    for s in range(N):
+        ti = np.zeros((2, B, 1), np.int32); pos = np.zeros((2, B), np.int32)
+        vl = np.zeros((2, B), np.int32)
+        for i in prompts:
+            ti[:, i, 0] = cur[i]; pos[:, i] = kl[i]; vl[:, i] = 1
+        nx, kv_a = dec(pack, kv_a, jnp.asarray(ti), jnp.asarray(pos),
+                       jnp.asarray(vl), jnp.asarray(bt), key)
+        nx = np.asarray(nx)
+        for i in prompts:
+            cur[i] = int(nx[0, i]); kl[i] += 1; outs_a[i].append(cur[i])
+    # path B: one fused dispatch, tokens fed back on device
+    loop = build_decode_loop(cfg, mesh, layout, cc, B, N, donate=False)
+    tok = np.zeros((2, B), np.int32); pos = np.zeros((2, B), np.int32)
+    bud = np.zeros((2, B), np.int32)
+    for i, p in prompts.items():
+        tok[:, i] = first[i]; pos[:, i] = len(p); bud[:, i] = 100
+    out, kv_b, t2, p2, b2 = loop(pack, kv, jnp.asarray(tok),
+                                 jnp.asarray(pos), jnp.asarray(bud),
+                                 jnp.asarray(bt), key)
+    out = np.asarray(out)
+    outs_b = {i: [int(x) for x in out[0, i, :N]] for i in prompts}
+    assert outs_a == outs_b, (layout, outs_a, outs_b)
+    assert np.array_equal(np.asarray(kv_a), np.asarray(kv_b)), layout
+    assert np.asarray(p2)[0, 0] == len(prompts[0]) + N
+    assert np.asarray(b2)[0, 0] == 100 - N
+print("OK")
+""", timeout=1200)
+
+
+def test_fused_live_switch_matches_baseline():
+    """Satellite acceptance: a live switch mid-stream with decode_steps > 1
+    (pipeline drained to a step boundary before the plan) must match a
+    never-switched single-step baseline byte-for-byte — monolithic and
+    chunked/overlapped, across layout pairs including tpep."""
+    run_multidevice(COMMON + """
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+def make_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200,
+            int(rng.integers(3, 10)))), max_new_tokens=int(rng.integers(4, 12)),
+            arrival_s=0.0) for i in range(6)]
+def run(start, n, switch_at=None, target=None, chunk=0):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout=start, layouts=("tp", "ep", "tpep"), ladder=(4, 8),
+        prefill_chunk=8, temperature=0.0, policy=pol, seed=0,
+        decode_steps=n, chunk_layers=chunk))
+    for r in make_reqs(): eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if switch_at is not None and i == switch_at:
+            eng.execute_switch(target)
+        eng.step(); i += 1
+        assert i < 500
+    assert eng._pending is None
+    return {r.rid: r.output for r in eng.finished}
+base = run("tp", 1)
+for src, dst in (("tp", "ep"), ("ep", "tp"), ("tp", "tpep"), ("ep", "tpep")):
+    assert run(src, 4, 4, dst) == base, f"{src}->{dst} fused diverged"
+out = run("tp", 4, 5, "ep", chunk=1)   # overlapped switch, fused overlap decode
+assert out == base, "chunked switch under fused decode diverged"
+print("OK")
+""", timeout=1200)
+
+
 def test_reshard_paths_agree():
     run_multidevice(COMMON + """
 from repro.core.switch import (make_reshard_experts,
