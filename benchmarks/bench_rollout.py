@@ -4,13 +4,71 @@ Scaled DeepMath-like rollout (heavy-tailed forced output lengths, replayed
 identically across systems — the paper's §6.3 methodology). Reports
 end-to-end completion time per system, the per-step static oracle, and
 Moebius's speedup over it.
+
+Also measures the PREFIX CACHE on the rollout's shared-prompt groups
+(`RolloutSpec.samples_per_prompt`): cache on vs off, same trace — prefill
+tokens computed, peak pages resident, tokens/s, byte-identical outputs.
+
+Runnable standalone: ``python benchmarks/bench_rollout.py [--smoke]``
+(--smoke runs only the prefix-cache comparison and writes
+BENCH_rollout.json — the CI gate asserts >= 30% prefill-token reduction at
+samples_per_prompt=4).
 """
 from __future__ import annotations
 
 import time
 
 
-def run(steps: int = 3, scale: float = 0.015, seed: int = 0):
+def _prefix_rows(seed: int = 0, samples: int = 4):
+    """Prefix-cache on/off comparison on one shared-prefix rollout group."""
+    import copy
+
+    from benchmarks.common import bench_cfg, make_engine
+    from repro.launch.mesh import make_mesh
+    from repro.serving.workloads import RolloutSpec, rollout_batch
+
+    mesh = make_mesh((1, 8), ("data", "model"))
+    cfg = bench_cfg()
+    spec = RolloutSpec(num_prompts=32, prompt_median=56, prompt_max=96,
+                       output_median=20, output_p99=64, output_cap=96,
+                       samples_per_prompt=samples, token_range=(5, 500))
+    reqs0 = rollout_batch(spec, seed=seed)
+    rows, res = [], {}
+    for on in (False, True):
+        eng = make_engine(cfg, mesh, start="tp", ladder=(8, 16, 32),
+                          pages_ep=512, page=8, maxp=32, prefill_chunk=32,
+                          prefix_cache=on)
+        for r in copy.deepcopy(reqs0):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run(max_steps=100000)
+        dt = time.perf_counter() - t0
+        s = eng.metrics.summary()
+        res[on] = dict(prefill=s["prefill_tokens"], dt=dt,
+                       toks=s["total_tokens"], peak=s["kv_pages_peak"],
+                       hits=s["prefix_hits"], saved=s["prefix_tokens_saved"],
+                       outs={r.rid: tuple(r.output) for r in eng.finished})
+        tag = "on" if on else "off"
+        rows.append((f"rollout.prefix.{tag}.prefill_tokens",
+                     float(s["prefill_tokens"]), ""))
+        rows.append((f"rollout.prefix.{tag}.kv_pages_peak",
+                     float(s["kv_pages_peak"]), ""))
+        rows.append((f"rollout.prefix.{tag}.tokens_per_s",
+                     s["total_tokens"] / dt,
+                     f"decode_tokens={s['decode_tokens']}"))
+    red = 1.0 - res[True]["prefill"] / max(res[False]["prefill"], 1)
+    match = res[True]["outs"] == res[False]["outs"]
+    rows.append((
+        "rollout.prefix.prefill_token_reduction", red,
+        f"ge_30pct={red >= 0.30};outputs_match={match};"
+        f"samples_per_prompt={samples};hits={res[True]['hits']};"
+        f"pages_peak_off={res[False]['peak']};"
+        f"pages_peak_on={res[True]['peak']}"))
+    return rows
+
+
+def run(steps: int = 3, scale: float = 0.015, seed: int = 0,
+        smoke: bool = False):
     import copy
     import math
 
@@ -22,9 +80,11 @@ def run(steps: int = 3, scale: float = 0.015, seed: int = 0):
     from repro.launch.mesh import make_mesh
     from repro.serving.workloads import RolloutSpec, rollout_batch
 
+    rows = list(_prefix_rows(seed=seed))
+    if smoke:
+        return rows
     mesh = make_mesh((1, 8), ("data", "model"))
     cfg = bench_cfg()
-    rows = []
     speedups = []
 
     # --- primary: trace-driven projection at the paper's setting ---
@@ -101,3 +161,42 @@ def run(steps: int = 3, scale: float = 0.015, seed: int = 0):
                  sum(speedups) / len(speedups),
                  "CPU mechanism-scale; target-HW rows above are primary"))
     return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _bootstrap import ensure_env_and_path
+    ensure_env_and_path()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: prefix-cache on/off comparison only "
+                         "(>= 30%% prefill-token reduction, byte-identical "
+                         "outputs); writes BENCH_rollout.json")
+    ap.add_argument("--json", default="BENCH_rollout.json",
+                    help="JSON artifact path")
+    args = ap.parse_args()
+    rows = list(run(smoke=args.smoke))
+    print("name,us_per_call,derived")
+    ok = False
+    for nm, us, derived in rows:
+        print(f"{nm},{us:.4f},{derived}", flush=True)
+        if (nm == "rollout.prefix.prefill_token_reduction"
+                and "ge_30pct=True" in derived
+                and "outputs_match=True" in derived):
+            ok = True
+    pathlib.Path(args.json).write_text(json.dumps({
+        "benchmark": "rollout", "smoke": args.smoke,
+        "unix_time": time.time(),
+        "rows": [{"name": nm, "value": us, "derived": derived}
+                 for nm, us, derived in rows]}, indent=1))
+    if args.smoke and not ok:
+        raise SystemExit("rollout smoke gate FAILED (prefill-token "
+                         "reduction < 30% or outputs diverged)")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,7 +45,8 @@ from repro.core.layouts import EP, TP, get_layout, group_info
 from repro.models.common import ModelConfig
 from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
                               pack_w13, unpack_experts, unpack_w13)
-from repro.serving.kvcache import CacheConfig, PageAllocator, pages_needed
+from repro.serving.kvcache import (CacheConfig, CacheMove, PageAllocator,
+                                   PrefixCache, pages_needed)
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +270,7 @@ class Assignment:
     new_pages: list
     new_owner: int
     snap_kv_len: int               # kv_len when the plan was taken
+    snap_pages: tuple = ()         # page list at plan time (CoW detection)
 
 
 def pairs_to_plan(direction: str, per_rank: dict[int, list], G: int) -> KVPlan:
@@ -288,43 +290,128 @@ def pairs_to_plan(direction: str, per_rank: dict[int, list], G: int) -> KVPlan:
 
 
 def plan_switch(direction: str, requests, cfg: ModelConfig, cc: CacheConfig,
-                new_alloc: PageAllocator, G: int
-                ) -> tuple[KVPlan, list[Assignment]]:
+                new_alloc: PageAllocator, G: int, cache: PrefixCache = None
+                ) -> tuple[KVPlan, list[Assignment], list[CacheMove]]:
     """Pure switch plan: allocate destination pages and build the page-pair
-    descriptors without mutating any request."""
+    descriptors without mutating any request.
+
+    Refcount-aware: a physical page shared by several requests (prefix
+    cache) is migrated ONCE per destination pool — later sharers `fork`
+    the already-planned destination page instead of allocating a second
+    copy. (A page whose sharers are partitioned onto different EP ranks is
+    duplicated, once per rank — each rank's attention reads only its own
+    pool.) When a `cache` is given, its entries are remapped too: entries
+    whose pages already migrate with a live request ride along for free;
+    cache-only pages are migrated best-effort (dropped if the destination
+    pool is short).
+    """
     per_rank: dict[int, list[tuple[int, int]]] = {g: [] for g in range(G)}
     assignments: list[Assignment] = []
+    # (src_pool, src_page, dst_pool) -> dst_page (the dedup map)
+    mapped: dict[tuple[int, int, int], int] = {}
+
+    def migrate_page(src_pool: int, page: int, dst_pool: int,
+                     row: int) -> int:
+        """One physical copy per (src page, dst pool); sharers fork it."""
+        key = (src_pool, page, dst_pool)
+        dp = mapped.get(key)
+        if dp is not None:
+            new_alloc.fork(dst_pool, [dp])
+            return dp
+        dp = new_alloc.alloc(dst_pool, 1)[0]
+        mapped[key] = dp
+        per_rank[row].append((page, dp))
+        return dp
+
     if direction == "ep_to_tp":
         for r in sorted(requests, key=lambda q: q.rid):
             if not r.pages:
-                assignments.append(Assignment(r, [], -1, r.kv_len))
+                assignments.append(Assignment(r, [], -1, r.kv_len, ()))
                 continue
-            new_pages = new_alloc.alloc(0, len(r.pages))
-            per_rank[r.owner_rank].extend(zip(r.pages, new_pages))
-            assignments.append(Assignment(r, new_pages, -1, r.kv_len))
+            new_pages = [migrate_page(r.pool_rank, p, 0, r.pool_rank)
+                         for p in r.pages]
+            assignments.append(Assignment(r, new_pages, -1, r.kv_len,
+                                          tuple(r.pages)))
     else:
         buckets = partition_requests([r for r in requests if r.pages], G)
         for g, reqs in buckets.items():
             for r in reqs:
-                new_pages = new_alloc.alloc(g, len(r.pages))
-                per_rank[g].extend(zip(r.pages, new_pages))
-                assignments.append(Assignment(r, new_pages, g, r.kv_len))
-    return pairs_to_plan(direction, per_rank, G), assignments
+                new_pages = [migrate_page(r.pool_rank, p, g, g)
+                             for p in r.pages]
+                assignments.append(Assignment(r, new_pages, g, r.kv_len,
+                                              tuple(r.pages)))
+    cache_moves: list[CacheMove] = []
+    if cache is not None:
+        cache_moves = _plan_cache_moves(direction, cache, new_alloc,
+                                        mapped, per_rank, G)
+    return pairs_to_plan(direction, per_rank, G), assignments, cache_moves
+
+
+def _plan_cache_moves(direction: str, cache: PrefixCache,
+                      new_alloc: PageAllocator, mapped: dict,
+                      per_rank: dict, G: int) -> list[CacheMove]:
+    """Remap prefix-cache entries into the destination pools.
+
+    Pages already migrating with a live request are forked (zero extra
+    copies); cache-only pages join the migration plan via `try_alloc` and
+    the entry is dropped when the destination pool can't take them. Multi-
+    page (full-prompt) entries must land wholly in ONE destination pool.
+    """
+    moves: list[CacheMove] = []
+    dst_pools = [0] if direction == "ep_to_tp" else list(range(G))
+
+    def target_pool(src_pool: int, pages) -> int:
+        for dp in dst_pools:                 # prefer a pool already holding it
+            if (src_pool, pages[0], dp) in mapped:
+                return dp
+        if direction == "ep_to_tp":
+            return 0
+        return max(dst_pools, key=lambda g: new_alloc.free_pages(g))
+
+    for kind, pool, key, pages, plen in cache.entries():
+        dpool = target_pool(pool, pages)
+        row = pool if direction == "ep_to_tp" else dpool
+        dst, taken = [], []
+        for p in pages:
+            mk = (pool, p, dpool)
+            dp = mapped.get(mk)
+            if dp is not None:
+                new_alloc.fork(dpool, [dp])
+            else:
+                got = new_alloc.try_alloc(dpool, 1)
+                if got is None:
+                    break                    # pool short: drop the entry
+                dp = got[0]
+                mapped[mk] = dp
+                per_rank[row].append((p, dp))
+                taken.append((p, dp))
+            dst.append(dp)
+        if len(dst) < len(pages):            # roll back a partial entry
+            new_alloc.release(dpool, dst)
+            for p, dp in taken:
+                del mapped[(pool, p, dpool)]
+                per_rank[row].remove((p, dp))
+            continue
+        moves.append(CacheMove(kind, pool, key, tuple(pages), dpool,
+                               tuple(dst), plen))
+    return moves
 
 
 def apply_assignments(assignments: list[Assignment]) -> None:
-    """Commit the planned placement to the host request metadata."""
+    """Commit the planned placement to the host request metadata (including
+    the recorded release pool — pages now live in the destination pools)."""
     for a in assignments:
         a.req.pages = a.new_pages
         a.req.owner_rank = a.new_owner
+        a.req.pool_rank = max(a.new_owner, 0)
 
 
 def plan_ep_to_tp(requests, cfg: ModelConfig, cc: CacheConfig,
                   tp_alloc: PageAllocator, G: int) -> KVPlan:
     """Live EP requests (owner_rank, pages) -> fresh TP pages. Rewrites
     request.pages / owner_rank in place (the monolithic-switch contract)."""
-    plan, assignments = plan_switch("ep_to_tp", requests, cfg, cc,
-                                    tp_alloc, G)
+    plan, assignments, _ = plan_switch("ep_to_tp", requests, cfg, cc,
+                                       tp_alloc, G)
     apply_assignments(assignments)
     return plan
 
@@ -332,8 +419,8 @@ def plan_ep_to_tp(requests, cfg: ModelConfig, cc: CacheConfig,
 def plan_tp_to_ep(requests, cfg: ModelConfig, cc: CacheConfig,
                   ep_alloc: PageAllocator, G: int) -> KVPlan:
     """Live TP requests -> per-rank EP pages via the greedy partition."""
-    plan, assignments = plan_switch("tp_to_ep", requests, cfg, cc,
-                                    ep_alloc, G)
+    plan, assignments, _ = plan_switch("tp_to_ep", requests, cfg, cc,
+                                       ep_alloc, G)
     apply_assignments(assignments)
     return plan
 

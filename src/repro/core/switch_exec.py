@@ -58,7 +58,8 @@ from repro.core.switch import (apply_assignments,
                                plan_switch)
 from repro.models.common import ModelConfig
 from repro.models.moe import make_expert_layout
-from repro.serving.kvcache import CacheConfig, PageAllocator, num_kv_layers
+from repro.serving.kvcache import (CacheConfig, PageAllocator, PrefixCache,
+                                   num_kv_layers)
 
 
 def _pow2_pad(n: int, lo: int = 8) -> int:
@@ -109,6 +110,9 @@ class SwitchSession:
     kv_pages: int = 0
     live_requests: int = 0
     plan_pause_s: float = 0.0       # decode-blocked time spent in start()
+    cache_moves: list = None        # per-data-group planned cache remaps
+    caches: list = None             # the engine's live PrefixCaches (or None)
+    alive_moves: list = None        # commit-time: moves still worth keeping
 
     @property
     def done(self) -> bool:
@@ -227,42 +231,49 @@ class SwitchExecutor:
         vm = np.stack([padp(p.valid) for p in plans])
         return (sp, dp, vm), pmax
 
-    def _plan(self, src, dst, live, *, mutate: bool, cur_alloc=None):
+    def _plan(self, src, dst, live, *, mutate: bool, cur_alloc=None,
+              caches=None):
         """Per-data-group plans + destination allocators for a src->dst
         switch. Same-KV-view pairs are identity on the KV side: the live
-        allocators and every request's pages/owner pass through untouched.
-        mutate=False keeps the requests untouched (chunked mode applies
-        metadata at commit)."""
+        allocators, every request's pages/owner, and the prefix caches pass
+        through untouched. mutate=False keeps the requests untouched
+        (chunked mode applies metadata at commit). `caches` (the engine's
+        per-data-group PrefixCaches) joins the plan: shared pages migrate
+        once per physical page and cache entries remap to the destination
+        pools (see plan_switch)."""
         kv_dir = kv_migration_direction(src, dst)
         if kv_dir is None:
             empty = (np.zeros((self.Dd, self.G, 8), np.int32),
                      np.zeros((self.Dd, self.G, 8), np.int32),
                      np.zeros((self.Dd, self.G, 8), bool))
-            return empty, 8, [], cur_alloc, None
+            return empty, 8, [], cur_alloc, None, None
         new_alloc = [PageAllocator(self.cc, self.cfg, self.G, dst)
                      for _ in range(self.Dd)]
-        plans, assignments = [], []
+        plans, assignments, cache_moves = [], [], []
         for d in range(self.Dd):
             reqs = [r for r in live if r.data_group == d and r.pages]
-            plan, asg = plan_switch(kv_dir, reqs, self.cfg, self.cc,
-                                    new_alloc[d], self.G)
+            plan, asg, moves = plan_switch(
+                kv_dir, reqs, self.cfg, self.cc, new_alloc[d], self.G,
+                cache=caches[d] if caches is not None else None)
             plans.append(plan)
             assignments.extend(asg)
+            cache_moves.append(moves)
         if mutate:
             apply_assignments(assignments)
         arrays, pmax = self._stack_plans(plans)
-        return arrays, pmax, assignments, new_alloc, kv_dir
+        return arrays, pmax, assignments, new_alloc, kv_dir, cache_moves
 
     # ------------------------------------------------------------------
     # monolithic mode (the baseline; pause == total)
     # ------------------------------------------------------------------
-    def monolithic(self, src, dst, live, experts, kv_flat, cur_alloc=None):
+    def monolithic(self, src, dst, live, experts, kv_flat, cur_alloc=None,
+                   caches=None):
         """Full stop-the-world src->dst switch. Returns (experts', kv_flat',
-        alloc', stats); request metadata is rewritten in place."""
+        alloc', caches', stats); request metadata is rewritten in place."""
         src, dst = get_layout(src), get_layout(dst)
         t0 = time.perf_counter()
-        (sp, dp, vm), pmax, _, new_alloc, kv_dir = self._plan(
-            src, dst, live, mutate=True, cur_alloc=cur_alloc)
+        (sp, dp, vm), pmax, _, new_alloc, kv_dir, cache_moves = self._plan(
+            src, dst, live, mutate=True, cur_alloc=cur_alloc, caches=caches)
         t_plan = time.perf_counter() - t0
 
         t1 = time.perf_counter()
@@ -285,12 +296,16 @@ class SwitchExecutor:
             jax.block_until_ready(kv_flat)
         t_kv = time.perf_counter() - t2
 
+        new_caches = caches
+        if caches is not None and kv_dir is not None:
+            new_caches = [PrefixCache.rebuild(new_alloc[d], cache_moves[d])
+                          for d in range(self.Dd)]
         total = time.perf_counter() - t0
         stats = SwitchStats(direction=f"{src}_to_{dst}", total_s=total,
                             pause_s=total, plan_s=t_plan, weights_s=t_w,
                             kv_s=t_kv, kv_pages=int(vm.sum()), chunks=1,
                             live_requests=len(live))
-        return experts, kv_flat, new_alloc, stats
+        return experts, kv_flat, new_alloc, new_caches, stats
 
     # ------------------------------------------------------------------
     # chunked / overlapped mode
@@ -307,14 +322,15 @@ class SwitchExecutor:
         return out
 
     def start(self, src, dst, live, experts, kv_flat,
-              chunk_layers: int, cur_alloc=None) -> SwitchSession:
+              chunk_layers: int, cur_alloc=None, caches=None) -> SwitchSession:
         """Plan the src->dst switch and stage the destination buffers.
         Source buffers and request metadata stay live for overlap decode."""
         assert self.session is None, "switch already in progress"
         src, dst = get_layout(src), get_layout(dst)
         t0 = time.perf_counter()
-        plan_arrays, pmax, assignments, new_alloc, kv_dir = self._plan(
-            src, dst, live, mutate=False, cur_alloc=cur_alloc)
+        plan_arrays, pmax, assignments, new_alloc, kv_dir, cache_moves = \
+            self._plan(src, dst, live, mutate=False, cur_alloc=cur_alloc,
+                       caches=caches)
         experts_dst = None
         if self.cfg.is_moe:
             src_lay, dst_lay = pair_expert_layouts(self.cfg, src, dst,
@@ -338,7 +354,8 @@ class SwitchExecutor:
             new_alloc=new_alloc, chunks=self._layer_chunks(chunk_layers),
             experts_dst=experts_dst, kv_dst=kv_dst,
             kv_pages=kv_pages, live_requests=len(live),
-            plan_pause_s=time.perf_counter() - t0)
+            plan_pause_s=time.perf_counter() - t0,
+            cache_moves=cache_moves, caches=caches)
         return self.session
 
     def advance(self, experts, kv_flat) -> bool:
@@ -360,10 +377,36 @@ class SwitchExecutor:
         s.next_chunk += 1
         return not s.done
 
+    def _dst_page(self, d: int, pool: int) -> int:
+        """Commit-time destination-pool allocation for a live request's
+        top-up/CoW re-point. A full pool sacrifices still-alive planned
+        cache moves first (dropping a cache entry is always safe; failing
+        a live request's page is not); raises only on genuine exhaustion."""
+        s = self.session
+        got = s.new_alloc[d].try_alloc(pool, 1)
+        if got is not None:
+            return got[0]
+        moves = s.alive_moves[d] if s.alive_moves is not None else []
+        for m in list(moves):
+            if m.dst_pool != pool:
+                continue
+            s.new_alloc[d].release(m.dst_pool, list(m.dst_pages))
+            moves.remove(m)
+            got = s.new_alloc[d].try_alloc(pool, 1)
+            if got is not None:
+                return got[0]
+        return s.new_alloc[d].alloc(pool, 1)[0]
+
     def _delta_pairs(self, live_ids) -> tuple:
         """Dirty-page pairs per (data_group, plan row): pages that received
         decode writes after the plan snapshot, plus pages allocated during
-        the window (destination pages are topped up here)."""
+        the window (destination pages are topped up here).
+
+        CoW-aware: a page the request copy-on-write-forked during the
+        window (r.pages[i] != the plan snapshot) keeps the *shared*
+        destination page for the other sharers — this request's planned
+        reference is dropped and a private destination page is allocated,
+        then delta-copied from its private source."""
         s = self.session
         page = self.cc.page_size
         per = [{g: [] for g in range(self.G)} for _ in range(self.Dd)]
@@ -373,25 +416,31 @@ class SwitchExecutor:
             if r.rid not in live_ids or not r.pages:
                 continue
             if (r.kv_len == a.snap_kv_len
-                    and len(a.new_pages) >= len(r.pages)):
+                    and len(a.new_pages) >= len(r.pages)
+                    and list(a.snap_pages) == r.pages):
                 continue    # untouched since snapshot: staged copy is final
             d = r.data_group
+            dst_pool = max(a.new_owner, 0)
             while len(a.new_pages) < len(r.pages):
-                a.new_pages.extend(
-                    s.new_alloc[d].alloc(max(a.new_owner, 0), 1))
+                a.new_pages.append(self._dst_page(d, dst_pool))
             lo_idx = max(a.snap_kv_len - 1, 0) // page
             hi_idx = min(len(r.pages) - 1, max(r.kv_len - 1, 0) // page)
-            row = (r.owner_rank if s.kv_dir == "ep_to_tp"
+            row = (r.pool_rank if s.kv_dir == "ep_to_tp"
                    else a.new_owner)
             for i in range(lo_idx, hi_idx + 1):
+                cowed = i < len(a.snap_pages) and r.pages[i] != a.snap_pages[i]
+                if cowed and s.new_alloc[d].refcount(
+                        dst_pool, a.new_pages[i]) > 1:
+                    s.new_alloc[d].release(dst_pool, [a.new_pages[i]])
+                    a.new_pages[i] = self._dst_page(d, dst_pool)
                 per[d][max(row, 0)].append((r.pages[i], a.new_pages[i]))
                 n += 1
         return per, n
 
     def commit(self, live, kv_flat):
-        """Pause-phase: delta-copy dirty pages, reconcile allocators, apply
-        metadata, hand over the staged buffers. Returns (experts', kv',
-        alloc', stats)."""
+        """Pause-phase: delta-copy dirty pages, reconcile allocators and
+        caches, apply metadata, hand over the staged buffers. Returns
+        (experts', kv', alloc', caches', stats)."""
         s = self.session
         assert s is not None and s.done
         t_pause0 = time.perf_counter()
@@ -403,6 +452,20 @@ class SwitchExecutor:
             if a.req.rid not in live_ids and a.new_pages:
                 s.new_alloc[a.req.data_group].release(
                     max(a.new_owner, 0), a.new_pages)
+
+        # cache entries evicted during the window: release their planned
+        # destination refs NOW, before the delta pass — its top-up/CoW
+        # allocations must be able to use those reclaimable pages
+        if s.caches is not None and s.kv_dir is not None:
+            s.alive_moves = []
+            for d in range(self.Dd):
+                keep = []
+                for m in s.cache_moves[d]:
+                    if s.caches[d].move_alive(m):
+                        keep.append(m)
+                    else:
+                        s.new_alloc[d].release(m.dst_pool, list(m.dst_pages))
+                s.alive_moves.append(keep)
 
         delta_pages = 0
         if s.kv_dst is not None:
@@ -428,6 +491,14 @@ class SwitchExecutor:
 
         apply_assignments([a for a in s.assignments
                            if a.req.rid in live_ids])
+        # surviving cache entries re-index under the destination pools
+        # (dead moves released their dst refs above; _dst_page may have
+        # sacrificed more to serve live requests' top-ups)
+        new_caches = s.caches
+        if s.caches is not None and s.kv_dir is not None:
+            new_caches = [
+                PrefixCache.rebuild(s.new_alloc[d], s.alive_moves[d])
+                for d in range(self.Dd)]
         if s.kv_dst is not None:
             jax.block_until_ready(s.kv_dst)
         if s.experts_dst is not None:
@@ -443,6 +514,6 @@ class SwitchExecutor:
             delta_pages=delta_pages, chunks=len(s.chunks),
             live_requests=s.live_requests)
         out = (s.experts_dst, s.kv_dst if s.kv_dst is not None else kv_flat,
-               s.new_alloc, stats)
+               s.new_alloc, new_caches, stats)
         self.session = None
         return out

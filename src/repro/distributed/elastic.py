@@ -15,7 +15,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.layouts import EP
 from repro.serving.request import State
 
 
@@ -61,30 +60,26 @@ def fail_rank(engine, data_group: int, rank: int) -> list:
     the group holds a head-shard there, so the whole group re-prefills —
     the capacity/blast-radius asymmetry of the two layouts.
     """
+    # fused decode: consume in-flight tokens so every request sits at a
+    # step boundary (requeueing mid-flight would leave a live device slot
+    # writing KV through a stale block table into released pages)
+    engine._drain_decode()
+    per_rank = engine.active.kv_per_rank
     hit = []
     for r in list(engine.running.values()) + list(engine.prefilling):
         if r.data_group != data_group:
             continue
-        if engine.active == EP and r.owner_rank != rank:
+        if per_rank and r.owner_rank != rank:
             continue
         hit.append(r)
+    # the failed rank's cached prefixes are gone with its HBM: drop the
+    # affected pool's index (per-rank pool under EP; whole group when the
+    # pooled view sharded every page's heads across the rank)
+    if getattr(engine, "prefix", None) is not None:
+        engine.prefix[data_group].drop_pool(rank if per_rank else 0)
     for r in hit:
-        # release pages, teacher-force the generated prefix, re-prefill
-        owner = r.owner_rank if engine.active == EP else 0
-        if r.pages:
-            engine.alloc[data_group].release(max(owner, 0), r.pages)
-            r.pages = []
-        r.prompt = list(r.prompt) + list(r.output)
-        if r.forced_len is not None:
-            r.forced_len = max(1, r.forced_len - len(r.output))
-        else:
-            r.max_new_tokens = max(1, r.max_new_tokens - len(r.output))
-        r.output = []
-        r.prefill_pos = 0
-        r.state = State.WAITING
-        r.owner_rank = 0
-        engine.running.pop(r.rid, None)
-        if r in engine.prefilling:
-            engine.prefilling.remove(r)
-        engine.waiting.append(r)
+        # release pages (to the recorded pool), teacher-force the generated
+        # prefix, vacate the device slot, re-prefill — the engine's shared
+        # requeue path (same one preemption uses)
+        engine.requeue_for_reprefill(r)
     return hit

@@ -58,6 +58,12 @@ def main():
                     help="fuse N decode steps under one dispatch (device-"
                          "resident decode state; N=1 is the classic "
                          "per-token host loop)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix page reuse (refcounted "
+                         "pages + CoW; on by default)")
+    ap.add_argument("--samples-per-prompt", type=int, default=1,
+                    help="rollout workload: completions sampled per "
+                         "distinct prompt (shared-prefix groups)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=5000)
     args = ap.parse_args()
@@ -86,9 +92,13 @@ def main():
                                           ladder=(g, 4 * g, 16 * g),
                                           prefill_chunk=64, policy=pol,
                                           decode_steps=args.decode_steps,
+                                          prefix_cache=not args.no_prefix_cache,
                                           seed=args.seed))
     if args.workload == "rollout":
-        reqs = rollout_batch(RolloutSpec(scale=args.scale), seed=args.seed)
+        reqs = rollout_batch(
+            RolloutSpec(scale=args.scale,
+                        samples_per_prompt=args.samples_per_prompt),
+            seed=args.seed)
     else:
         reqs = bursty_trace(BurstySpec(scale=args.scale), seed=args.seed)
     for r in reqs:

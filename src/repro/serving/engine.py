@@ -29,8 +29,10 @@ from repro.core.switch_exec import SwitchExecutor
 from repro.models.common import ModelConfig
 from repro.models.registry import init_params
 from repro.serving.device_state import DeviceDecodeState
-from repro.serving.kvcache import (CacheConfig, PageAllocator,
-                                   block_table_array, pages_needed)
+from repro.serving.kvcache import (COPY_W, CacheConfig, PageAllocator,
+                                   PrefixCache, full_prompt_hash,
+                                   make_copy_pages, pages_needed,
+                                   token_page_hashes)
 from repro.serving.metrics import ServeMetrics
 from repro.serving.request import Request, State
 from repro.serving.steps import (build_decode_loop, build_decode_pack,
@@ -62,6 +64,10 @@ class EngineConfig:
     # interpret elsewhere; "ref" = the pure-jnp oracle — the fast path on
     # CPU hosts, where interpret-mode Pallas is a debugging mode)
     attn_backend: str | None = None
+    # share page-aligned prompt prefixes across requests (refcounted pages
+    # + CoW; DESIGN.md §6). Greedy outputs are byte-identical with the
+    # cache on or off — it only removes redundant prefill compute/bytes.
+    prefix_cache: bool = True
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -134,6 +140,10 @@ class MoebiusEngine:
                 mesh, jax.sharding.PartitionSpec(data_axis, model_axis)))
         self.alloc = [PageAllocator(cc, cfg, self.G, self.active)
                       for _ in range(self.Dd)]
+        # prefix cache: one index per data group over that group's allocator
+        self.prefix = ([PrefixCache(self.alloc[d]) for d in range(self.Dd)]
+                       if self.ecfg.prefix_cache else None)
+        self._copy_fns: dict = {}          # CoW page copier, per layout
 
         # --- resident runtimes (all layouts, ladder of decode rungs) ---
         self.rt = ResidentRuntime(ladder=tuple(
@@ -231,6 +241,10 @@ class MoebiusEngine:
                     self._decode_loop_fn(lo, b, self.ecfg.decode_steps)
             if lo is not self.active:
                 continue
+            if self.ecfg.prefix_cache:
+                # compile the CoW page copier outside the serving loop
+                # (a null plan: the reserved page 0 self-copies)
+                self._copy_pages_dev(0, 0, [(0, 0)])
             pk = self._assemble_pack(lo)
             key = jax.random.key_data(jax.random.PRNGKey(0))
             maxp = self.cc.max_pages_per_req
@@ -270,10 +284,193 @@ class MoebiusEngine:
         return pk
 
     # ------------------------------------------------------------------
+    # page lifecycle (refcounts, prefix cache, copy-on-write)
+    # ------------------------------------------------------------------
+    def _prefix_keys(self, r: Request) -> None:
+        if r.page_hashes is None:
+            r.page_hashes = token_page_hashes(r.prompt, self.cc.page_size)
+            r.full_hash = full_prompt_hash(r.prompt, self.cc.page_size,
+                                           page_hashes=r.page_hashes)
+
+    def _copy_pages_dev(self, d: int, pool: int, pairs: list) -> None:
+        """Device page copy within the active view (the CoW mover). EP view:
+        the pair applies to `pool`'s rank only; pooled views: every rank
+        copies its head-slice of the page."""
+        fn = self._copy_fns.get(self.active)
+        if fn is None:
+            fn = make_copy_pages(self.cfg, self.cc, self.mesh, self.active,
+                                 model_axis=self.m, data_axis=self.da)
+            self._copy_fns[self.active] = fn
+        rows = [pool] if self.active.kv_per_rank else list(range(self.G))
+        for b in range(0, len(pairs), COPY_W):
+            blk = pairs[b:b + COPY_W]
+            sp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
+            dp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
+            vm = np.zeros((self.Dd, self.G, COPY_W), bool)
+            for g in rows:
+                for i, (a, bdst) in enumerate(blk):
+                    sp[d, g, i], dp[d, g, i], vm[d, g, i] = a, bdst, True
+            self.kv_flat = fn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
+                              jnp.asarray(vm))
+
+    def _alloc_or_evict(self, d: int, pool: int, n: int) -> list | None:
+        """try_alloc with prefix-cache eviction as the fallback: LRU cache
+        entries are dropped (releasing only the cache's refs) until the
+        pool can serve the allocation."""
+        got = self.alloc[d].try_alloc(pool, n)
+        if got is None and self.prefix is not None:
+            self.prefix[d].evict(pool, n)
+            got = self.alloc[d].try_alloc(pool, n)
+        return got
+
+    def _cow_if_shared(self, r: Request) -> bool:
+        """Copy-on-write the page decode is about to append to when it is
+        shared (refcount > 1: other requests and/or the prefix cache hold
+        it). Returns False when the pool can't supply the private copy."""
+        d, pool = r.data_group, r.pool_rank
+        widx = max(r.kv_len + r.inflight - 1, 0) // self.cc.page_size
+        if widx >= len(r.pages):
+            return True
+        old = r.pages[widx]
+        if self.alloc[d].refcount(pool, old) <= 1:
+            return True
+        got = self._alloc_or_evict(d, pool, 1)
+        if got is None:
+            # no page for a copy — but if the only co-owners are cache
+            # entries, dropping them makes the page privately writable in
+            # place (no copy needed at all)
+            if self.prefix is not None:
+                self.prefix[d].drop_refs_for_page(pool, old)
+                if self.alloc[d].refcount(pool, old) <= 1:
+                    return True
+            return False
+        self._copy_pages_dev(d, pool, [(old, got[0])])
+        self.alloc[d].release(pool, [old])
+        r.pages[widx] = got[0]
+        self.metrics.cow()
+        return True
+
+    def requeue_for_reprefill(self, r: Request) -> None:
+        """Teacher-force-requeue a live request: release its pages (to the
+        recorded pool), fold the generated tokens into the prompt, vacate
+        any fused-decode device slot, and send it back to `waiting` for
+        re-prefill. Shared by pool-exhaustion preemption and rank-failure
+        recovery (distributed/elastic.py). Requires r.inflight == 0 —
+        callers drain the fused pipeline first."""
+        assert r.inflight == 0, "requeueing a request with in-flight tokens"
+        d = r.data_group
+        if r.pages:
+            self.alloc[d].release(r.pool_rank, r.pages)
+            r.pages = []
+        r.prompt = list(r.prompt) + list(r.output)
+        if r.forced_len is not None:
+            r.forced_len = max(1, r.forced_len - len(r.output))
+        else:
+            r.max_new_tokens = max(1, r.max_new_tokens - len(r.output))
+        r.output = []
+        r.prefill_pos = 0
+        r.page_hashes = r.full_hash = None      # prompt changed
+        r.state = State.WAITING
+        r.owner_rank = 0
+        r.pool_rank = 0
+        self._clear_slot(r)
+        self.running.pop(r.rid, None)
+        if r in self.prefilling:
+            self.prefilling.remove(r)
+        self.waiting.append(r)
+
+    def _preempt(self, r: Request) -> None:
+        """Pool-exhaustion victim (the youngest holder of a starved pool)."""
+        self.requeue_for_reprefill(r)
+        self.metrics.preemptions += 1
+
+    def _truncate(self, r: Request) -> None:
+        """Per-request page cap reached: finish with what we have."""
+        r.truncated = True
+        self._clear_slot(r)
+        self._finish(r)
+        self.metrics.truncations += 1
+
+    def _clear_slot(self, r: Request) -> None:
+        """Vacate a fused-decode device slot (zero budget, null pages)."""
+        st = self._dstate
+        if (st is not None and r.slot is not None and r.slot >= 0
+                and st.slot_rid[r.data_group, r.slot] == r.rid):
+            st.slot_rid[r.data_group, r.slot] = -1
+            st.apply([], [(r.data_group, r.slot, 0, [])])
+        r.slot = None
+        r.budget_dev = 0
+
+    def _handle_starvation(self, starved: list, exclude=()) -> None:
+        """Pool-dry requests that cannot even be budget-clamped forward.
+        Preempt the youngest page-holder of the starved pool (freeing its
+        pages for the rest); a request starving ALONE in its pool is
+        truncated — no amount of waiting can ever free pages for it.
+        `exclude`: requests already scheduled into the current dispatch
+        (their pages are live for this step; they keep making progress)."""
+        seen = set()
+        ex = {q.rid for q in exclude}
+        for r in starved:
+            key = (r.data_group, r.pool_rank)
+            if key in seen or r.rid not in self.running:
+                continue
+            seen.add(key)
+            # EVERY page-holder counts toward "is r really alone" —
+            # running (even mid-flight: its finish will free pages) and
+            # prefilling alike; only settled, unscheduled ones are safe to
+            # preempt right now
+            holders = [q for q in
+                       list(self.running.values()) + self.prefilling
+                       if (q.data_group, q.pool_rank) == key and q.pages]
+            eligible = [q for q in holders
+                        if q.inflight == 0 and q.rid not in ex]
+            if len(holders) > 1 and eligible:
+                victim = max(eligible, key=lambda q: (q.arrival_s, q.rid))
+                self._preempt(victim)
+            elif holders == [r]:
+                self._truncate(r)
+
+    def clear_prefix_cache(self) -> None:
+        """Drop every cached prefix (releases the cache's page refs)."""
+        if self.prefix is not None:
+            for pc in self.prefix:
+                pc.drop_all()
+
+    def _cache_insert(self, r: Request) -> None:
+        """Index a freshly prefilled prompt: chain entries for its full
+        pages, plus the whole-prompt entry (partially-filled tail page
+        included — the CoW rule keeps it immutable once indexed)."""
+        if self.prefix is None or r.prompt_len < 1:
+            return
+        self._prefix_keys(r)
+        cache, pool = self.prefix[r.data_group], r.pool_rank
+        fp = r.prompt_len // self.cc.page_size
+        cache.insert_chain(pool, r.page_hashes[:fp], r.pages[:fp])
+        npg = pages_needed(r.prompt_len, self.cc.page_size)
+        if r.prompt_len > 1 and npg <= len(r.pages):
+            cache.insert_full(pool, r.full_hash, r.pages[:npg], r.prompt_len)
+
+    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.pending.append(req)
+
+    def _pick_group(self, r: Request, load: list) -> int:
+        """Least-loaded data group, with a mild prefix-affinity bias: a
+        group whose cache already holds this prompt's first page (or whole
+        prompt) wins ties and small imbalances — shared-prefix rollout
+        groups then land where their pages are."""
+        best = min(range(self.Dd), key=lambda d: load[d])
+        if self.prefix is None or self.Dd == 1:
+            return best
+        self._prefix_keys(r)
+        hits = [d for d in range(self.Dd)
+                if self.prefix[d].holds_prefix(r.page_hashes, r.full_hash)]
+        if not hits:
+            return best
+        cand = min(hits, key=lambda d: load[d])
+        return cand if load[cand] <= load[best] + 2 else best
 
     def _admit(self):
         t = self.now()
@@ -285,7 +482,7 @@ class MoebiusEngine:
             load[q.data_group] += 1
         while self.pending and self.pending[0].arrival_s <= t:
             r = self.pending.popleft()
-            r.data_group = min(range(self.Dd), key=lambda d: load[d])
+            r.data_group = self._pick_group(r, load)
             load[r.data_group] += 1
             max_tok = (self.cc.max_pages_per_req * self.cc.page_size
                        - r.prompt_len - 1)
@@ -305,29 +502,148 @@ class MoebiusEngine:
                 load[q.owner_rank] += 1
         return load
 
+    def _pool_hit(self, d: int, pool: int, r: Request) -> tuple:
+        """(shared_pages, start_pos) the pool's cache can contribute.
+        Full-prompt hits skip everything but the last prompt token; chain
+        hits skip page-aligned prefixes. start is always < prompt_len (one
+        token must run through prefill to produce the first logits)."""
+        page = self.cc.page_size
+        cache = self.prefix[d]
+        full = cache.lookup_full(pool, r.full_hash)
+        if (full is not None and full[1] == r.prompt_len
+                and r.prompt_len > 1
+                and len(full[0]) <= self.cc.max_pages_per_req):
+            return list(full[0]), r.prompt_len - 1
+        hit = cache.match(pool, r.page_hashes)[:self.cc.max_pages_per_req]
+        if not hit:
+            return [], 0
+        start = min(len(hit) * page, r.prompt_len - 1)
+        return hit, max(start, 0)
+
+    def _acquire_pages(self, r: Request, d: int, pool: int, n_pages: int,
+                       hit: tuple | None = None) -> tuple | None:
+        """Allocate `n_pages` for a prefill, sharing whatever prefix the
+        pool's cache holds: full shared pages are forked (refcount only);
+        the page prefill will write into first — the partially-filled tail
+        of a full-prompt hit, or the last page of an exactly-page-aligned
+        chain hit — is copy-on-write-cloned instead. `hit` carries a
+        precomputed `_pool_hit` result (the EP rank loop already walked
+        every pool). Returns (pages, start_pos, n_shared) or None when the
+        pool is dry."""
+        page = self.cc.page_size
+        shared, start = ([], 0)
+        if self.prefix is not None:
+            self._prefix_keys(r)
+            shared, start = hit if hit is not None \
+                else self._pool_hit(d, pool, r)
+        widx = start // page                   # first page prefill writes
+        # PIN the hit before any eviction: evict() below may drop the very
+        # entry we matched, and an unpinned cache-only page would return to
+        # the free list out from under us
+        if shared:
+            self.alloc[d].fork(pool, shared)
+        fresh = (n_pages - len(shared)) + (1 if widx < len(shared) else 0)
+        # watermark: starting a prefill must leave headroom for the pool's
+        # RUNNING requests to keep growing — without it, a big prefill and
+        # a starved decoder thrash (prefill grabs every page preemption
+        # frees, each iteration, forever). Only runners that can still
+        # grow count; one already holding its final page reserves nothing.
+        maxp = self.cc.max_pages_per_req
+        reserve = sum(
+            1 for q in self.running.values()
+            if q.data_group == d and q.pool_rank == pool and q.pages
+            and len(q.pages) < min(
+                pages_needed(q.prompt_len + q.target_len + 1,
+                             self.cc.page_size), maxp))
+        if (self.alloc[d].free_pages(pool) < fresh + reserve
+                and self.prefix is not None):
+            self.prefix[d].evict(pool, fresh + reserve)
+        if self.alloc[d].free_pages(pool) < fresh + reserve:
+            if shared:
+                self.alloc[d].release(pool, shared)
+            return None
+        got = self.alloc[d].try_alloc(pool, fresh)
+        if got is None:
+            if shared:
+                self.alloc[d].release(pool, shared)
+            return None
+        pages, gi = [], iter(got)
+        for i, p in enumerate(shared):
+            if i == widx:
+                np_ = next(gi)
+                self._copy_pages_dev(d, pool, [(p, np_)])
+                self.alloc[d].release(pool, [p])   # swap pin for the copy
+                self.metrics.cow()
+                pages.append(np_)
+            else:
+                pages.append(p)
+        pages.extend(gi)
+        if self.prefix is not None:
+            self.prefix[d].touch(pool, r.page_hashes[:len(shared)],
+                                 r.full_hash)
+            self.metrics.prefix(len(shared), start)
+        return pages, start, len(shared)
+
+    def _prefix_leader_inflight(self, r: Request) -> bool:
+        """True when another request with the same prompt (or first page)
+        is mid-prefill in this group: the follower waits one or two
+        iterations so it can fork the leader's pages instead of redundantly
+        prefilling the shared prefix — the whole point of the cache under
+        the paper's simultaneous-arrival rollout bursts."""
+        if self.prefix is None:
+            return False
+        self._prefix_keys(r)
+        for q in self.prefilling:
+            if q.data_group != r.data_group or q.page_hashes is None:
+                continue
+            if (q.full_hash == r.full_hash
+                    or (r.page_hashes and q.page_hashes
+                        and q.page_hashes[0] == r.page_hashes[0])):
+                return True
+        return False
+
     def _start_prefill(self, r: Request) -> bool:
         d = r.data_group
-        n_pages = pages_needed(r.prompt_len + r.target_len + 1,
-                               self.cc.page_size)
+        if self._prefix_leader_inflight(r):
+            return False
+        # LAZY allocation: pages for the prompt + the first decode write
+        # only — decode grows the block table on demand (_ensure_pages /
+        # _plan_fused), so resident pages track live tokens, not worst case
+        n_pages = pages_needed(r.prompt_len + 1, self.cc.page_size)
         n_pages = min(n_pages, self.cc.max_pages_per_req)
         if self.active.kv_per_rank:
             load = self._ep_rank_load(d)
             cap = self._ladder_for(self.active)[-1] // self.G
-            order = sorted(range(self.G), key=lambda g: load[g])
+            hits = None
+            if self.prefix is not None:
+                self._prefix_keys(r)
+                # prefer the rank whose pool caches the longest prefix
+                # (each pool's hit is computed ONCE and reused below)
+                hits = {g: self._pool_hit(d, g, r) for g in range(self.G)}
+                order = sorted(range(self.G),
+                               key=lambda g: (-hits[g][1], load[g], g))
+            else:
+                order = sorted(range(self.G), key=lambda g: (load[g], g))
             for g in order:
-                if load[g] < cap and self.alloc[d].free_pages(g) >= n_pages:
+                if load[g] >= cap:
+                    continue
+                got = self._acquire_pages(r, d, g, n_pages,
+                                          hit=hits[g] if hits else None)
+                if got is not None:
                     r.owner_rank = g
-                    r.pages = self.alloc[d].alloc(g, n_pages)
+                    r.pool_rank = g
+                    r.pages, r.prefill_pos, _ = got
                     break
             else:
                 return False
         else:
-            if self.alloc[d].free_pages(0) < n_pages:
+            got = self._acquire_pages(r, d, 0, n_pages)
+            if got is None:
                 return False
             r.owner_rank = -1
-            r.pages = self.alloc[d].alloc(0, n_pages)
+            r.pool_rank = 0
+            r.pages, r.prefill_pos, _ = got
         r.state = State.PREFILL
-        r.prefill_pos = 0
         self.prefilling.append(r)
         return True
 
@@ -367,12 +683,14 @@ class MoebiusEngine:
                                jnp.asarray(toks), jnp.asarray(pos),
                                jnp.asarray(vl), jnp.asarray(bt), key)
         nxt = np.asarray(nxt)
+        self.metrics.prefill(int(vl.sum()))
         t = self.now()
         for r in picked:
             d = r.data_group
             row = self._prefill_row(r)
             r.prefill_pos += int(vl[d, row])
             if r.prefill_pos >= r.prompt_len:
+                self._cache_insert(r)
                 first = int(nxt[d, row])
                 r.output.append(first)
                 r.first_token_s = t
@@ -389,27 +707,34 @@ class MoebiusEngine:
         r.state = State.FINISHED
         r.finish_s = self.now()
         self.running.pop(r.rid, None)
-        d = r.data_group
-        rank = r.owner_rank if self.active.kv_per_rank else 0
-        self.alloc[d].release(max(rank, 0), r.pages)
+        # release to the pool recorded at alloc time (updated only by
+        # apply_assignments) — NOT one recomputed from the active layout:
+        # a request that prefilled under one KV view and finishes after a
+        # view-changing switch would leak in one pool and later double-free
+        # in the other
+        if r.pages:
+            self.alloc[r.data_group].release(r.pool_rank, r.pages)
         r.pages = []
         self.finished.append(r)
         self.metrics.finish(r)
 
-    def _ensure_pages(self, r: Request) -> bool:
+    def _ensure_pages(self, r: Request):
+        """Grow the block table for the next decode write. Returns True,
+        or "cap" (per-request page cap reached — finish with truncation)
+        or "dry" (pool exhausted even after cache eviction — preempt)."""
+        if not self._cow_if_shared(r):
+            return "dry"
         need = pages_needed(r.kv_len + 1, self.cc.page_size)
         if need <= len(r.pages):
             return True
         if need > self.cc.max_pages_per_req:
-            return False
-        d = r.data_group
-        rank = r.owner_rank if self.active.kv_per_rank else 0
-        try:
-            r.pages.extend(self.alloc[d].alloc(max(rank, 0),
-                                               need - len(r.pages)))
-            return True
-        except MemoryError:
-            return False
+            return "cap"
+        got = self._alloc_or_evict(r.data_group, r.pool_rank,
+                                   need - len(r.pages))
+        if got is None:
+            return "dry"
+        r.pages.extend(got)
+        return True
 
     def _decode_once(self):
         if not self.running:
@@ -454,10 +779,18 @@ class MoebiusEngine:
         vl = np.zeros((self.Dd, B), np.int32)
         bt = np.zeros((self.Dd, B, maxp), np.int32)
         stepped: list[Request] = []
-        for r in self.running.values():
+        starved: list[Request] = []
+        for r in list(self.running.values()):
             if r.slot is None or r.slot >= B:
                 continue
-            if not self._ensure_pages(r):
+            ok = self._ensure_pages(r)
+            if ok == "cap":
+                # at max_pages_per_req with no room for the next token:
+                # retrying forever would livelock — finish with truncation
+                self._truncate(r)
+                continue
+            if ok == "dry":
+                starved.append(r)
                 continue
             d = r.data_group
             toks[d, r.slot, 0] = r.output[-1]
@@ -466,6 +799,11 @@ class MoebiusEngine:
             vl[d, r.slot] = 1
             bt[d, r.slot, :len(r.pages)] = r.pages
             stepped.append(r)
+        if starved:
+            # nobody can free pages for a starved pool by finishing if the
+            # pool's holders are themselves stuck — preempt/truncate so the
+            # engine always makes progress (no retry-forever livelock)
+            self._handle_starvation(starved, exclude=stepped)
         if not stepped:
             return
         fn = self._decode_fn(self.active, B)
@@ -533,6 +871,7 @@ class MoebiusEngine:
         page = self.cc.page_size
         maxp = self.cc.max_pages_per_req
         joins, grows, plan = [], [], []
+        capped, starved = [], []
         bs_loc = st.B // self.G if self.active.slots_sharded else st.B
         # slots are sticky (rotation would re-scatter device rows every
         # step); fairness under oversubscription comes from join order —
@@ -562,18 +901,30 @@ class MoebiusEngine:
                 continue                   # finished on device; awaiting fetch
             kv_eff = r.kv_len + r.inflight
             horizon = min(remaining, N)
-            rank = max(r.owner_rank, 0) if self.active.kv_per_rank else 0
             need = min(pages_needed(kv_eff + horizon - 1, page), maxp)
             grew = False
+            # the substep about to write page (kv_eff-1)//page must own it
+            # privately — CoW-fork a shared (prefix-cached) tail first
+            widx = (kv_eff - 1) // page
+            old_tail = r.pages[widx] if widx < len(r.pages) else None
+            cow_ok = self._cow_if_shared(r)
+            if cow_ok and old_tail is not None and r.pages[widx] != old_tail:
+                grew = True                # CoW swapped a block-table entry
             if need > len(r.pages):
-                got = self.alloc[d].try_alloc(rank, need - len(r.pages))
+                got = self._alloc_or_evict(d, r.pool_rank,
+                                           need - len(r.pages))
                 if got:
                     r.pages.extend(got)
                     grew = True
             # tokens the allocated pages can still absorb (the fed token
             # sits at kv_eff - 1; substep j writes position kv_eff - 1 + j)
-            afford = len(r.pages) * page - kv_eff + 1
+            afford = (len(r.pages) * page - kv_eff + 1) if cow_ok else 0
             b_target = remaining if afford >= horizon else max(0, afford)
+            if b_target <= 0 < remaining and r.inflight == 0:
+                if cow_ok and pages_needed(kv_eff + 1, page) > maxp:
+                    capped.append(r)       # page cap: truncate at boundary
+                    continue
+                starved.append(r)          # pool dry: clamp -> may preempt
             if is_join:
                 joins.append((d, s, r.output[-1], kv_eff - 1, b_target,
                               r.pages))
@@ -583,7 +934,7 @@ class MoebiusEngine:
             steps = min(N, b_target)
             if steps > 0:
                 plan.append((d, s, r, steps))
-        return joins, grows, plan
+        return joins, grows, plan, capped, starved
 
     def _decode_fused(self):
         N = self.ecfg.decode_steps
@@ -595,11 +946,23 @@ class MoebiusEngine:
         if st is None or st.B != B or st.layout is not self.active:
             self._drain_decode()           # step boundary before a rebuild
             st = self._rebuild_dstate(B)
-        joins, grows, plan = self._plan_fused(st, N)
+        joins, grows, plan, capped, starved = self._plan_fused(st, N)
         # deltas must land even when nothing steps: _plan_fused already
         # recorded the joins in the host mirror, and a budget-clamped join
         # still needs its token/position/table row on device for later
         st.apply(joins, grows)
+        for r in capped:
+            if r.inflight == 0:
+                self._truncate(r)          # page cap: no growth can help
+        if starved:
+            # recover a dry pool NOW, even while other pools keep stepping
+            # (a starved pool's holders never reach the plan, so waiting
+            # for an empty plan would strand it forever). Starved requests
+            # have budget 0 and inflight 0 — their slots write nothing, so
+            # preemption is safe alongside the upcoming dispatch.
+            self._handle_starvation(
+                [r for r in starved if r.rid in self.running],
+                exclude=[r for _, _, r, _ in plan])
         if not plan:
             self._drain_decode()           # nothing live; flush the pipeline
             return
@@ -676,9 +1039,10 @@ class MoebiusEngine:
             rec = self._execute_switch_chunked(target)
         else:
             experts = self._experts if self.cfg.is_moe else None
-            experts, self.kv_flat, self.alloc, st = self.switcher.monolithic(
+            (experts, self.kv_flat, self.alloc, self.prefix,
+             st) = self.switcher.monolithic(
                 self.active, target, self._live(), experts, self.kv_flat,
-                cur_alloc=self.alloc)
+                cur_alloc=self.alloc, caches=self.prefix)
             if self.cfg.is_moe:
                 self._experts = experts
             self.active = target
@@ -698,7 +1062,8 @@ class MoebiusEngine:
         sess = self.switcher.start(
             self.active, target, self._live(),
             self._experts if self.cfg.is_moe else None,
-            self.kv_flat, self.ecfg.chunk_layers, cur_alloc=self.alloc)
+            self.kv_flat, self.ecfg.chunk_layers, cur_alloc=self.alloc,
+            caches=self.prefix)
         while not sess.done:
             self.switcher.advance(
                 self._experts if self.cfg.is_moe else None, self.kv_flat)
@@ -709,8 +1074,8 @@ class MoebiusEngine:
         # drain to a step boundary so the commit-time dirty-page delta sees
         # every KV write the overlap window produced
         self._drain_decode()
-        experts, self.kv_flat, self.alloc, st = self.switcher.commit(
-            self._live(), self.kv_flat)
+        (experts, self.kv_flat, self.alloc, self.prefix,
+         st) = self.switcher.commit(self._live(), self.kv_flat)
         if self.cfg.is_moe:
             self._experts = experts
         self.active = target
@@ -744,6 +1109,7 @@ class MoebiusEngine:
         self.waiting = still
         self._run_prefill()
         self._decode_step()
+        self.metrics.pages_resident(sum(a.total_held() for a in self.alloc))
         self.metrics.sample_mode(self.now(), self.active, len(self.running))
 
     def run(self, max_steps: int = 100000):

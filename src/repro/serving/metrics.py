@@ -16,10 +16,38 @@ class ServeMetrics:
     decode_dispatches: int = 0
     decode_substeps: int = 0
     decode_tokens: int = 0
+    # prefill compute actually dispatched (tokens through the prefill step)
+    prefill_tokens: int = 0
+    # prefix cache: per-request lookup outcomes + page-level sharing
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_saved: int = 0
+    prefix_pages_shared: int = 0
+    cow_forks: int = 0
+    # page-lifecycle events
+    preemptions: int = 0
+    truncations: int = 0
+    kv_pages_peak: int = 0
 
     def finish(self, req) -> None:
         self.records.append((req.rid, req.arrival_s, req.first_token_s,
                              req.finish_s, len(req.output)))
+
+    def prefill(self, tokens: int) -> None:
+        self.prefill_tokens += tokens
+
+    def prefix(self, hit_pages: int, tokens_saved: int) -> None:
+        self.prefix_lookups += 1
+        if hit_pages:
+            self.prefix_hits += 1
+            self.prefix_pages_shared += hit_pages
+            self.prefix_tokens_saved += tokens_saved
+
+    def cow(self, n: int = 1) -> None:
+        self.cow_forks += n
+
+    def pages_resident(self, held: int) -> None:
+        self.kv_pages_peak = max(self.kv_pages_peak, held)
 
     def sample_mode(self, t: float, mode: str, running: int) -> None:
         self.mode_samples.append((t, mode, running))
@@ -69,4 +97,15 @@ class ServeMetrics:
             "decode_tokens_per_dispatch": (
                 self.decode_tokens / self.decode_dispatches
                 if self.decode_dispatches else float("nan")),
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits / self.prefix_lookups
+                                if self.prefix_lookups else float("nan")),
+            "prefix_tokens_saved": self.prefix_tokens_saved,
+            "prefix_pages_shared": self.prefix_pages_shared,
+            "cow_forks": self.cow_forks,
+            "preemptions": self.preemptions,
+            "truncations": self.truncations,
+            "kv_pages_peak": self.kv_pages_peak,
         }

@@ -26,9 +26,19 @@ class Request:
     # placement (layout-dependent, rewritten by a switch)
     data_group: int = 0
     owner_rank: int = 0            # EP: owning model-rank; TP: -1 (shared)
+    # pool the pages were allocated from, recorded AT ALLOC TIME and updated
+    # only by a switch's apply_assignments — releases always go here, never
+    # to a pool recomputed from whatever layout happens to be active
+    pool_rank: int = 0
     slot: int | None = -1          # decode batch slot
     slot_local: int = 0            # EP: slot within the owner rank
     pages: list[int] = field(default_factory=list)
+    # prefix-cache keys (computed once per prompt; reset when the prompt is
+    # rewritten, e.g. teacher-forced re-prefill after preemption/failure)
+    page_hashes: tuple | None = None
+    full_hash: int | None = None
+    # finished early because the per-request page cap was reached
+    truncated: bool = False
     # fused-decode bookkeeping (engine decode_steps > 1): tokens dispatched
     # on device but not yet fetched, and the remaining-token budget the
     # DeviceDecodeState currently holds for this request's slot

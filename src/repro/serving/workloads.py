@@ -56,25 +56,45 @@ class RolloutSpec:
     output_p99: int = 10386
     output_cap: int = 32768
     scale: float = 1.0
+    # completions sampled per distinct prompt (RL rollouts draw many
+    # samples from each question): requests arrive in groups of
+    # `samples_per_prompt` sharing one byte-identical prompt — the
+    # shared-prefix structure the engine's prefix cache exploits
+    samples_per_prompt: int = 1
+    # prompt token ids are drawn from [lo, hi) — keep hi <= the model's
+    # vocab_size (out-of-vocab ids embed differently under the sharded vs
+    # replicated lookup and break cross-layout byte-identity)
+    token_range: tuple = (5, 1000)
 
 
 def rollout_batch(spec: RolloutSpec, seed: int = 0) -> list[Request]:
-    """Heavy-tailed output lengths: lognormal fit to (median, p99), capped."""
+    """Heavy-tailed output lengths: lognormal fit to (median, p99), capped.
+
+    Scaling is monotone in BOTH directions: `scale` multiplies the request
+    count and every length distribution, up or down (a scale of 2 doubles
+    the batch; the old code silently clamped num_prompts at scale >= 1 and
+    could floor the prompt clamp to 1)."""
     rng = np.random.default_rng(seed)
     mu = math.log(spec.output_median * spec.scale)
     # p99 = exp(mu + 2.326 sigma)
     sigma = (math.log(max(spec.output_p99 * spec.scale, 2.0)) - mu) / 2.326
-    n = max(1, int(spec.num_prompts * (spec.scale if spec.scale < 1 else 1)))
+    n = max(1, int(round(spec.num_prompts * spec.scale)))
+    s = max(1, spec.samples_per_prompt)
+    n_prompts = max(1, -(-n // s))
     outs = np.minimum(np.exp(mu + sigma * rng.standard_normal(n)),
-                      spec.output_cap * spec.scale).astype(int)
+                      max(spec.output_cap * spec.scale, 1.0)).astype(int)
     outs = np.maximum(outs, 1)
+    pcap = max(1, int(spec.prompt_max * spec.scale))
     plens = np.minimum(
-        rng.gamma(4.0, spec.prompt_median * spec.scale / 4.0, n).astype(int) + 1,
-        int(spec.prompt_max * spec.scale) or 1)
+        rng.gamma(4.0, max(spec.prompt_median * spec.scale, 1.0) / 4.0,
+                  n_prompts).astype(int) + 1,
+        pcap)
+    lo, hi = spec.token_range
+    prompts = [list(rng.integers(lo, hi, plens[i])) for i in range(n_prompts)]
     reqs = []
     for i in range(n):
         reqs.append(Request(
-            rid=i, prompt=list(rng.integers(5, 1000, plens[i])),
+            rid=i, prompt=list(prompts[i // s]),
             max_new_tokens=int(outs[i]), forced_len=int(outs[i]),
             arrival_s=0.0))
     return reqs

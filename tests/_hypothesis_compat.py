@@ -1,7 +1,7 @@
 """Deterministic fallback for `hypothesis` when the real package is absent
 (offline CI containers). Provides the tiny subset this suite uses —
 `given`, `settings`, and the `integers` / `sampled_from` / `lists` /
-`booleans` strategies — running each property as a fixed number of
+`booleans` / `tuples` strategies — running each property as a fixed number of
 seeded example-based cases. The seed derives from the test's qualified
 name, so failures reproduce exactly across runs.
 
@@ -50,6 +50,10 @@ def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
     return _Strategy(sample)
 
 
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example_from(rng) for e in elems))
+
+
 def given(**strategies):
     def deco(fn):
         @functools.wraps(fn)
@@ -86,6 +90,7 @@ class _StrategiesModule:
     sampled_from = staticmethod(sampled_from)
     booleans = staticmethod(booleans)
     lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
 
 
 strategies = _StrategiesModule()

@@ -56,6 +56,10 @@ def test_fused_moe_matches_single_step(tiny_moe, mesh11):
         # pipeline drained, every request's inflight settled, pages freed
         assert eng._pending is None
         assert all(r.inflight == 0 for r in eng.finished)
+        # only the prefix cache still pins pages; conservation holds and
+        # dropping the cache returns the pool to fully free
+        eng.alloc[0].check()
+        eng.clear_prefix_cache()
         assert eng.alloc[0].total_free() == 63
         # fused control plane actually amortized dispatches
         assert eng.metrics.decode_dispatches < base.metrics.decode_dispatches

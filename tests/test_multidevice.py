@@ -309,6 +309,60 @@ print("OK")
 """, timeout=1200)
 
 
+def test_prefix_cache_rollout_switches_match_baseline():
+    """Tentpole acceptance: a rollout group with shared prefixes
+    (samples_per_prompt), prefix cache ON, live tp -> ep -> tpep switches
+    mid-group, must produce greedy outputs byte-identical to a cache-off,
+    never-switched baseline — and must actually share (hits > 0, fewer
+    prefill tokens), with the allocator's conservation invariant intact
+    across every view change."""
+    run_multidevice(COMMON + """
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.workloads import RolloutSpec, rollout_batch
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+spec = RolloutSpec(num_prompts=8, samples_per_prompt=4, prompt_median=10,
+                   prompt_max=14, output_median=6, output_p99=12,
+                   output_cap=12, token_range=(5, 200))
+def run(prefix, switches=()):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout="tp", layouts=("tp", "ep", "tpep"), ladder=(4, 8),
+        prefill_chunk=8, temperature=0.0, policy=pol, seed=0,
+        prefix_cache=prefix))
+    for r in rollout_batch(spec, seed=2):
+        eng.submit(r)
+    i = 0
+    plan = dict(switches)
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if i in plan:
+            eng.execute_switch(plan[i])
+        eng.step(); i += 1
+        assert i < 800
+    for al in eng.alloc:
+        al.check()
+    return eng
+base = run(False)
+ref = {r.rid: r.output for r in base.finished}
+cached = run(True)
+assert {r.rid: r.output for r in cached.finished} == ref, "cache-on diverged"
+assert cached.metrics.prefix_hits > 0, "no prefix hits"
+assert cached.metrics.prefill_tokens < base.metrics.prefill_tokens
+switched = run(True, switches=((3, "ep"), (6, "tpep"), (9, "tp")))
+assert {r.rid: r.output for r in switched.finished} == ref, \
+    "cache + live tp->ep->tpep switches diverged"
+assert switched.metrics.prefix_hits > 0
+assert len(switched.switch_records) == 3
+for eng in (cached, switched):
+    eng.clear_prefix_cache()
+    for al in eng.alloc:
+        al.check()
+        assert al.total_free() == al.capacity * al.npools()
+print("OK")
+""", timeout=1200)
+
+
 def test_reshard_paths_agree():
     run_multidevice(COMMON + """
 from repro.core.switch import (make_reshard_experts,

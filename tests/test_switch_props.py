@@ -21,6 +21,7 @@ def _reqs(lens, G=None):
         r.prefill_pos = ln
         r.pages = list(range(1, 1 + max(1, -(-ln // 4))))
         r.owner_rank = (i % G) if G else -1
+        r.pool_rank = max(r.owner_rank, 0)
         out.append(r)
     return out
 
@@ -48,21 +49,40 @@ def test_kv_plans_preserve_pages(lens, G, seed):
     cfg = get_config("internlm2-1.8b").reduced(num_kv_heads=2, num_heads=4)
     cc = CacheConfig(page_size=4, pages_ep=256, max_pages_per_req=32)
     rng = np.random.default_rng(seed)
-    # EP -> TP
+    # EP -> TP. The fixture gives requests on the SAME rank overlapping page
+    # ids (a shared prefix): the refcounted plan migrates each physical
+    # (pool, page) ONCE and later sharers fork the destination page.
     reqs = _reqs(lens, G=G)
-    total_pages = sum(len(r.pages) for r in reqs)
+    total_refs = sum(len(r.pages) for r in reqs)
+    physical = {(r.pool_rank, p) for r in reqs for p in r.pages}
     tp_alloc = PageAllocator(cc, cfg, G, TP)
     plan = plan_ep_to_tp(reqs, cfg, cc, tp_alloc, G)
-    assert plan.valid.sum() == total_pages          # 1:1 page mapping
-    # destination pages unique
+    assert plan.valid.sum() == len(physical)    # once per physical page
+    # destination pages written exactly once each
     dst = plan.dst_pages[plan.valid]
     assert len(set(dst.tolist())) == len(dst)
-    assert all(r.owner_rank == -1 for r in reqs)
-    # TP -> EP back
+    assert all(r.owner_rank == -1 and r.pool_rank == 0 for r in reqs)
+    # refcount conservation: requests' references == allocator's ledger
+    tp_alloc.check()
+    assert sum(tp_alloc.refs[0].values()) == total_refs
+    held = {p for r in reqs for p in r.pages}
+    assert held == set(tp_alloc.refs[0])
+    # shared sources produced shared destinations
+    assert all(tp_alloc.refcount(0, p) >= 1 for p in held)
+    # TP -> EP back: sharers split across ranks duplicate the page (one
+    # physical copy per destination pool), sharers on one rank still share
     ep_alloc = PageAllocator(cc, cfg, G, EP)
     plan2 = plan_tp_to_ep(reqs, cfg, cc, ep_alloc, G)
-    assert plan2.valid.sum() == total_pages
-    assert all(0 <= r.owner_rank < G for r in reqs)
+    assert all(0 <= r.owner_rank < G and r.pool_rank == r.owner_rank
+               for r in reqs)
+    # r.pages is already the DESTINATION list here; count sources via the
+    # plan arrays: each (src page, dst rank) pair must appear exactly once
+    assert plan2.valid.sum() <= total_refs
+    assert plan2.valid.sum() == len(
+        {(int(s), g) for g in range(G)
+         for s in plan2.src_pages[g][plan2.valid[g]]})
+    ep_alloc.check()
+    assert sum(sum(refs.values()) for refs in ep_alloc.refs) == total_refs
     # per (rank) destination pages unique
     for g in range(G):
         d = plan2.dst_pages[g][plan2.valid[g]]

@@ -27,6 +27,42 @@ def test_rollout_heavy_tail():
     assert outs.max() <= 32768
 
 
+def test_rollout_scale_monotone_both_directions():
+    """Satellite regression: `scale` must scale the request count and the
+    prompt clamp monotonically UP as well as down (the old code dropped
+    the scale on num_prompts for scale > 1 and could floor the prompt
+    clamp to a degenerate 1)."""
+    base = RolloutSpec(num_prompts=100, prompt_median=40, prompt_max=120,
+                       output_median=50, output_p99=400, output_cap=600)
+    sizes, pmaxes = {}, {}
+    for s in (0.5, 1.0, 2.0):
+        reqs = rollout_batch(RolloutSpec(**{**base.__dict__, "scale": s}),
+                             seed=0)
+        sizes[s] = len(reqs)
+        pmaxes[s] = max(r.prompt_len for r in reqs)
+    assert sizes[0.5] == 50 and sizes[1.0] == 100 and sizes[2.0] == 200
+    assert pmaxes[0.5] <= 60 and pmaxes[2.0] <= 240
+    assert pmaxes[0.5] < pmaxes[2.0]       # clamp scales up, not to 1
+    assert pmaxes[0.5] > 1                 # and never degenerates
+
+
+def test_rollout_samples_per_prompt_groups():
+    """samples_per_prompt emits byte-identical prompt groups (the RL
+    many-completions-per-question shape) without changing the total
+    request count or the heavy output tail."""
+    spec = RolloutSpec(num_prompts=64, samples_per_prompt=4)
+    reqs = rollout_batch(spec, seed=3)
+    assert len(reqs) == 64
+    prompts = {}
+    for r in reqs:
+        prompts.setdefault(tuple(r.prompt), []).append(r.rid)
+    assert len(prompts) == 16                  # 64 / 4 distinct prompts
+    assert all(len(v) == 4 for v in prompts.values())
+    # outputs still vary within a group (independent samples)
+    outs = [r.forced_len for r in reqs]
+    assert len(set(outs[:4])) > 1
+
+
 def test_metrics_ttft_tpot():
     m = ServeMetrics()
 
