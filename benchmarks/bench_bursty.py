@@ -1,11 +1,149 @@
 """Paper Fig. 9: bursty online serving — TTFT/TPOT under static TP, static
-EP, and Moebius across a scaled bursty arrival trace."""
+EP, and Moebius across a scaled bursty arrival trace.
+
+``--smoke`` (the CI gate, BENCH_bursty.json) measures per-request
+TTFT/TPOT p50/p99 on a two-phase trace where EACH static layout has a
+structural p99-TTFT weakness and switching threads both:
+
+  * phase A — a prefill burst: static TP serializes prefill (one request
+    per step on the pooled view) and its tail TTFT balloons; EP prefills
+    G requests per step. Moebius up-switches on the in-flight spike.
+  * phase B — long-prompt arrivals while a few long-output stragglers
+    still decode: the stragglers fragment the per-rank EP pools (each
+    holds most of one rank), so static EP cannot START the long prefills
+    anywhere until a straggler finishes (the prefill watermark blocks for
+    seconds — the paper's pooled-vs-fragmented capacity asymmetry);
+    the pooled TP view places them instantly. Moebius has down-switched
+    to TP through the hysteresis window by then.
+
+The three systems replay the SAME trace through the AsyncEngine streaming
+frontend under a deterministic `VirtualClock` (one ``STEP_DT`` tick per
+engine iteration): TTFT/TPOT are exact iteration counts, so the gate is
+reproducible on any CI machine regardless of load — it measures
+SCHEDULING quality (admission serialization, prefill-start blocking,
+queue drain), which is where the smoke trace's structural gaps live;
+per-step wall costs and switch pauses are gated separately by
+bench_crossover / bench_switch_cost. The gate asserts p99 TTFT with
+switching <= the better static baseline (x ``GATE_TOL`` float-jitter
+slack), plus the trace-replay idle fast-forward: a 120-virtual-second
+quiet gap must cost O(1) wall time, not 120 s of empty step() spins.
+"""
 from __future__ import annotations
 
 import copy
+import time
+
+# virtual seconds charged per engine iteration in the smoke (the measured
+# CPU step time is ~0.1 s at this scale; the trace phases are laid out on
+# this timescale)
+STEP_DT = 0.1
+# the virtual-clock replay is deterministic; this only absorbs float
+# jitter in the percentile interpolation
+GATE_TOL = 1.01
 
 
-def run(scale: float = 0.04, duration: float = 30.0, seed: int = 0):
+def _smoke_trace(rng):
+    """Handcrafted two-phase trace (see module docstring)."""
+    from repro.serving.request import Request
+    reqs, rid = [], 0
+    # phase A: a simultaneous 16-request burst (faster than TP's one
+    # prefill-admission per iteration — its tail queues) — 12 short + 4
+    # long-output stragglers (rids 0,5,10,15: the EP least-loaded rank
+    # walk then lands one straggler per rank)
+    for i in range(16):
+        out = 150 if i % 5 == 0 else 20
+        reqs.append(Request(rid=rid, prompt=list(rng.integers(5, 500, 24)),
+                            max_new_tokens=out, forced_len=out,
+                            arrival_s=0.5))
+        rid += 1
+    # phase B: long prompts (30 pages at page_size 8) arriving while the
+    # stragglers still pin ~22 pages of their rank's 63-page EP pool
+    for i in range(5):
+        reqs.append(Request(rid=rid, prompt=list(rng.integers(5, 500, 240)),
+                            max_new_tokens=60, forced_len=60,
+                            arrival_s=4.5 + 1.0 * i))
+        rid += 1
+    return reqs
+
+
+def smoke_rows(seed: int = 0):
+    import numpy as np
+    from benchmarks.common import bench_cfg, make_engine
+    from repro.core.layouts import EP, TP
+    from repro.core.policy import PolicyConfig
+    from repro.launch.mesh import make_mesh
+    from repro.serving.frontend import AsyncEngine, VirtualClock
+    from repro.serving.request import Request
+    from repro.serving.workloads import replay
+
+    mesh = make_mesh((1, 4), ("data", "model"))   # G=4: kv_rep=1 — EP and
+    cfg = bench_cfg()                             # TP capacities match; only
+    reqs0 = _smoke_trace(np.random.default_rng(seed))  # fragmentation differs
+
+    def run_system(kind):
+        if kind == "moebius":
+            # t_high=12: only the 16-burst fires the up-switch; phase B's
+            # <= 9 in flight never does (no thrash back into the
+            # fragmented-EP regime)
+            pol = PolicyConfig.interactive(12)
+            pol.cooldown_s = 1.0
+            start = TP
+        else:
+            pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+            start = kind
+        eng = make_engine(cfg, mesh, start=start, policy=pol,
+                          ladder=(4, 8, 16), page=8, pages_ep=64, maxp=48,
+                          prefill_chunk=64, clock=VirtualClock())
+        eng.warmup()       # paper §4.4: a switch selects, never compiles
+        fe = AsyncEngine(eng, step_dt=STEP_DT)
+        streams = replay(fe, copy.deepcopy(reqs0))
+        s = fe.run_until_complete()
+        assert all(st.finished for st in streams.values())
+        return s, eng
+
+    rows, res = [], {}
+    for kind in (TP, EP, "moebius"):
+        s, eng = run_system(kind)
+        res[kind] = (s, len(eng.switch_records))
+        for m in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s"):
+            rows.append((f"bursty.smoke.{kind}.{m}", s[m] * 1e6,
+                         f"switches={len(eng.switch_records)}"
+                         if kind == "moebius" else ""))
+    p99 = {k: res[k][0]["ttft_p99_s"] for k in res}
+    best = min(p99[TP], p99[EP])
+    worse = max(p99[TP], p99[EP])
+    nsw = res["moebius"][1]
+    ok = (p99["moebius"] <= best * GATE_TOL and p99["moebius"] < worse
+          and nsw >= 1)
+    rows.append((
+        "bursty.smoke.p99_ttft_gate", p99["moebius"] / best,
+        f"switching_le_best_static={ok};moebius_s={p99['moebius']:.3f};"
+        f"best_static_s={best:.3f};worse_static_s={worse:.3f};"
+        f"switches={nsw};tol={GATE_TOL}"))
+
+    # idle fast-forward: a 120-virtual-second quiet gap costs one
+    # iteration, not two wall minutes of empty spins
+    rng = np.random.default_rng(seed + 1)
+    eng = make_engine(cfg, mesh, ladder=(4, 8, 16), page=8, pages_ep=64,
+                      maxp=48, prefill_chunk=64)
+    eng.warmup(layouts=(eng.active,))
+    for i, t in enumerate((0.0, 120.0)):
+        eng.submit(Request(rid=i, prompt=list(rng.integers(5, 500, 12)),
+                           max_new_tokens=8, forced_len=8, arrival_s=t))
+    t0 = time.perf_counter()
+    s = eng.run(max_steps=5000)
+    wall = time.perf_counter() - t0
+    skipped = wall < 20.0 and s["n"] == 2
+    rows.append(("bursty.smoke.idle_skip_wall_s", wall * 1e6,
+                 f"gap_s=120;wall_lt_20s={skipped};"
+                 f"makespan_s={s['makespan_s']:.1f}"))
+    return rows
+
+
+def run(scale: float = 0.04, duration: float = 30.0, seed: int = 0,
+        smoke: bool = False):
+    if smoke:
+        return smoke_rows(seed=seed)
     from benchmarks.common import bench_cfg, make_engine
     from repro.core.layouts import EP, TP
     from repro.core.policy import PolicyConfig
@@ -77,8 +215,54 @@ def run(scale: float = 0.04, duration: float = 30.0, seed: int = 0):
     for kind in (TP, EP, "moebius"):
         s, eng = run_system(kind)
         rows.append((f"bursty.{kind}.ttft_mean_s", s["ttft_mean_s"] * 1e6, ""))
+        rows.append((f"bursty.{kind}.ttft_p50_s", s["ttft_p50_s"] * 1e6, ""))
         rows.append((f"bursty.{kind}.ttft_p99_s", s["ttft_p99_s"] * 1e6, ""))
         rows.append((f"bursty.{kind}.tpot_mean_s", s["tpot_mean_s"] * 1e6, ""))
+        rows.append((f"bursty.{kind}.tpot_p50_s", s["tpot_p50_s"] * 1e6, ""))
+        rows.append((f"bursty.{kind}.tpot_p99_s", s["tpot_p99_s"] * 1e6, ""))
         rows.append((f"bursty.{kind}.makespan_s", s["makespan_s"] * 1e6,
                      f"switches={len(eng.switch_records)}"))
     return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _bootstrap import ensure_env_and_path
+    ensure_env_and_path()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: per-request TTFT/TPOT p50/p99, "
+                         "switching vs static tp/ep — p99 TTFT with "
+                         "switching must be <= the better static baseline; "
+                         "writes BENCH_bursty.json")
+    ap.add_argument("--json", default="BENCH_bursty.json",
+                    help="JSON artifact path")
+    args = ap.parse_args()
+    rows = list(run(smoke=args.smoke))
+    print("name,us_per_call,derived")
+    ok_gate = ok_idle = not args.smoke
+    for nm, us, derived in rows:
+        print(f"{nm},{us:.4f},{derived}", flush=True)
+        if nm == "bursty.smoke.p99_ttft_gate" \
+                and "switching_le_best_static=True" in derived:
+            ok_gate = True
+        if nm == "bursty.smoke.idle_skip_wall_s" \
+                and "wall_lt_20s=True" in derived:
+            ok_idle = True
+    pathlib.Path(args.json).write_text(json.dumps({
+        "benchmark": "bursty", "smoke": args.smoke,
+        "unix_time": time.time(),
+        "rows": [{"name": nm, "value": us, "derived": derived}
+                 for nm, us, derived in rows]}, indent=1))
+    if not (ok_gate and ok_idle):
+        raise SystemExit(
+            "bursty smoke gate FAILED "
+            f"(p99_ttft ok={ok_gate}, idle_skip ok={ok_idle})")
+
+
+if __name__ == "__main__":
+    main()

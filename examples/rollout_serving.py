@@ -2,6 +2,12 @@
 (paper §6.3, scaled). Runs fixed-TP, fixed-EP, and Moebius over the SAME
 heavy-tailed rollout batch and reports completion times + switch points.
 
+Rollouts are a BATCH workload (every prompt present at t=0, nobody reads
+tokens incrementally), so this example intentionally keeps the synchronous
+batch path through the `MoebiusEngine` facade — `submit()` + `run()` —
+rather than the AsyncEngine streams quickstart.py / bursty_serving.py use;
+both paths drive the same Scheduler/Executor decomposition underneath.
+
   PYTHONPATH=src python examples/rollout_serving.py [--scale 0.01]
 """
 import os
@@ -55,11 +61,13 @@ def main():
                                               ladder=(8, 16, 32),
                                               prefill_chunk=64, policy=pol))
         for r in copy.deepcopy(reqs):
-            eng.submit(r)
+            eng.submit(r)                  # batch path via the facade
         t0 = time.perf_counter()
-        eng.run(max_steps=100000)
+        s = eng.run(max_steps=100000)
         dt = time.perf_counter() - t0
-        sw = [(f"{s.t:.1f}s", s.direction) for s in eng.switch_records]
+        sw = [(f"{r.t:.1f}s", r.direction) for r in eng.switch_records]
+        print(f"    tpot p50/p99 = {s['tpot_p50_s']*1e3:.0f}/"
+              f"{s['tpot_p99_s']*1e3:.0f}ms")
         return dt, sw
 
     t_tp, _ = run(TP)

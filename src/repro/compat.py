@@ -1,4 +1,4 @@
-"""Version-portable JAX API surface (DESIGN.md §7).
+"""Version-portable JAX API surface (DESIGN.md §8).
 
 The repo targets both JAX 0.4.x (the pinned CI/toolchain version) and
 current JAX. Three API families moved between those versions:

@@ -278,6 +278,12 @@ class SwitchCoordinator:
         """
         return TP.kv_capacity_tokens(self.cfg, self.G, ep_capacity_tokens)
 
+    def observe_queues(self, q, ep_capacity_tokens: int) -> SwitchDecision:
+        """Observe through the Scheduler's queue snapshot
+        (`scheduler.QueueSnapshot`) — the coordinator never reaches into
+        engine internals; the queue state IS the policy input."""
+        return self.observe(q.in_flight, q.live_tokens, ep_capacity_tokens)
+
     def observe(self, in_flight: int, live_tokens: int,
                 ep_capacity_tokens: int) -> SwitchDecision:
         """Called once per decode iteration, between steps."""

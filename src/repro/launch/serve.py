@@ -6,6 +6,11 @@ and the hybrid ``tpep`` (TP attention + experts over the full mesh). With
 more than two layouts the coordinator scores candidates with the analytical
 cost model (KV-feasibility included) behind the paper's hysteresis band.
 
+The run is driven through the AsyncEngine streaming frontend (DESIGN.md
+§7): the trace is submitted as per-request token streams, the idle
+fast-forward jumps quiet periods, and the summary reports per-request
+TTFT/TPOT p50/p99 from ServeMetrics.
+
 Examples (CPU, 8 host devices):
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload rollout --scale 0.02 --mesh 1x4 --policy rollout
@@ -36,9 +41,11 @@ def main():
     from repro.core.policy import PolicyConfig, calibrate_threshold
     from repro.launch.mesh import make_mesh
     from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.frontend import AsyncEngine
     from repro.serving.kvcache import CacheConfig
     from repro.serving.workloads import (BurstySpec, RolloutSpec,
-                                         bursty_trace, rollout_batch)
+                                         bursty_trace, replay,
+                                         rollout_batch)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
@@ -101,9 +108,10 @@ def main():
             seed=args.seed)
     else:
         reqs = bursty_trace(BurstySpec(scale=args.scale), seed=args.seed)
-    for r in reqs:
-        eng.submit(r)
+    fe = AsyncEngine(eng)
+    streams = replay(fe, reqs)
     summary = eng.run(max_steps=args.max_steps)
+    summary["streams_finished"] = sum(s.finished for s in streams.values())
     summary["switches"] = len(eng.switch_records)
     summary["final_layout"] = eng.active
     summary["layouts"] = [str(l) for l in eng.layouts]

@@ -1,42 +1,38 @@
-"""Moebius serving engine: continuous batching + live EP<->TP switching.
+"""Moebius serving engine: the thin facade over Scheduler + Executor.
 
-Single-controller host loop (the JAX-native control plane, DESIGN.md §2):
-admission -> policy -> (switch?) -> prefill -> decode, once per iteration.
-The switch is executed between decode steps without draining: request
-metadata is rewritten on host, expert weights are resharded and the paged KV
-migrated by the jitted movers from core/switch.py, and the target layout's
-pre-warmed step functions are *selected*, not rebuilt.
+The engine is decomposed into three layers (DESIGN.md §7):
 
-Memory discipline mirrors the paper: the control plane (attention/embed/norm
-packs, compiled steps) is resident for BOTH layouts (the dual-mode buffer);
-the data plane (expert weights, KV pool) exists once, in the active layout.
+  * `serving/scheduler.py` — pure-host Scheduler (imports no jax): queues,
+    admission, continuous-batching plans, page budgets, preemption, prefix
+    policy — emitting typed decisions;
+  * `serving/executor.py`  — Executor/ModelRunner: packs, KV buffer, step
+    fns, fused dispatch pipeline, page copies, switch execution;
+  * `serving/frontend.py`  — AsyncEngine: streaming `generate()` on an
+    arrival-driven event loop with per-request TTFT/TPOT.
+
+`MoebiusEngine` wires the first two and keeps the classic synchronous
+`step()`/`run()` API: admission -> policy -> (switch?) -> prefill ->
+decode, once per iteration (the JAX-native single-controller control
+plane, DESIGN.md §2). The switch is executed between decode steps without
+draining: request metadata is rewritten on host, expert weights are
+resharded and the paged KV migrated by the jitted movers, and the target
+layout's pre-warmed step functions are *selected*, not rebuilt. The
+`SwitchCoordinator` observes the Scheduler's queue snapshot — never engine
+internals.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.layouts import (EP, TP, LayoutSpec, get_layout, group_info,
-                                pack_params)
+from repro.core.layouts import EP, TP, LayoutSpec, get_layout
 from repro.core.policy import PolicyConfig, SwitchCoordinator
-from repro.core.residency import ResidentRuntime
-from repro.core.switch_exec import SwitchExecutor
 from repro.models.common import ModelConfig
-from repro.models.registry import init_params
-from repro.serving.device_state import DeviceDecodeState
-from repro.serving.kvcache import (COPY_W, CacheConfig, PageAllocator,
-                                   PrefixCache, full_prompt_hash,
-                                   make_copy_pages, pages_needed,
-                                   token_page_hashes)
+from repro.serving.executor import Executor
+from repro.serving.kvcache import CacheConfig, PageAllocator, PrefixCache
 from repro.serving.metrics import ServeMetrics
-from repro.serving.request import Request, State
-from repro.serving.steps import (build_decode_loop, build_decode_pack,
-                                 build_serve_step)
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
 
 
 @dataclass
@@ -68,6 +64,15 @@ class EngineConfig:
     # + CoW; DESIGN.md §6). Greedy outputs are byte-identical with the
     # cache on or off — it only removes redundant prefill compute/bytes.
     prefix_cache: bool = True
+    # trace-replay idle fast-forward: when every pending request is still
+    # in the future and nothing is live, jump the engine clock to the next
+    # arrival instead of burning empty step() iterations (quiet-period
+    # wall time becomes O(1) under the virtual clock)
+    idle_skip: bool = True
+    # injectable clock (callable -> seconds). None = wall clock scaled by
+    # time_scale. A VirtualClock (serving/frontend.py) makes the event
+    # loop fully deterministic; `idle_skip` then advances it directly.
+    clock: object = None
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -89,6 +94,11 @@ class SwitchRecord:
 
 
 class MoebiusEngine:
+    """Facade: owns the clock, the policy coordinator, and the step loop;
+    delegates every scheduling decision to `Scheduler` and every device
+    action to `Executor`. Existing call sites keep working through the
+    delegating properties below."""
+
     def __init__(self, cfg: ModelConfig, mesh, cc: CacheConfig,
                  params_global: dict | None = None,
                  ecfg: EngineConfig | None = None,
@@ -99,925 +109,179 @@ class MoebiusEngine:
         self.G = mesh.shape[model_axis]
         self.Dd = mesh.shape[data_axis]
         self.chips = self.Dd * self.G
-        self.gi = group_info(cfg, self.G)
         self.layouts: tuple[LayoutSpec, ...] = tuple(
             get_layout(l) for l in self.ecfg.layouts)
         start = get_layout(self.ecfg.start_layout)
         if start not in self.layouts:
             self.layouts = self.layouts + (start,)
-        # full-mesh layouts split each prefill chunk 1/G per rank
-        q = max(s.prefill_quantum(self.G) for s in self.layouts)
-        self.prefill_chunk = -(-self.ecfg.prefill_chunk // q) * q
-        if params_global is None:
-            params_global = init_params(cfg, jax.random.PRNGKey(self.ecfg.seed))
-
-        # --- N-resident control plane; single-copy expert data plane ---
-        self.packs: dict[str, dict] = {}
-        self._expert_store: dict[str, dict] = {}   # only active layout kept
-        for spec in self.layouts:
-            stored = pack_params(cfg, params_global, spec, self.G,
-                                 expert_G=spec.expert_group(self.G,
-                                                            self.chips))
-            pk = build_decode_pack(cfg, stored, spec, self.G)
-            if cfg.is_moe:
-                moe = pk["layers"]["moe"]
-                self._expert_store[spec] = {
-                    "w13": moe.pop("w13"), "w2": moe.pop("w2")}
-            self.packs[spec] = pk
-        self.active = start
-        if cfg.is_moe:
-            # free the inactive layouts' expert copies (single resident copy)
-            self._experts = self._expert_store.pop(self.active)
-            del self._expert_store
-
-        # --- unified KV buffer (committed to its serve-step sharding up
-        # front: a lazily-committed buffer would change sharding signature
-        # after the first dispatch and recompile every warmed executable) ---
-        self.NE = cc.nelems(cfg, self.G)
-        self.kv_flat = jax.device_put(
-            jnp.zeros((self.Dd, self.G, self.NE), cfg.param_dtype),
-            jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec(data_axis, model_axis)))
-        self.alloc = [PageAllocator(cc, cfg, self.G, self.active)
-                      for _ in range(self.Dd)]
-        # prefix cache: one index per data group over that group's allocator
-        self.prefix = ([PrefixCache(self.alloc[d]) for d in range(self.Dd)]
-                       if self.ecfg.prefix_cache else None)
-        self._copy_fns: dict = {}          # CoW page copier, per layout
-
-        # --- resident runtimes (all layouts, ladder of decode rungs) ---
-        self.rt = ResidentRuntime(ladder=tuple(
-            b for b in self.ecfg.ladder if b % self.G == 0 or b >= self.G
-        ) or (self.G,))
-        self._pack_cache: dict = {}        # assembled packs, per layout
-        # fused decode (decode_steps > 1): device-resident state + the
-        # one-deep dispatch pipeline (outputs consumed one iteration late)
-        self._dstate: DeviceDecodeState | None = None
-        self._pending: tuple | None = None
-        self.switcher = SwitchExecutor(
-            cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
-            direct_reshard=self.ecfg.direct_reshard)
-
-        # --- host scheduling state ---
-        self.pending: deque[Request] = deque()     # not yet arrived
-        self.waiting: list[Request] = []
-        self.prefilling: list[Request] = []
-        self.running: dict[int, Request] = {}
-        self.finished: list[Request] = []
         self.metrics = ServeMetrics()
         self.switch_records: list[SwitchRecord] = []
+        self._step_i = 0
+        self._t0 = time.monotonic()
+        self._clock = self.ecfg.clock
+        self._clock_skip = 0.0
+
+        # --- the three layers ---
+        self.ex = Executor(cfg, mesh, cc, self.ecfg, self.layouts, start,
+                           params_global=params_global, metrics=self.metrics,
+                           data_axis=data_axis, model_axis=model_axis)
+        alloc = [PageAllocator(cc, cfg, self.G, start)
+                 for _ in range(self.Dd)]
+        # prefix cache: one index per data group over that group's allocator
+        prefix = ([PrefixCache(alloc[d]) for d in range(self.Dd)]
+                  if self.ecfg.prefix_cache else None)
+        self.sched = Scheduler(cc, self.Dd, self.G, self.ex.rt.ladder,
+                               alloc=alloc, prefix=prefix, spec=start,
+                               clock=self.now, metrics=self.metrics)
+        self.sched.clear_slot = self.ex.clear_slot
+        self.ex.on_finish = self.sched.finish_request
         # the policy runs on the engine's virtual clock (time_scale-aware),
-        # never wall time: cooldowns stay correct under scaled replay
+        # never wall time: cooldowns stay correct under scaled replay; it
+        # observes the SCHEDULER's queue snapshot, not engine internals
         self.coord = SwitchCoordinator(cfg, self.G, self.ecfg.policy,
-                                       active=self.active, clock=self.now,
+                                       active=start, clock=self.now,
                                        layouts=self.layouts,
                                        chips=self.chips)
-        self._step_i = 0
-        self._key = jax.random.PRNGKey(self.ecfg.seed + 1)
-        self._t0 = time.monotonic()
 
     # ------------------------------------------------------------------
     # time
     # ------------------------------------------------------------------
     def now(self) -> float:
-        return (time.monotonic() - self._t0) * self.ecfg.time_scale
+        if self._clock is not None:
+            return self._clock()
+        return ((time.monotonic() - self._t0) * self.ecfg.time_scale
+                + self._clock_skip)
+
+    def _skip_idle(self) -> None:
+        """Trace-replay fast-forward: with nothing live and every pending
+        request in the future, advance the clock straight to the next
+        arrival — quiet periods cost one iteration, not wall time."""
+        if (self.sched.waiting or self.sched.prefilling or self.sched.running
+                or self.ex._pending is not None):
+            return
+        nxt = self.sched.next_arrival()
+        if nxt is None:
+            return
+        t = self.now()
+        if nxt <= t:
+            return
+        if self._clock is not None:
+            adv = getattr(self._clock, "advance_to", None)
+            if adv is not None:
+                adv(nxt)
+            return
+        self._clock_skip += nxt - t
 
     # ------------------------------------------------------------------
-    # step functions (resident; warmed at startup or first use)
+    # delegating surface (compat: tests/benches/elastic reach these)
     # ------------------------------------------------------------------
-    def _ladder_for(self, layout: LayoutSpec):
-        return get_layout(layout).decode_ladder(self.rt.ladder, self.G)
+    @property
+    def active(self) -> LayoutSpec:
+        return self.ex.active
 
-    def _pick_B(self, layout: LayoutSpec, need_slots: int) -> int:
-        """Smallest ladder rung (in this layout's quantum) with
-        >= need_slots batch slots."""
-        ladder = self._ladder_for(layout)
-        for b in ladder:
-            if b >= need_slots:
-                return b
-        return ladder[-1]
+    @property
+    def pending(self):
+        return self.sched.pending
 
-    def _decode_fn(self, layout: LayoutSpec, B: int):
-        return self.rt.get_or_build(
-            (layout, "decode", B),
-            lambda: build_serve_step(
-                self.cfg, self.mesh, layout, self.cc, B, Sq=1,
-                temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+    @property
+    def waiting(self):
+        return self.sched.waiting
 
-    def _decode_loop_fn(self, layout: LayoutSpec, B: int, N: int):
-        return self.rt.get_or_build(
-            (layout, "decode_loop", B, N),
-            lambda: build_decode_loop(
-                self.cfg, self.mesh, layout, self.cc, B, N,
-                temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+    @property
+    def prefilling(self):
+        return self.sched.prefilling
 
-    def _prefill_fn(self, layout: LayoutSpec):
-        Bp = get_layout(layout).prefill_width(self.G)
-        return self.rt.get_or_build(
-            (layout, "prefill", Bp),
-            lambda: build_serve_step(
-                self.cfg, self.mesh, layout, self.cc, Bp,
-                Sq=self.prefill_chunk,
-                temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+    @property
+    def running(self):
+        return self.sched.running
 
-    def warmup(self, layouts=None):
-        """Compile every resident layout's runtime at startup (paper §4.4).
+    @property
+    def finished(self):
+        return self.sched.finished
 
-        The ACTIVE layout's step fns also run once on throwaway zero
-        inputs shaped/sharded exactly like live traffic, so the XLA
-        compile and the jit fast path are paid here and never inside a
-        serving iteration (jax.jit alone is lazy — building the wrapper
-        compiles nothing). Inactive layouts are built only; their first
-        execution happens behind a switch, whose benches warm explicitly.
-        """
-        for lo in (self.layouts if layouts is None else layouts):
-            self._prefill_fn(lo)
-            for b in self._ladder_for(lo):
-                self._decode_fn(lo, b)
-                if self.ecfg.decode_steps > 1:
-                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)
-            if lo is not self.active:
-                continue
-            if self.ecfg.prefix_cache:
-                # compile the CoW page copier outside the serving loop
-                # (a null plan: the reserved page 0 self-copies)
-                self._copy_pages_dev(0, 0, [(0, 0)])
-            pk = self._assemble_pack(lo)
-            key = jax.random.key_data(jax.random.PRNGKey(0))
-            maxp = self.cc.max_pages_per_req
-            Bp = get_layout(lo).prefill_width(self.G)
-            toks = jnp.zeros((self.Dd, Bp, self.prefill_chunk), jnp.int32)
-            z2 = jnp.zeros((self.Dd, Bp), jnp.int32)
-            bt = jnp.zeros((self.Dd, Bp, maxp), jnp.int32)
-            self._prefill_fn(lo)(pk, jnp.zeros_like(self.kv_flat),
-                                 toks, z2, z2, bt, key)
-            for b in self._ladder_for(lo):
-                z2 = jnp.zeros((self.Dd, b), jnp.int32)
-                bt = jnp.zeros((self.Dd, b, maxp), jnp.int32)
-                self._decode_fn(lo, b)(
-                    pk, jnp.zeros_like(self.kv_flat),
-                    jnp.zeros((self.Dd, b, 1), jnp.int32), z2, z2, bt, key)
-                if self.ecfg.decode_steps > 1:
-                    # match the live call's committed shardings exactly
-                    st = DeviceDecodeState(self.mesh, lo, self.Dd, b, maxp,
-                                           da=self.da, m=self.m)
-                    st.warm_scatters()
-                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)(
-                        pk, jnp.zeros_like(self.kv_flat), st.tokens,
-                        st.positions, st.budgets, st.block_tables, key)
+    @property
+    def alloc(self):
+        return self.sched.alloc
 
-    def _assemble_pack(self, layout: str) -> dict:
-        """Assembled (control-plane pack + resident experts) pytree, cached
-        per layout; invalidated when a switch reshards the expert store."""
-        pk = self._pack_cache.get(layout)
-        if pk is None:
-            pk = self.packs[layout]
-            if self.cfg.is_moe:
-                pk = dict(pk)
-                layers = dict(pk["layers"])
-                layers["moe"] = {**layers["moe"], **self._experts}
-                pk["layers"] = layers
-            self._pack_cache[layout] = pk
-        return pk
+    @property
+    def prefix(self):
+        return self.sched.prefix
 
-    # ------------------------------------------------------------------
-    # page lifecycle (refcounts, prefix cache, copy-on-write)
-    # ------------------------------------------------------------------
-    def _prefix_keys(self, r: Request) -> None:
-        if r.page_hashes is None:
-            r.page_hashes = token_page_hashes(r.prompt, self.cc.page_size)
-            r.full_hash = full_prompt_hash(r.prompt, self.cc.page_size,
-                                           page_hashes=r.page_hashes)
+    @property
+    def kv_flat(self):
+        return self.ex.kv_flat
 
-    def _copy_pages_dev(self, d: int, pool: int, pairs: list) -> None:
-        """Device page copy within the active view (the CoW mover). EP view:
-        the pair applies to `pool`'s rank only; pooled views: every rank
-        copies its head-slice of the page."""
-        fn = self._copy_fns.get(self.active)
-        if fn is None:
-            fn = make_copy_pages(self.cfg, self.cc, self.mesh, self.active,
-                                 model_axis=self.m, data_axis=self.da)
-            self._copy_fns[self.active] = fn
-        rows = [pool] if self.active.kv_per_rank else list(range(self.G))
-        for b in range(0, len(pairs), COPY_W):
-            blk = pairs[b:b + COPY_W]
-            sp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
-            dp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
-            vm = np.zeros((self.Dd, self.G, COPY_W), bool)
-            for g in rows:
-                for i, (a, bdst) in enumerate(blk):
-                    sp[d, g, i], dp[d, g, i], vm[d, g, i] = a, bdst, True
-            self.kv_flat = fn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
-                              jnp.asarray(vm))
+    @property
+    def packs(self):
+        return self.ex.packs
 
-    def _alloc_or_evict(self, d: int, pool: int, n: int) -> list | None:
-        """try_alloc with prefix-cache eviction as the fallback: LRU cache
-        entries are dropped (releasing only the cache's refs) until the
-        pool can serve the allocation."""
-        got = self.alloc[d].try_alloc(pool, n)
-        if got is None and self.prefix is not None:
-            self.prefix[d].evict(pool, n)
-            got = self.alloc[d].try_alloc(pool, n)
-        return got
+    @property
+    def _experts(self):
+        return self.ex._experts
 
-    def _cow_if_shared(self, r: Request) -> bool:
-        """Copy-on-write the page decode is about to append to when it is
-        shared (refcount > 1: other requests and/or the prefix cache hold
-        it). Returns False when the pool can't supply the private copy."""
-        d, pool = r.data_group, r.pool_rank
-        widx = max(r.kv_len + r.inflight - 1, 0) // self.cc.page_size
-        if widx >= len(r.pages):
-            return True
-        old = r.pages[widx]
-        if self.alloc[d].refcount(pool, old) <= 1:
-            return True
-        got = self._alloc_or_evict(d, pool, 1)
-        if got is None:
-            # no page for a copy — but if the only co-owners are cache
-            # entries, dropping them makes the page privately writable in
-            # place (no copy needed at all)
-            if self.prefix is not None:
-                self.prefix[d].drop_refs_for_page(pool, old)
-                if self.alloc[d].refcount(pool, old) <= 1:
-                    return True
-            return False
-        self._copy_pages_dev(d, pool, [(old, got[0])])
-        self.alloc[d].release(pool, [old])
-        r.pages[widx] = got[0]
-        self.metrics.cow()
-        return True
+    @property
+    def _pending(self):
+        return self.ex._pending
+
+    @property
+    def prefill_chunk(self) -> int:
+        return self.ex.prefill_chunk
+
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def warmup(self, layouts=None) -> None:
+        self.ex.warmup(layouts)
 
     def requeue_for_reprefill(self, r: Request) -> None:
-        """Teacher-force-requeue a live request: release its pages (to the
-        recorded pool), fold the generated tokens into the prompt, vacate
-        any fused-decode device slot, and send it back to `waiting` for
-        re-prefill. Shared by pool-exhaustion preemption and rank-failure
-        recovery (distributed/elastic.py). Requires r.inflight == 0 —
-        callers drain the fused pipeline first."""
-        assert r.inflight == 0, "requeueing a request with in-flight tokens"
-        d = r.data_group
-        if r.pages:
-            self.alloc[d].release(r.pool_rank, r.pages)
-            r.pages = []
-        r.prompt = list(r.prompt) + list(r.output)
-        if r.forced_len is not None:
-            r.forced_len = max(1, r.forced_len - len(r.output))
-        else:
-            r.max_new_tokens = max(1, r.max_new_tokens - len(r.output))
-        r.output = []
-        r.prefill_pos = 0
-        r.page_hashes = r.full_hash = None      # prompt changed
-        r.state = State.WAITING
-        r.owner_rank = 0
-        r.pool_rank = 0
-        self._clear_slot(r)
-        self.running.pop(r.rid, None)
-        if r in self.prefilling:
-            self.prefilling.remove(r)
-        self.waiting.append(r)
-
-    def _preempt(self, r: Request) -> None:
-        """Pool-exhaustion victim (the youngest holder of a starved pool)."""
-        self.requeue_for_reprefill(r)
-        self.metrics.preemptions += 1
-
-    def _truncate(self, r: Request) -> None:
-        """Per-request page cap reached: finish with what we have."""
-        r.truncated = True
-        self._clear_slot(r)
-        self._finish(r)
-        self.metrics.truncations += 1
-
-    def _clear_slot(self, r: Request) -> None:
-        """Vacate a fused-decode device slot (zero budget, null pages)."""
-        st = self._dstate
-        if (st is not None and r.slot is not None and r.slot >= 0
-                and st.slot_rid[r.data_group, r.slot] == r.rid):
-            st.slot_rid[r.data_group, r.slot] = -1
-            st.apply([], [(r.data_group, r.slot, 0, [])])
-        r.slot = None
-        r.budget_dev = 0
-
-    def _handle_starvation(self, starved: list, exclude=()) -> None:
-        """Pool-dry requests that cannot even be budget-clamped forward.
-        Preempt the youngest page-holder of the starved pool (freeing its
-        pages for the rest); a request starving ALONE in its pool is
-        truncated — no amount of waiting can ever free pages for it.
-        `exclude`: requests already scheduled into the current dispatch
-        (their pages are live for this step; they keep making progress)."""
-        seen = set()
-        ex = {q.rid for q in exclude}
-        for r in starved:
-            key = (r.data_group, r.pool_rank)
-            if key in seen or r.rid not in self.running:
-                continue
-            seen.add(key)
-            # EVERY page-holder counts toward "is r really alone" —
-            # running (even mid-flight: its finish will free pages) and
-            # prefilling alike; only settled, unscheduled ones are safe to
-            # preempt right now
-            holders = [q for q in
-                       list(self.running.values()) + self.prefilling
-                       if (q.data_group, q.pool_rank) == key and q.pages]
-            eligible = [q for q in holders
-                        if q.inflight == 0 and q.rid not in ex]
-            if len(holders) > 1 and eligible:
-                victim = max(eligible, key=lambda q: (q.arrival_s, q.rid))
-                self._preempt(victim)
-            elif holders == [r]:
-                self._truncate(r)
+        self.sched.requeue_for_reprefill(r)
 
     def clear_prefix_cache(self) -> None:
-        """Drop every cached prefix (releases the cache's page refs)."""
-        if self.prefix is not None:
-            for pc in self.prefix:
-                pc.drop_all()
+        self.sched.clear_prefix_cache()
 
-    def _cache_insert(self, r: Request) -> None:
-        """Index a freshly prefilled prompt: chain entries for its full
-        pages, plus the whole-prompt entry (partially-filled tail page
-        included — the CoW rule keeps it immutable once indexed)."""
-        if self.prefix is None or r.prompt_len < 1:
+    def _drain_decode(self) -> None:
+        self.ex.drain_decode()
+
+    # ------------------------------------------------------------------
+    # prefill / decode phases (Scheduler plans, Executor dispatches)
+    # ------------------------------------------------------------------
+    def _run_prefill(self) -> None:
+        # CoW copies from prefill admission must land before anything can
+        # write the source pages — flush even when no row dispatches
+        self.ex.run_copies(self.sched.drain_copies())
+        if not self.sched.prefilling:
             return
-        self._prefix_keys(r)
-        cache, pool = self.prefix[r.data_group], r.pool_rank
-        fp = r.prompt_len // self.cc.page_size
-        cache.insert_chain(pool, r.page_hashes[:fp], r.pages[:fp])
-        npg = pages_needed(r.prompt_len, self.cc.page_size)
-        if r.prompt_len > 1 and npg <= len(r.pages):
-            cache.insert_full(pool, r.full_hash, r.pages[:npg], r.prompt_len)
-
-    # ------------------------------------------------------------------
-    # admission
-    # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        self.pending.append(req)
-
-    def _pick_group(self, r: Request, load: list) -> int:
-        """Least-loaded data group, with a mild prefix-affinity bias: a
-        group whose cache already holds this prompt's first page (or whole
-        prompt) wins ties and small imbalances — shared-prefix rollout
-        groups then land where their pages are."""
-        best = min(range(self.Dd), key=lambda d: load[d])
-        if self.prefix is None or self.Dd == 1:
-            return best
-        self._prefix_keys(r)
-        hits = [d for d in range(self.Dd)
-                if self.prefix[d].holds_prefix(r.page_hashes, r.full_hash)]
-        if not hits:
-            return best
-        cand = min(hits, key=lambda d: load[d])
-        return cand if load[cand] <= load[best] + 2 else best
-
-    def _admit(self):
-        t = self.now()
-        # balance on every request the group still has to serve — running,
-        # prefilling, AND waiting — so a burst admitted in one iteration
-        # doesn't pile onto whichever group momentarily runs the least
-        load = [0] * self.Dd
-        for q in list(self.running.values()) + self.prefilling + self.waiting:
-            load[q.data_group] += 1
-        while self.pending and self.pending[0].arrival_s <= t:
-            r = self.pending.popleft()
-            r.data_group = self._pick_group(r, load)
-            load[r.data_group] += 1
-            max_tok = (self.cc.max_pages_per_req * self.cc.page_size
-                       - r.prompt_len - 1)
-            r.max_new_tokens = max(1, min(r.max_new_tokens, max_tok))
-            if r.forced_len is not None:
-                r.forced_len = max(1, min(r.forced_len, max_tok))
-            r.state = State.WAITING
-            self.waiting.append(r)
-
-    # ------------------------------------------------------------------
-    # prefill
-    # ------------------------------------------------------------------
-    def _ep_rank_load(self, d: int) -> list[int]:
-        load = [0] * self.G
-        for q in list(self.running.values()) + self.prefilling:
-            if q.data_group == d and q.owner_rank >= 0:
-                load[q.owner_rank] += 1
-        return load
-
-    def _pool_hit(self, d: int, pool: int, r: Request) -> tuple:
-        """(shared_pages, start_pos) the pool's cache can contribute.
-        Full-prompt hits skip everything but the last prompt token; chain
-        hits skip page-aligned prefixes. start is always < prompt_len (one
-        token must run through prefill to produce the first logits)."""
-        page = self.cc.page_size
-        cache = self.prefix[d]
-        full = cache.lookup_full(pool, r.full_hash)
-        if (full is not None and full[1] == r.prompt_len
-                and r.prompt_len > 1
-                and len(full[0]) <= self.cc.max_pages_per_req):
-            return list(full[0]), r.prompt_len - 1
-        hit = cache.match(pool, r.page_hashes)[:self.cc.max_pages_per_req]
-        if not hit:
-            return [], 0
-        start = min(len(hit) * page, r.prompt_len - 1)
-        return hit, max(start, 0)
-
-    def _acquire_pages(self, r: Request, d: int, pool: int, n_pages: int,
-                       hit: tuple | None = None) -> tuple | None:
-        """Allocate `n_pages` for a prefill, sharing whatever prefix the
-        pool's cache holds: full shared pages are forked (refcount only);
-        the page prefill will write into first — the partially-filled tail
-        of a full-prompt hit, or the last page of an exactly-page-aligned
-        chain hit — is copy-on-write-cloned instead. `hit` carries a
-        precomputed `_pool_hit` result (the EP rank loop already walked
-        every pool). Returns (pages, start_pos, n_shared) or None when the
-        pool is dry."""
-        page = self.cc.page_size
-        shared, start = ([], 0)
-        if self.prefix is not None:
-            self._prefix_keys(r)
-            shared, start = hit if hit is not None \
-                else self._pool_hit(d, pool, r)
-        widx = start // page                   # first page prefill writes
-        # PIN the hit before any eviction: evict() below may drop the very
-        # entry we matched, and an unpinned cache-only page would return to
-        # the free list out from under us
-        if shared:
-            self.alloc[d].fork(pool, shared)
-        fresh = (n_pages - len(shared)) + (1 if widx < len(shared) else 0)
-        # watermark: starting a prefill must leave headroom for the pool's
-        # RUNNING requests to keep growing — without it, a big prefill and
-        # a starved decoder thrash (prefill grabs every page preemption
-        # frees, each iteration, forever). Only runners that can still
-        # grow count; one already holding its final page reserves nothing.
-        maxp = self.cc.max_pages_per_req
-        reserve = sum(
-            1 for q in self.running.values()
-            if q.data_group == d and q.pool_rank == pool and q.pages
-            and len(q.pages) < min(
-                pages_needed(q.prompt_len + q.target_len + 1,
-                             self.cc.page_size), maxp))
-        if (self.alloc[d].free_pages(pool) < fresh + reserve
-                and self.prefix is not None):
-            self.prefix[d].evict(pool, fresh + reserve)
-        if self.alloc[d].free_pages(pool) < fresh + reserve:
-            if shared:
-                self.alloc[d].release(pool, shared)
-            return None
-        got = self.alloc[d].try_alloc(pool, fresh)
-        if got is None:
-            if shared:
-                self.alloc[d].release(pool, shared)
-            return None
-        pages, gi = [], iter(got)
-        for i, p in enumerate(shared):
-            if i == widx:
-                np_ = next(gi)
-                self._copy_pages_dev(d, pool, [(p, np_)])
-                self.alloc[d].release(pool, [p])   # swap pin for the copy
-                self.metrics.cow()
-                pages.append(np_)
-            else:
-                pages.append(p)
-        pages.extend(gi)
-        if self.prefix is not None:
-            self.prefix[d].touch(pool, r.page_hashes[:len(shared)],
-                                 r.full_hash)
-            self.metrics.prefix(len(shared), start)
-        return pages, start, len(shared)
-
-    def _prefix_leader_inflight(self, r: Request) -> bool:
-        """True when another request with the same prompt (or first page)
-        is mid-prefill in this group: the follower waits one or two
-        iterations so it can fork the leader's pages instead of redundantly
-        prefilling the shared prefix — the whole point of the cache under
-        the paper's simultaneous-arrival rollout bursts."""
-        if self.prefix is None:
-            return False
-        self._prefix_keys(r)
-        for q in self.prefilling:
-            if q.data_group != r.data_group or q.page_hashes is None:
-                continue
-            if (q.full_hash == r.full_hash
-                    or (r.page_hashes and q.page_hashes
-                        and q.page_hashes[0] == r.page_hashes[0])):
-                return True
-        return False
-
-    def _start_prefill(self, r: Request) -> bool:
-        d = r.data_group
-        if self._prefix_leader_inflight(r):
-            return False
-        # LAZY allocation: pages for the prompt + the first decode write
-        # only — decode grows the block table on demand (_ensure_pages /
-        # _plan_fused), so resident pages track live tokens, not worst case
-        n_pages = pages_needed(r.prompt_len + 1, self.cc.page_size)
-        n_pages = min(n_pages, self.cc.max_pages_per_req)
-        if self.active.kv_per_rank:
-            load = self._ep_rank_load(d)
-            cap = self._ladder_for(self.active)[-1] // self.G
-            hits = None
-            if self.prefix is not None:
-                self._prefix_keys(r)
-                # prefer the rank whose pool caches the longest prefix
-                # (each pool's hit is computed ONCE and reused below)
-                hits = {g: self._pool_hit(d, g, r) for g in range(self.G)}
-                order = sorted(range(self.G),
-                               key=lambda g: (-hits[g][1], load[g], g))
-            else:
-                order = sorted(range(self.G), key=lambda g: (load[g], g))
-            for g in order:
-                if load[g] >= cap:
-                    continue
-                got = self._acquire_pages(r, d, g, n_pages,
-                                          hit=hits[g] if hits else None)
-                if got is not None:
-                    r.owner_rank = g
-                    r.pool_rank = g
-                    r.pages, r.prefill_pos, _ = got
-                    break
-            else:
-                return False
-        else:
-            got = self._acquire_pages(r, d, 0, n_pages)
-            if got is None:
-                return False
-            r.owner_rank = -1
-            r.pool_rank = 0
-            r.pages, r.prefill_pos, _ = got
-        r.state = State.PREFILL
-        self.prefilling.append(r)
-        return True
-
-    def _prefill_row(self, r: Request) -> int:
-        """Batch row of a prefilling request: rank-sharded layouts run one
-        request per owning model rank; replicated layouts use row 0."""
-        return r.owner_rank if self.active.slots_sharded else 0
-
-    def _run_prefill(self):
-        """One chunked prefill step (batched across data groups / ranks)."""
-        if not self.prefilling:
-            return
-        chunk = self.prefill_chunk
-        Bp = self.active.prefill_width(self.G)
-        maxp = self.cc.max_pages_per_req
-        toks = np.zeros((self.Dd, Bp, chunk), np.int32)
-        pos = np.zeros((self.Dd, Bp), np.int32)
-        vl = np.zeros((self.Dd, Bp), np.int32)
-        bt = np.zeros((self.Dd, Bp, maxp), np.int32)
-        picked: list[Request] = []
-        for r in self.prefilling:
-            d = r.data_group
-            row = self._prefill_row(r)
-            if vl[d, row] > 0:
-                continue                      # row already used this step
-            n = min(chunk, r.prompt_len - r.prefill_pos)
-            toks[d, row, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
-            pos[d, row] = r.prefill_pos
-            vl[d, row] = n
-            bt[d, row, :len(r.pages)] = r.pages
-            picked.append(r)
+        picked = self.sched.select_prefill_rows(self.ex.prefill_chunk)
         if not picked:
             return
-        fn = self._prefill_fn(self.active)
-        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
-        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
-                               jnp.asarray(toks), jnp.asarray(pos),
-                               jnp.asarray(vl), jnp.asarray(bt), key)
-        nxt = np.asarray(nxt)
-        self.metrics.prefill(int(vl.sum()))
+        nxt = self.ex.run_prefill(picked, self._step_i)
         t = self.now()
-        for r in picked:
-            d = r.data_group
-            row = self._prefill_row(r)
-            r.prefill_pos += int(vl[d, row])
-            if r.prefill_pos >= r.prompt_len:
-                self._cache_insert(r)
-                first = int(nxt[d, row])
-                r.output.append(first)
-                r.first_token_s = t
-                r.state = State.RUNNING
-                self.prefilling.remove(r)
-                self.running[r.rid] = r
-                if r.done():
-                    self._finish(r)
+        for r, d, row, n in picked:
+            self.sched.finish_prefill(r, n, int(nxt[d, row]), t)
 
-    # ------------------------------------------------------------------
-    # decode
-    # ------------------------------------------------------------------
-    def _finish(self, r: Request):
-        r.state = State.FINISHED
-        r.finish_s = self.now()
-        self.running.pop(r.rid, None)
-        # release to the pool recorded at alloc time (updated only by
-        # apply_assignments) — NOT one recomputed from the active layout:
-        # a request that prefilled under one KV view and finishes after a
-        # view-changing switch would leak in one pool and later double-free
-        # in the other
-        if r.pages:
-            self.alloc[r.data_group].release(r.pool_rank, r.pages)
-        r.pages = []
-        self.finished.append(r)
-        self.metrics.finish(r)
-
-    def _ensure_pages(self, r: Request):
-        """Grow the block table for the next decode write. Returns True,
-        or "cap" (per-request page cap reached — finish with truncation)
-        or "dry" (pool exhausted even after cache eviction — preempt)."""
-        if not self._cow_if_shared(r):
-            return "dry"
-        need = pages_needed(r.kv_len + 1, self.cc.page_size)
-        if need <= len(r.pages):
-            return True
-        if need > self.cc.max_pages_per_req:
-            return "cap"
-        got = self._alloc_or_evict(r.data_group, r.pool_rank,
-                                   need - len(r.pages))
-        if got is None:
-            return "dry"
-        r.pages.extend(got)
-        return True
-
-    def _decode_once(self):
-        if not self.running:
+    def _decode_once(self) -> None:
+        if not self.sched.running:
             return
-        # slot compaction (host metadata only — free every iteration)
-        per_group: dict[int, list[Request]] = {d: [] for d in range(self.Dd)}
-        for r in self.running.values():
-            per_group[r.data_group].append(r)
-        def rotated(reqs):
-            lst = sorted(reqs, key=lambda q: q.rid)
-            if not lst:
-                return lst
-            off = self._step_i % len(lst)      # fairness under oversubscription
-            return lst[off:] + lst[:off]
-
-        if not self.active.slots_sharded:
-            need = max(len(v) for v in per_group.values())
-            B = self._pick_B(self.active, need)
-            for d, reqs in per_group.items():
-                for i, r in enumerate(rotated(reqs)):
-                    r.slot = i if i < B else None
-        else:
-            bs_need = 1
-            for d, reqs in per_group.items():
-                load = [0] * self.G
-                for r in reqs:
-                    r.slot = None
-                for r in rotated(reqs):
-                    g = r.owner_rank
-                    r.slot_local = load[g]
-                    load[g] += 1
-                bs_need = max(bs_need, max(load))
-            B = self._pick_B(self.active, bs_need * self.G)
-            bs_loc = B // self.G
-            for r in self.running.values():
-                # requests beyond this rung's per-rank slots wait a turn
-                r.slot = (r.owner_rank * bs_loc + r.slot_local
-                          if r.slot_local < bs_loc else None)
-        maxp = self.cc.max_pages_per_req
-        toks = np.zeros((self.Dd, B, 1), np.int32)
-        pos = np.zeros((self.Dd, B), np.int32)
-        vl = np.zeros((self.Dd, B), np.int32)
-        bt = np.zeros((self.Dd, B, maxp), np.int32)
-        stepped: list[Request] = []
-        starved: list[Request] = []
-        for r in list(self.running.values()):
-            if r.slot is None or r.slot >= B:
-                continue
-            ok = self._ensure_pages(r)
-            if ok == "cap":
-                # at max_pages_per_req with no room for the next token:
-                # retrying forever would livelock — finish with truncation
-                self._truncate(r)
-                continue
-            if ok == "dry":
-                starved.append(r)
-                continue
-            d = r.data_group
-            toks[d, r.slot, 0] = r.output[-1]
-            # the fed token is output[-1]: its KV position is kv_len - 1
-            pos[d, r.slot] = r.kv_len - 1
-            vl[d, r.slot] = 1
-            bt[d, r.slot, :len(r.pages)] = r.pages
-            stepped.append(r)
-        if starved:
-            # nobody can free pages for a starved pool by finishing if the
-            # pool's holders are themselves stuck — preempt/truncate so the
-            # engine always makes progress (no retry-forever livelock)
-            self._handle_starvation(starved, exclude=stepped)
+        B, stepped = self.sched.plan_decode(self._step_i)
+        self.ex.run_copies(self.sched.drain_copies())
         if not stepped:
             return
-        fn = self._decode_fn(self.active, B)
-        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
-        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
-                               jnp.asarray(toks), jnp.asarray(pos),
-                               jnp.asarray(vl), jnp.asarray(bt), key)
-        nxt = np.asarray(nxt)
-        self.metrics.decode(len(stepped), 1)
-        for r in stepped:
-            r.output.append(int(nxt[r.data_group, r.slot]))
-            if r.done():
-                self._finish(r)
+        toks = self.ex.run_decode(B, stepped, self._step_i)
+        self.sched.commit_decode(stepped, toks)
 
-    # ------------------------------------------------------------------
-    # fused decode (decode_steps > 1): device-resident state, N-step loop
-    # ------------------------------------------------------------------
-    def _decode_step(self):
+    def _decode_step(self) -> None:
         """Dispatch one decode iteration on whichever control plane the
         engine is configured for (also the overlap step during a chunked
         switch)."""
         if self.ecfg.decode_steps > 1:
-            self._decode_fused()
+            self.ex.decode_fused(self.sched, self._step_i)
         else:
             self._decode_once()
-
-    def _fused_rung(self) -> int:
-        """Ladder rung for the current running set (same sizing rule as the
-        single-step path; slots are sticky between rung changes)."""
-        if not self.active.slots_sharded:
-            per_group = [0] * self.Dd
-            for r in self.running.values():
-                per_group[r.data_group] += 1
-            need = max(per_group)
-        else:
-            load: dict = {}
-            for r in self.running.values():
-                k = (r.data_group, r.owner_rank)
-                load[k] = load.get(k, 0) + 1
-            need = max(load.values()) * self.G
-        return self._pick_B(self.active, max(1, need))
-
-    def _rebuild_dstate(self, B: int) -> DeviceDecodeState:
-        """Fresh device state for a new rung/layout; every running request
-        re-joins through the next `_plan_fused` pass (requires a drained
-        pipeline — callers consume in-flight outputs first)."""
-        for r in self.running.values():
-            r.slot = None
-            r.budget_dev = 0
-        self._dstate = DeviceDecodeState(self.mesh, self.active, self.Dd, B,
-                                         self.cc.max_pages_per_req,
-                                         da=self.da, m=self.m)
-        return self._dstate
-
-    def _plan_fused(self, st: DeviceDecodeState, N: int):
-        """Join free slots, preallocate the next N tokens of pages, and
-        compute the per-slot delta scatters.
-
-        Device budgets hold each slot's TOTAL remaining tokens (decremented
-        on device), so a steady-state slot needs no per-step host writes at
-        all; a budget is clamped to what its allocated pages can hold when
-        the pool runs dry and restored (with the grown block-table row)
-        once pages free up.
-        """
-        page = self.cc.page_size
-        maxp = self.cc.max_pages_per_req
-        joins, grows, plan = [], [], []
-        capped, starved = [], []
-        bs_loc = st.B // self.G if self.active.slots_sharded else st.B
-        # slots are sticky (rotation would re-scatter device rows every
-        # step); fairness under oversubscription comes from join order —
-        # least-served requests claim freed slots first, so no request
-        # waits more than one occupant's remaining budget
-        order = sorted(self.running.values(),
-                       key=lambda q: (len(q.output), q.rid))
-        for r in order:
-            d = r.data_group
-            is_join = False
-            if r.slot is None or r.slot < 0:   # -1 = never slotted (default)
-                if r.inflight:
-                    continue               # mid-flight; never re-slotted
-                if self.active.slots_sharded:
-                    g = r.owner_rank
-                    s = st.free_slot(d, g * bs_loc, (g + 1) * bs_loc)
-                else:
-                    s = st.free_slot(d, 0, st.B)
-                if s is None:
-                    continue               # oversubscribed: waits for a slot
-                st.slot_rid[d, s] = r.rid
-                r.slot = s
-                is_join = True
-            s = r.slot
-            remaining = r.target_len - len(r.output) - r.inflight
-            if remaining <= 0:
-                continue                   # finished on device; awaiting fetch
-            kv_eff = r.kv_len + r.inflight
-            horizon = min(remaining, N)
-            need = min(pages_needed(kv_eff + horizon - 1, page), maxp)
-            grew = False
-            # the substep about to write page (kv_eff-1)//page must own it
-            # privately — CoW-fork a shared (prefix-cached) tail first
-            widx = (kv_eff - 1) // page
-            old_tail = r.pages[widx] if widx < len(r.pages) else None
-            cow_ok = self._cow_if_shared(r)
-            if cow_ok and old_tail is not None and r.pages[widx] != old_tail:
-                grew = True                # CoW swapped a block-table entry
-            if need > len(r.pages):
-                got = self._alloc_or_evict(d, r.pool_rank,
-                                           need - len(r.pages))
-                if got:
-                    r.pages.extend(got)
-                    grew = True
-            # tokens the allocated pages can still absorb (the fed token
-            # sits at kv_eff - 1; substep j writes position kv_eff - 1 + j)
-            afford = (len(r.pages) * page - kv_eff + 1) if cow_ok else 0
-            b_target = remaining if afford >= horizon else max(0, afford)
-            if b_target <= 0 < remaining and r.inflight == 0:
-                if cow_ok and pages_needed(kv_eff + 1, page) > maxp:
-                    capped.append(r)       # page cap: truncate at boundary
-                    continue
-                starved.append(r)          # pool dry: clamp -> may preempt
-            if is_join:
-                joins.append((d, s, r.output[-1], kv_eff - 1, b_target,
-                              r.pages))
-            elif grew or b_target != r.budget_dev:
-                grows.append((d, s, b_target, r.pages))
-            r.budget_dev = b_target
-            steps = min(N, b_target)
-            if steps > 0:
-                plan.append((d, s, r, steps))
-        return joins, grows, plan, capped, starved
-
-    def _decode_fused(self):
-        N = self.ecfg.decode_steps
-        if not self.running:
-            self._drain_decode()
-            return
-        B = self._fused_rung()
-        st = self._dstate
-        if st is None or st.B != B or st.layout is not self.active:
-            self._drain_decode()           # step boundary before a rebuild
-            st = self._rebuild_dstate(B)
-        joins, grows, plan, capped, starved = self._plan_fused(st, N)
-        # deltas must land even when nothing steps: _plan_fused already
-        # recorded the joins in the host mirror, and a budget-clamped join
-        # still needs its token/position/table row on device for later
-        st.apply(joins, grows)
-        for r in capped:
-            if r.inflight == 0:
-                self._truncate(r)          # page cap: no growth can help
-        if starved:
-            # recover a dry pool NOW, even while other pools keep stepping
-            # (a starved pool's holders never reach the plan, so waiting
-            # for an empty plan would strand it forever). Starved requests
-            # have budget 0 and inflight 0 — their slots write nothing, so
-            # preemption is safe alongside the upcoming dispatch.
-            self._handle_starvation(
-                [r for r in starved if r.rid in self.running],
-                exclude=[r for _, _, r, _ in plan])
-        if not plan:
-            self._drain_decode()           # nothing live; flush the pipeline
-            return
-        fn = self._decode_loop_fn(self.active, st.B, N)
-        key = jax.random.key_data(jax.random.fold_in(self._key, self._step_i))
-        out, self.kv_flat, tok, pos, bud = fn(
-            self._assemble_pack(self.active), self.kv_flat, st.tokens,
-            st.positions, st.budgets, st.block_tables, key)
-        st.advance(tok, pos, bud)
-        # start the device->host copy now; the tokens are read one engine
-        # iteration later, so host dispatch runs ahead of the device
-        if hasattr(out, "copy_to_host_async"):
-            out.copy_to_host_async()
-        total = 0
-        for d, s, r, steps in plan:
-            r.inflight += steps
-            r.budget_dev -= steps
-            total += steps
-        self.metrics.decode(total, N)
-        prev, self._pending = self._pending, (out, plan, st)
-        if prev is not None:
-            self._consume(prev)
-
-    def _consume(self, pending):
-        """Fetch one fused dispatch's tokens and retire finished requests.
-        Output rows are deterministic in shape: slot budgets stop a request
-        exactly at its target length on device, so `steps` per slot is
-        known at dispatch time."""
-        out, plan, st = pending
-        arr = np.asarray(out)
-        for d, s, r, steps in plan:
-            for j in range(steps):
-                r.output.append(int(arr[d, s, j]))
-            r.inflight -= steps
-            if r.inflight == 0 and r.done():
-                self._finish(r)
-                st.slot_rid[d, s] = -1
-                r.slot = None
-                r.budget_dev = 0
-
-    def _drain_decode(self):
-        """Consume any in-flight fused outputs: request metadata reaches a
-        decode step boundary (required before switch planning, rung/layout
-        rebuilds, and at shutdown)."""
-        if self._pending is not None:
-            prev, self._pending = self._pending, None
-            self._consume(prev)
 
     # ------------------------------------------------------------------
     # switch
     # ------------------------------------------------------------------
-    def _live(self) -> list[Request]:
-        return list(self.running.values()) + list(self.prefilling)
-
-    def execute_switch(self, target: str):
+    def execute_switch(self, target: str) -> None:
         """Live switch between decode iterations; no request is drained.
         The target may be ANY registered layout the engine keeps resident —
         the switch plan is the src->target slice-ownership diff.
@@ -1034,51 +298,39 @@ class MoebiusEngine:
             f"layout {target} not resident (EngineConfig.layouts)"
         # fused decode: fetch in-flight tokens so every request's kv_len and
         # pages sit at a step boundary before the plan snapshot
-        self._drain_decode()
+        self.ex.drain_decode()
         if self.ecfg.chunk_layers > 0:
             rec = self._execute_switch_chunked(target)
         else:
-            experts = self._experts if self.cfg.is_moe else None
-            (experts, self.kv_flat, self.alloc, self.prefix,
-             st) = self.switcher.monolithic(
-                self.active, target, self._live(), experts, self.kv_flat,
-                cur_alloc=self.alloc, caches=self.prefix)
-            if self.cfg.is_moe:
-                self._experts = experts
-            self.active = target
+            alloc, caches, st = self.ex.switch_monolithic(
+                target, self.sched.live(), self.sched.alloc,
+                self.sched.prefix)
+            self.sched.alloc, self.sched.prefix = alloc, caches
+            self.sched.set_layout(target)
             rec = SwitchRecord(
                 t=self.now(), direction=st.direction, total_s=st.total_s,
                 weights_s=st.weights_s, kv_s=st.kv_s, plan_s=st.plan_s,
                 kv_pages=st.kv_pages, live_requests=st.live_requests,
                 pause_s=st.pause_s, chunks=st.chunks)
-        # layout geometry changed: the device decode state must be rebuilt
-        # and the assembled packs re-point at the resharded expert store
-        self._dstate = None
-        self._pack_cache.clear()
         self.switch_records.append(rec)
         self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
 
     def _execute_switch_chunked(self, target: LayoutSpec) -> SwitchRecord:
-        sess = self.switcher.start(
-            self.active, target, self._live(),
-            self._experts if self.cfg.is_moe else None,
-            self.kv_flat, self.ecfg.chunk_layers, cur_alloc=self.alloc,
-            caches=self.prefix)
+        sess = self.ex.switch_start(target, self.sched.live(),
+                                    self.ecfg.chunk_layers,
+                                    self.sched.alloc, self.sched.prefix)
         while not sess.done:
-            self.switcher.advance(
-                self._experts if self.cfg.is_moe else None, self.kv_flat)
+            self.ex.switch_advance()
             # overlap: decode continues in the source layout on the source
             # buffers while the chunk's collectives are in flight
             self._step_i += 1
             self._decode_step()
         # drain to a step boundary so the commit-time dirty-page delta sees
         # every KV write the overlap window produced
-        self._drain_decode()
-        (experts, self.kv_flat, self.alloc, self.prefix,
-         st) = self.switcher.commit(self._live(), self.kv_flat)
-        if self.cfg.is_moe:
-            self._experts = experts
-        self.active = target
+        self.ex.drain_decode()
+        alloc, caches, st = self.ex.switch_commit(target, self.sched.live())
+        self.sched.alloc, self.sched.prefix = alloc, caches
+        self.sched.set_layout(target)
         return SwitchRecord(
             t=self.now(), direction=st.direction, total_s=st.total_s,
             weights_s=0.0, kv_s=0.0, plan_s=st.plan_s,
@@ -1089,34 +341,30 @@ class MoebiusEngine:
     # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
-    def step(self):
+    def step(self) -> None:
         self._step_i += 1
-        self._admit()
-        # policy: sample once per iteration, between steps (in-flight fused
-        # tokens count toward the live-token load)
-        in_flight = len(self.running) + len(self.waiting) + len(self.prefilling)
-        live_tokens = sum(r.kv_len + r.inflight + 1
-                          for r in self.running.values())
+        if self.ecfg.idle_skip:
+            self._skip_idle()
+        self.sched.admit(self.now())
+        # policy: sample once per iteration, between steps, through the
+        # scheduler's queue snapshot (in-flight fused tokens count toward
+        # the live-token load)
         cap_ep = self.cc.capacity_tokens(self.cfg, self.G, EP)
-        dec = self.coord.observe(in_flight, live_tokens, cap_ep)
+        dec = self.coord.observe_queues(self.sched.snapshot(), cap_ep)
         if dec.switch:
             self.execute_switch(dec.target)
-        # admit waiting -> prefill
-        still = []
-        for r in self.waiting:
-            if not self._start_prefill(r):
-                still.append(r)
-        self.waiting = still
+        self.sched.start_prefills()          # admit waiting -> prefill
         self._run_prefill()
         self._decode_step()
-        self.metrics.pages_resident(sum(a.total_held() for a in self.alloc))
-        self.metrics.sample_mode(self.now(), self.active, len(self.running))
+        self.metrics.pages_resident(sum(a.total_held()
+                                        for a in self.sched.alloc))
+        self.metrics.sample_mode(self.now(), self.active,
+                                 len(self.sched.running))
 
     def run(self, max_steps: int = 100000):
         for _ in range(max_steps):
-            if not (self.pending or self.waiting or self.prefilling
-                    or self.running):
+            if not self.sched.has_work():
                 break
             self.step()
-        self._drain_decode()           # flush a half-open fused pipeline
+        self.ex.drain_decode()         # flush a half-open fused pipeline
         return self.metrics.summary()

@@ -1,0 +1,424 @@
+"""Executor / ModelRunner: everything that touches a device (DESIGN.md §7).
+
+The Executor owns the device-resident state the Scheduler must never see:
+layout packs + the single-copy expert store, the unified KV buffer, the
+step-function caches (`ResidentRuntime`), `DeviceDecodeState` + the fused
+one-deep dispatch pipeline, the CoW page copier, and the `SwitchExecutor`.
+It consumes the Scheduler's plans/decisions (prefill rows, decode plans,
+`CopyPages`) and reports completions back through the scheduler callbacks
+(`finish_prefill` / `commit_decode` are driven by the engine facade;
+fused-pipeline retirements go through the `on_finish` hook).
+
+Memory discipline mirrors the paper: the control plane (attention/embed/norm
+packs, compiled steps) is resident for EVERY registered layout (the
+dual-mode buffer); the data plane (expert weights, KV pool) exists once, in
+the active layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import LayoutSpec, get_layout, group_info, pack_params
+from repro.core.residency import ResidentRuntime
+from repro.core.switch_exec import SwitchExecutor
+from repro.models.common import ModelConfig
+from repro.models.registry import init_params
+from repro.serving.device_state import DeviceDecodeState
+from repro.serving.kvcache import COPY_W, CacheConfig, make_copy_pages
+from repro.serving.metrics import ServeMetrics
+from repro.serving.request import Request
+from repro.serving.steps import (build_decode_loop, build_decode_pack,
+                                 build_serve_step)
+
+
+class Executor:
+    """Device-side model runner for one engine instance."""
+
+    def __init__(self, cfg: ModelConfig, mesh, cc: CacheConfig, ecfg,
+                 layouts: tuple[LayoutSpec, ...], active: LayoutSpec,
+                 params_global: dict | None = None,
+                 metrics: ServeMetrics | None = None,
+                 data_axis: str = "data", model_axis: str = "model"):
+        self.cfg, self.mesh, self.cc, self.ecfg = cfg, mesh, cc, ecfg
+        self.m, self.da = model_axis, data_axis
+        self.G = mesh.shape[model_axis]
+        self.Dd = mesh.shape[data_axis]
+        self.chips = self.Dd * self.G
+        self.gi = group_info(cfg, self.G)
+        self.layouts = layouts
+        self.active = active
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        # full-mesh layouts split each prefill chunk 1/G per rank
+        q = max(s.prefill_quantum(self.G) for s in layouts)
+        self.prefill_chunk = -(-ecfg.prefill_chunk // q) * q
+        if params_global is None:
+            params_global = init_params(cfg, jax.random.PRNGKey(ecfg.seed))
+
+        # --- N-resident control plane; single-copy expert data plane ---
+        self.packs: dict[str, dict] = {}
+        self._expert_store: dict[str, dict] = {}   # only active layout kept
+        for spec in layouts:
+            stored = pack_params(cfg, params_global, spec, self.G,
+                                 expert_G=spec.expert_group(self.G,
+                                                            self.chips))
+            pk = build_decode_pack(cfg, stored, spec, self.G)
+            if cfg.is_moe:
+                moe = pk["layers"]["moe"]
+                self._expert_store[spec] = {
+                    "w13": moe.pop("w13"), "w2": moe.pop("w2")}
+            self.packs[spec] = pk
+        if cfg.is_moe:
+            # free the inactive layouts' expert copies (single resident copy)
+            self._experts = self._expert_store.pop(self.active)
+            del self._expert_store
+
+        # --- unified KV buffer (committed to its serve-step sharding up
+        # front: a lazily-committed buffer would change sharding signature
+        # after the first dispatch and recompile every warmed executable) ---
+        self.NE = cc.nelems(cfg, self.G)
+        self.kv_flat = jax.device_put(
+            jnp.zeros((self.Dd, self.G, self.NE), cfg.param_dtype),
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(data_axis, model_axis)))
+        self._copy_fns: dict = {}          # CoW page copier, per layout
+
+        # --- resident runtimes (all layouts, ladder of decode rungs) ---
+        self.rt = ResidentRuntime(ladder=tuple(
+            b for b in ecfg.ladder if b % self.G == 0 or b >= self.G
+        ) or (self.G,))
+        self._pack_cache: dict = {}        # assembled packs, per layout
+        # fused decode (decode_steps > 1): device-resident state + the
+        # one-deep dispatch pipeline (outputs consumed one iteration late)
+        self._dstate: DeviceDecodeState | None = None
+        self._pending: tuple | None = None
+        self.switcher = SwitchExecutor(
+            cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
+            direct_reshard=ecfg.direct_reshard)
+        self._key = jax.random.PRNGKey(ecfg.seed + 1)
+        # completion sink for fused-pipeline retirements (the engine wires
+        # this to Scheduler.finish_request)
+        self.on_finish = lambda r: None
+
+    # ------------------------------------------------------------------
+    # step functions (resident; warmed at startup or first use)
+    # ------------------------------------------------------------------
+    def ladder_for(self, layout: LayoutSpec):
+        return get_layout(layout).decode_ladder(self.rt.ladder, self.G)
+
+    def _decode_fn(self, layout: LayoutSpec, B: int):
+        return self.rt.get_or_build(
+            (layout, "decode", B),
+            lambda: build_serve_step(
+                self.cfg, self.mesh, layout, self.cc, B, Sq=1,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+
+    def _decode_loop_fn(self, layout: LayoutSpec, B: int, N: int):
+        return self.rt.get_or_build(
+            (layout, "decode_loop", B, N),
+            lambda: build_decode_loop(
+                self.cfg, self.mesh, layout, self.cc, B, N,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+
+    def _prefill_fn(self, layout: LayoutSpec):
+        Bp = get_layout(layout).prefill_width(self.G)
+        return self.rt.get_or_build(
+            (layout, "prefill", Bp),
+            lambda: build_serve_step(
+                self.cfg, self.mesh, layout, self.cc, Bp,
+                Sq=self.prefill_chunk,
+                temperature=self.ecfg.temperature, data_axes=(self.da,),
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+
+    def warmup(self, layouts=None):
+        """Compile every resident layout's runtime at startup (paper §4.4).
+
+        The ACTIVE layout's step fns also run once on throwaway zero
+        inputs shaped/sharded exactly like live traffic, so the XLA
+        compile and the jit fast path are paid here and never inside a
+        serving iteration (jax.jit alone is lazy — building the wrapper
+        compiles nothing). Inactive layouts are built only; their first
+        execution happens behind a switch, whose benches warm explicitly.
+        """
+        for lo in (self.layouts if layouts is None else layouts):
+            self._prefill_fn(lo)
+            for b in self.ladder_for(lo):
+                self._decode_fn(lo, b)
+                if self.ecfg.decode_steps > 1:
+                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)
+            if self.ecfg.prefix_cache:
+                # compile the CoW page copier for EVERY resident layout
+                # outside the serving loop (a null plan: the reserved
+                # page 0 self-copies) — the first CoW after a live switch
+                # must select an executable, not build one
+                self.copy_pages(0, 0, [(0, 0)], layout=lo)
+            if lo is not self.active:
+                continue
+            pk = self._assemble_pack(lo)
+            key = jax.random.key_data(jax.random.PRNGKey(0))
+            maxp = self.cc.max_pages_per_req
+            Bp = get_layout(lo).prefill_width(self.G)
+            toks = jnp.zeros((self.Dd, Bp, self.prefill_chunk), jnp.int32)
+            z2 = jnp.zeros((self.Dd, Bp), jnp.int32)
+            bt = jnp.zeros((self.Dd, Bp, maxp), jnp.int32)
+            self._prefill_fn(lo)(pk, jnp.zeros_like(self.kv_flat),
+                                 toks, z2, z2, bt, key)
+            for b in self.ladder_for(lo):
+                z2 = jnp.zeros((self.Dd, b), jnp.int32)
+                bt = jnp.zeros((self.Dd, b, maxp), jnp.int32)
+                self._decode_fn(lo, b)(
+                    pk, jnp.zeros_like(self.kv_flat),
+                    jnp.zeros((self.Dd, b, 1), jnp.int32), z2, z2, bt, key)
+                if self.ecfg.decode_steps > 1:
+                    # match the live call's committed shardings exactly
+                    st = DeviceDecodeState(self.mesh, lo, self.Dd, b, maxp,
+                                           da=self.da, m=self.m)
+                    st.warm_scatters()
+                    self._decode_loop_fn(lo, b, self.ecfg.decode_steps)(
+                        pk, jnp.zeros_like(self.kv_flat), st.tokens,
+                        st.positions, st.budgets, st.block_tables, key)
+
+    def _assemble_pack(self, layout: str) -> dict:
+        """Assembled (control-plane pack + resident experts) pytree, cached
+        per layout; invalidated when a switch reshards the expert store."""
+        pk = self._pack_cache.get(layout)
+        if pk is None:
+            pk = self.packs[layout]
+            if self.cfg.is_moe:
+                pk = dict(pk)
+                layers = dict(pk["layers"])
+                layers["moe"] = {**layers["moe"], **self._experts}
+                pk["layers"] = layers
+            self._pack_cache[layout] = pk
+        return pk
+
+    def _step_key(self, step_i: int):
+        return jax.random.key_data(jax.random.fold_in(self._key, step_i))
+
+    # ------------------------------------------------------------------
+    # device page copies (the Scheduler's CopyPages decisions)
+    # ------------------------------------------------------------------
+    def copy_pages(self, d: int, pool: int, pairs: list,
+                   layout: LayoutSpec | None = None) -> None:
+        """Device page copy within the active view (the CoW mover). EP view:
+        the pair applies to `pool`'s rank only; pooled views: every rank
+        copies its head-slice of the page. `layout` overrides the view
+        only for warmup (a null self-copy of the reserved page 0 is a
+        data no-op under any view, so inactive layouts compile safely)."""
+        spec = self.active if layout is None else layout
+        fn = self._copy_fns.get(spec)
+        if fn is None:
+            fn = make_copy_pages(self.cfg, self.cc, self.mesh, spec,
+                                 model_axis=self.m, data_axis=self.da)
+            self._copy_fns[spec] = fn
+        rows = [pool] if spec.kv_per_rank else list(range(self.G))
+        for b in range(0, len(pairs), COPY_W):
+            blk = pairs[b:b + COPY_W]
+            sp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
+            dp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
+            vm = np.zeros((self.Dd, self.G, COPY_W), bool)
+            for g in rows:
+                for i, (a, bdst) in enumerate(blk):
+                    sp[d, g, i], dp[d, g, i], vm[d, g, i] = a, bdst, True
+            self.kv_flat = fn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
+                              jnp.asarray(vm))
+
+    def run_copies(self, copies: list) -> None:
+        """Execute drained CopyPages decisions in emission order (the order
+        encodes the free->realloc hazards the Scheduler already resolved)."""
+        for c in copies:
+            self.copy_pages(c.d, c.pool, list(c.pairs))
+
+    # ------------------------------------------------------------------
+    # prefill / single-step decode dispatch
+    # ------------------------------------------------------------------
+    def run_prefill(self, picked: list, step_i: int) -> np.ndarray:
+        """One chunked prefill step (batched across data groups / ranks).
+        `picked` rows come from Scheduler.select_prefill_rows; returns the
+        (Dd, Bp) next-token array."""
+        chunk = self.prefill_chunk
+        Bp = self.active.prefill_width(self.G)
+        maxp = self.cc.max_pages_per_req
+        toks = np.zeros((self.Dd, Bp, chunk), np.int32)
+        pos = np.zeros((self.Dd, Bp), np.int32)
+        vl = np.zeros((self.Dd, Bp), np.int32)
+        bt = np.zeros((self.Dd, Bp, maxp), np.int32)
+        for r, d, row, n in picked:
+            toks[d, row, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
+            pos[d, row] = r.prefill_pos
+            vl[d, row] = n
+            bt[d, row, :len(r.pages)] = r.pages
+        fn = self._prefill_fn(self.active)
+        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
+                               jnp.asarray(toks), jnp.asarray(pos),
+                               jnp.asarray(vl), jnp.asarray(bt),
+                               self._step_key(step_i))
+        self.metrics.prefill(int(vl.sum()))
+        return np.asarray(nxt)
+
+    def run_decode(self, B: int, stepped: list[Request],
+                   step_i: int) -> dict[int, int]:
+        """Dispatch one single-token decode step over `stepped` (slots
+        already assigned by Scheduler.plan_decode); returns rid -> token."""
+        maxp = self.cc.max_pages_per_req
+        toks = np.zeros((self.Dd, B, 1), np.int32)
+        pos = np.zeros((self.Dd, B), np.int32)
+        vl = np.zeros((self.Dd, B), np.int32)
+        bt = np.zeros((self.Dd, B, maxp), np.int32)
+        for r in stepped:
+            d = r.data_group
+            toks[d, r.slot, 0] = r.output[-1]
+            # the fed token is output[-1]: its KV position is kv_len - 1
+            pos[d, r.slot] = r.kv_len - 1
+            vl[d, r.slot] = 1
+            bt[d, r.slot, :len(r.pages)] = r.pages
+        fn = self._decode_fn(self.active, B)
+        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
+                               jnp.asarray(toks), jnp.asarray(pos),
+                               jnp.asarray(vl), jnp.asarray(bt),
+                               self._step_key(step_i))
+        nxt = np.asarray(nxt)
+        self.metrics.decode(len(stepped), 1)
+        return {r.rid: int(nxt[r.data_group, r.slot]) for r in stepped}
+
+    # ------------------------------------------------------------------
+    # fused decode (decode_steps > 1): device-resident state, N-step loop
+    # ------------------------------------------------------------------
+    def clear_slot(self, r: Request) -> None:
+        """Vacate a fused-decode device slot (zero budget, null pages).
+        Installed into the Scheduler as its `clear_slot` hook."""
+        st = self._dstate
+        if (st is not None and r.slot is not None and r.slot >= 0
+                and st.slot_rid[r.data_group, r.slot] == r.rid):
+            st.slot_rid[r.data_group, r.slot] = -1
+            st.apply([], [(r.data_group, r.slot, 0, [])])
+        r.slot = None
+        r.budget_dev = 0
+
+    def _rebuild_dstate(self, B: int, sched) -> DeviceDecodeState:
+        """Fresh device state for a new rung/layout; every running request
+        re-joins through the next `plan_fused` pass (requires a drained
+        pipeline — callers consume in-flight outputs first)."""
+        for r in sched.running.values():
+            r.slot = None
+            r.budget_dev = 0
+        self._dstate = DeviceDecodeState(self.mesh, self.active, self.Dd, B,
+                                         self.cc.max_pages_per_req,
+                                         da=self.da, m=self.m)
+        return self._dstate
+
+    def decode_fused(self, sched, step_i: int) -> None:
+        """One fused decode iteration: plan against the device state, apply
+        the delta scatters, dispatch the N-step loop, pipeline the output
+        fetch one iteration deep."""
+        N = self.ecfg.decode_steps
+        if not sched.running:
+            self.drain_decode()
+            return
+        B = sched.fused_rung()
+        st = self._dstate
+        if st is None or st.B != B or st.layout is not self.active:
+            self.drain_decode()            # step boundary before a rebuild
+            st = self._rebuild_dstate(B, sched)
+        joins, grows, plan, capped, starved = sched.plan_fused(st, N)
+        self.run_copies(sched.drain_copies())
+        # deltas must land even when nothing steps: plan_fused already
+        # recorded the joins in the host mirror, and a budget-clamped join
+        # still needs its token/position/table row on device for later
+        st.apply(joins, grows)
+        sched.resolve_fused(plan, capped, starved)
+        if not plan:
+            self.drain_decode()            # nothing live; flush the pipeline
+            return
+        fn = self._decode_loop_fn(self.active, st.B, N)
+        out, self.kv_flat, tok, pos, bud = fn(
+            self._assemble_pack(self.active), self.kv_flat, st.tokens,
+            st.positions, st.budgets, st.block_tables,
+            self._step_key(step_i))
+        st.advance(tok, pos, bud)
+        # start the device->host copy now; the tokens are read one engine
+        # iteration later, so host dispatch runs ahead of the device
+        if hasattr(out, "copy_to_host_async"):
+            out.copy_to_host_async()
+        total = 0
+        for d, s, r, steps in plan:
+            r.inflight += steps
+            r.budget_dev -= steps
+            total += steps
+        self.metrics.decode(total, N)
+        prev, self._pending = self._pending, (out, plan, st)
+        if prev is not None:
+            self._consume(prev)
+
+    def _consume(self, pending):
+        """Fetch one fused dispatch's tokens and retire finished requests.
+        Output rows are deterministic in shape: slot budgets stop a request
+        exactly at its target length on device, so `steps` per slot is
+        known at dispatch time."""
+        out, plan, st = pending
+        arr = np.asarray(out)
+        for d, s, r, steps in plan:
+            for j in range(steps):
+                r.output.append(int(arr[d, s, j]))
+            r.inflight -= steps
+            if r.inflight == 0 and r.done():
+                self.on_finish(r)
+                st.slot_rid[d, s] = -1
+                r.slot = None
+                r.budget_dev = 0
+
+    def drain_decode(self) -> None:
+        """Consume any in-flight fused outputs: request metadata reaches a
+        decode step boundary (required before switch planning, rung/layout
+        rebuilds, and at shutdown)."""
+        if self._pending is not None:
+            prev, self._pending = self._pending, None
+            self._consume(prev)
+
+    # ------------------------------------------------------------------
+    # switch execution (device side; the engine facade orchestrates)
+    # ------------------------------------------------------------------
+    def _post_switch(self, target: LayoutSpec) -> None:
+        # layout geometry changed: the device decode state must be rebuilt
+        # and the assembled packs re-point at the resharded expert store
+        self.active = target
+        self._dstate = None
+        self._pack_cache.clear()
+
+    def switch_monolithic(self, target: LayoutSpec, live: list[Request],
+                          alloc, caches):
+        """Monolithic switch: decode paused for the whole migration.
+        Returns (new_alloc, new_caches, stats)."""
+        experts = self._experts if self.cfg.is_moe else None
+        (experts, self.kv_flat, alloc, caches, st) = self.switcher.monolithic(
+            self.active, target, live, experts, self.kv_flat,
+            cur_alloc=alloc, caches=caches)
+        if self.cfg.is_moe:
+            self._experts = experts
+        self._post_switch(target)
+        return alloc, caches, st
+
+    def switch_start(self, target: LayoutSpec, live: list[Request],
+                     chunk_layers: int, alloc, caches):
+        """Open a chunked switch session (destination staged layer-chunk by
+        layer-chunk while decode keeps running on the source layout)."""
+        return self.switcher.start(
+            self.active, target, live,
+            self._experts if self.cfg.is_moe else None,
+            self.kv_flat, chunk_layers, cur_alloc=alloc, caches=caches)
+
+    def switch_advance(self) -> None:
+        self.switcher.advance(
+            self._experts if self.cfg.is_moe else None, self.kv_flat)
+
+    def switch_commit(self, target: LayoutSpec, live: list[Request]):
+        """Dirty-page delta + commit; returns (new_alloc, new_caches, stats)."""
+        (experts, self.kv_flat, alloc, caches,
+         st) = self.switcher.commit(live, self.kv_flat)
+        if self.cfg.is_moe:
+            self._experts = experts
+        self._post_switch(target)
+        return alloc, caches, st

@@ -72,16 +72,31 @@ class ServeMetrics:
                 out.append((fin - f) / (n - 1))
         return np.array(out)
 
+    def percentiles(self, tt=None, tp=None) -> dict:
+        """Per-request TTFT/TPOT p50/p99 (the frontend's SLO surface).
+        Pass precomputed ttft()/tpot() arrays to avoid rebuilding them."""
+        tt = self.ttft() if tt is None else tt
+        tp = self.tpot() if tp is None else tp
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if len(a) else float("nan")
+
+        return {
+            "ttft_p50_s": pct(tt, 50), "ttft_p99_s": pct(tt, 99),
+            "tpot_p50_s": pct(tp, 50), "tpot_p99_s": pct(tp, 99),
+        }
+
     def summary(self) -> dict:
         tt, tp = self.ttft(), self.tpot()
         fins = [fin for *_, fin, _ in self.records if fin is not None]
         pauses = np.array([p for *_, p, _ in self.switch_events])
         totals = np.array([t for *_, t in self.switch_events])
+        pct = self.percentiles(tt, tp)
         return {
             "n": len(self.records),
             "ttft_mean_s": float(tt.mean()) if len(tt) else float("nan"),
-            "ttft_p99_s": float(np.percentile(tt, 99)) if len(tt) else float("nan"),
             "tpot_mean_s": float(tp.mean()) if len(tp) else float("nan"),
+            **pct,
             "makespan_s": float(max(fins)) if fins else float("nan"),
             "total_tokens": int(sum(n for *_, n in self.records)),
             "switches": len(self.switch_events),

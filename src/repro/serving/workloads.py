@@ -67,6 +67,14 @@ class RolloutSpec:
     token_range: tuple = (5, 1000)
 
 
+def replay(frontend, reqs: list[Request]) -> dict:
+    """Submit an arrival-ordered trace to an AsyncEngine and return its
+    token streams keyed by rid (iterate them — or call
+    `frontend.run_until_complete()` — to drive the event loop)."""
+    return {r.rid: frontend.submit(r)
+            for r in sorted(reqs, key=lambda r: (r.arrival_s, r.rid))}
+
+
 def rollout_batch(spec: RolloutSpec, seed: int = 0) -> list[Request]:
     """Heavy-tailed output lengths: lognormal fit to (median, p99), capped.
 
