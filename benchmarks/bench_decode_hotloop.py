@@ -20,6 +20,11 @@ Methodology (CPU, 2-ish cores):
     collectives (fused wins less there — the per-substep cost is
     rendezvous-bound, which fusing cannot remove; identity still holds).
 
+A second section decomposes one mixed-batch serving run into separately
+timed ``prefill`` / ``mixed`` / ``generate`` stages (each engine iteration
+attributed by the token deltas it produced — see ``_staged_rows``), so the
+per-stage tokens/s of the unified dispatch path is a tracked number.
+
 Runnable standalone: ``python benchmarks/bench_decode_hotloop.py [--smoke]``
 (--smoke is the CI gate: fused(8) throughput >= single-step and identical
 tokens; smaller workload, primary section only).
@@ -99,6 +104,68 @@ def _measure_section(mesh, cfg, steps_list, *, n_req, out_len, reps,
     return best, identical, disp
 
 
+def _staged_rows(seed: int = 0):
+    """Stage-decomposed serving timeline under the mixed-batch engine
+    (MaxText splits its serving loop the same way): every engine iteration
+    is timed individually and attributed to
+
+      * ``prefill``  — the dispatch carried only prefill chunks,
+      * ``mixed``    — decode rows and prefill chunks shared one dispatch,
+      * ``generate`` — decode-only,
+
+    by the prefill/decode token deltas it produced. One batch of
+    long-prompt requests naturally walks through all three stages: every
+    request prefills first (prefill), early finishers decode while the
+    token budget still feeds the stragglers' chunks (mixed), then the
+    batch drains (generate)."""
+    import numpy as np
+    from benchmarks.common import make_engine
+    from repro.launch.mesh import make_mesh
+    from repro.serving.request import Request
+
+    cfg = _hotloop_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = make_engine(cfg, mesh, start="ep", ladder=(8,), pages_ep=224,
+                      maxp=32, prefill_chunk=32, attn_backend="ref")
+    eng.warmup(layouts=(eng.active,))
+    rng = np.random.default_rng(seed)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=list(rng.integers(5, 200, 96)),
+                           max_new_tokens=64, forced_len=64, arrival_s=0.0))
+    stages = {"prefill": [0.0, 0, 0], "mixed": [0.0, 0, 0],
+              "generate": [0.0, 0, 0]}          # [seconds, tokens, iters]
+    m = eng.metrics
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        p0, d0 = m.prefill_tokens, m.decode_tokens
+        t0 = time.perf_counter()
+        eng.step()
+        dt = time.perf_counter() - t0
+        dp, dd = m.prefill_tokens - p0, m.decode_tokens - d0
+        if dp and dd:
+            st = "mixed"
+        elif dp:
+            st = "prefill"
+        elif dd:
+            st = "generate"
+        else:
+            continue                            # idle/admission-only tick
+        stages[st][0] += dt
+        stages[st][1] += dp + dd
+        stages[st][2] += 1
+        i += 1
+        assert i < 10000, "staged run made no progress"
+    rows = []
+    for st, (sec, toks, iters) in stages.items():
+        rows.append((f"decode_hotloop.stage.{st}.tokens_per_s",
+                     toks / sec if sec else 0.0,
+                     f"iters={iters} tokens={toks} wall_s={sec:.3f}"))
+    present = all(v[2] > 0 for v in stages.values())
+    rows.append(("decode_hotloop.stage.coverage", float(present),
+                 f"all_stages_present={present}"))
+    return rows
+
+
 def _hotloop_cfg():
     """Minimal-but-real MoE (4 routed experts, top-2, swiglu) sized so the
     device substep stands in for a fast accelerator step: on ~10 ms real
@@ -137,6 +204,7 @@ def run(smoke: bool = False, seed: int = 0):
     rows.append(("decode_hotloop.host_overhead_frac_est",
                  1.0 - 1.0 / max(speedup, 1e-9),
                  "of the N=1 per-token step time"))
+    rows.extend(_staged_rows(seed=seed))
 
     if not smoke:
         mesh8 = make_mesh((1, 8), ("data", "model"))

@@ -165,7 +165,6 @@ def run(steps: int = 3, scale: float = 0.015, seed: int = 0,
 
 def main() -> None:
     import argparse
-    import json
     import pathlib
     import sys
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
@@ -177,7 +176,8 @@ def main() -> None:
                          "(>= 30%% prefill-token reduction, byte-identical "
                          "outputs); writes BENCH_rollout.json")
     ap.add_argument("--json", default="BENCH_rollout.json",
-                    help="JSON artifact path")
+                    help="JSON artifact path (a copy always lands in the "
+                         "repo root as BENCH_rollout.json)")
     args = ap.parse_args()
     rows = list(run(smoke=args.smoke))
     print("name,us_per_call,derived")
@@ -188,11 +188,12 @@ def main() -> None:
                 and "ge_30pct=True" in derived
                 and "outputs_match=True" in derived):
             ok = True
-    pathlib.Path(args.json).write_text(json.dumps({
+    from benchmarks.common import write_bench_json
+    write_bench_json({
         "benchmark": "rollout", "smoke": args.smoke,
         "unix_time": time.time(),
         "rows": [{"name": nm, "value": us, "derived": derived}
-                 for nm, us, derived in rows]}, indent=1))
+                 for nm, us, derived in rows]}, args.json, "rollout")
     if args.smoke and not ok:
         raise SystemExit("rollout smoke gate FAILED (prefill-token "
                          "reduction < 30% or outputs diverged)")

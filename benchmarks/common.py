@@ -33,7 +33,8 @@ def bench_cfg(num_layers: int = 2, d_model: int = 64, experts: int = 8):
 def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
                 pages_ep=512, page=16, maxp=64, prefill_chunk=64, seed=0,
                 time_scale=1.0, chunk_layers=0, decode_steps=1,
-                attn_backend=None, prefix_cache=True, clock=None):
+                attn_backend=None, prefix_cache=True, clock=None,
+                mixed_batch=True, token_budget=0, dispatch_dt=0.0):
     from repro.core.policy import PolicyConfig
     from repro.serving.engine import EngineConfig, MoebiusEngine
     from repro.serving.kvcache import CacheConfig
@@ -44,7 +45,25 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
         start_layout=start, ladder=ladder, prefill_chunk=prefill_chunk,
         temperature=0.0, policy=pol, seed=seed, time_scale=time_scale,
         chunk_layers=chunk_layers, decode_steps=decode_steps,
-        attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock))
+        attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock,
+        mixed_batch=mixed_batch, token_budget=token_budget,
+        dispatch_dt=dispatch_dt))
+
+
+def write_bench_json(payload: dict, path: str | None, name: str) -> None:
+    """Write a bench's JSON payload to `path` (the artifact location, when
+    given) AND to the repo root as BENCH_<name>.json — the committed copy
+    is the perf trajectory that accumulates across PRs."""
+    import json
+    import os
+    blob = json.dumps(payload, indent=1, default=str)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    targets = [os.path.join(root, f"BENCH_{name}.json")]
+    if path:
+        targets.append(path)
+    for p in targets:
+        with open(p, "w") as f:
+            f.write(blob)
 
 
 def fmt_row(name: str, us: float, derived: str = "") -> str:

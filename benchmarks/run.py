@@ -1,10 +1,10 @@
 """Benchmark driver: one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV; ``--json-dir DIR`` additionally
-writes one machine-readable ``BENCH_<name>.json`` per benchmark (the CI
-artifact that records the perf trajectory across PRs). The dynamic
-benchmarks need multiple host devices: we force 8 (not 512 — that count is
-dry-run-only) before jax initializes.
+Prints ``name,us_per_call,derived`` CSV; every benchmark's machine-readable
+``BENCH_<name>.json`` is written to the repo root (the committed perf
+trajectory across PRs), and ``--json-dir DIR`` mirrors it into an artifact
+dir. The dynamic benchmarks need multiple host devices: we force 8 (not
+512 — that count is dry-run-only) before jax initializes.
 """
 import pathlib
 import sys
@@ -13,7 +13,6 @@ from _bootstrap import ensure_env_and_path
 ensure_env_and_path()
 
 import argparse
-import json
 import time
 import traceback
 
@@ -25,7 +24,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller workloads (CI mode)")
     ap.add_argument("--json-dir", default=None,
-                    help="write BENCH_<name>.json per benchmark to this dir")
+                    help="mirror each BENCH_<name>.json into this dir "
+                         "(the repo-root copy is always written)")
     args = ap.parse_args()
 
     from benchmarks import (bench_bursty, bench_crossover,
@@ -51,15 +51,16 @@ def main() -> None:
             rows = list(benches[name]())
             for nm, us, derived in rows:
                 print(f"{nm},{us:.2f},{derived}", flush=True)
-            if args.json_dir:
-                out = pathlib.Path(args.json_dir) / f"BENCH_{name}.json"
-                out.write_text(json.dumps({
-                    "benchmark": name,
-                    "fast": args.fast,
-                    "unix_time": time.time(),
-                    "rows": [{"name": nm, "value": us, "derived": derived}
-                             for nm, us, derived in rows],
-                }, indent=1))
+            from benchmarks.common import write_bench_json
+            mirror = (str(pathlib.Path(args.json_dir) / f"BENCH_{name}.json")
+                      if args.json_dir else None)
+            write_bench_json({
+                "benchmark": name,
+                "fast": args.fast,
+                "unix_time": time.time(),
+                "rows": [{"name": nm, "value": us, "derived": derived}
+                         for nm, us, derived in rows],
+            }, mirror, name)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)

@@ -65,6 +65,19 @@ def main():
                     help="fuse N decode steps under one dispatch (device-"
                          "resident decode state; N=1 is the classic "
                          "per-token host loop)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prefill chunk width in tokens (rounded up to a "
+                         "multiple of every resident layout's "
+                         "prefill_quantum)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-iteration mixed-batch token budget (decode "
+                         "tokens first, prefill chunks into the remainder); "
+                         "0 = auto: the quantum-rounded prefill chunk, so "
+                         "full-mesh layouts keep their 1/G-per-rank split")
+    ap.add_argument("--two-phase", action="store_true",
+                    help="legacy separate prefill/decode dispatches per "
+                         "iteration instead of one mixed-batch step "
+                         "(byte-identical outputs; two dispatches/iter)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse (refcounted "
                          "pages + CoW; on by default)")
@@ -97,7 +110,10 @@ def main():
                         ecfg=EngineConfig(start_layout=start,
                                           layouts=layouts,
                                           ladder=(g, 4 * g, 16 * g),
-                                          prefill_chunk=64, policy=pol,
+                                          prefill_chunk=args.prefill_chunk,
+                                          token_budget=args.token_budget,
+                                          mixed_batch=not args.two_phase,
+                                          policy=pol,
                                           decode_steps=args.decode_steps,
                                           prefix_cache=not args.no_prefix_cache,
                                           seed=args.seed))

@@ -11,9 +11,13 @@ The engine is decomposed into three layers (DESIGN.md §7):
     arrival-driven event loop with per-request TTFT/TPOT.
 
 `MoebiusEngine` wires the first two and keeps the classic synchronous
-`step()`/`run()` API: admission -> policy -> (switch?) -> prefill ->
-decode, once per iteration (the JAX-native single-controller control
-plane, DESIGN.md §2). The switch is executed between decode steps without
+`step()`/`run()` API: admission -> policy -> (switch?) -> ONE
+token-budgeted mixed dispatch per iteration (decode rows first, prefill
+chunks into the remaining budget; DESIGN.md §10). Setting
+`EngineConfig.mixed_batch = False` restores the legacy two-phase
+prefill-then-decode iteration — same plans, same step functions, so the
+outputs are byte-identical either way. The switch is executed between
+(now mixed) steps without
 draining: request metadata is rewritten on host, expert weights are
 resharded and the paged KV migrated by the jitted movers, and the target
 layout's pre-warmed step functions are *selected*, not rebuilt. The
@@ -43,6 +47,19 @@ class EngineConfig:
     layouts: tuple = (TP, EP)
     ladder: tuple = (4, 8, 16, 32)
     prefill_chunk: int = 32
+    # ONE dispatch per iteration mixing decode rows with prefill chunks
+    # under `token_budget` (DESIGN.md §10). False = the legacy two-phase
+    # prefill-then-decode iteration (same step fns; byte-identical outputs)
+    mixed_batch: bool = True
+    # per-iteration mixed-batch token budget; 0 = auto: the executor's
+    # prefill chunk, which is already rounded up to a multiple of every
+    # resident layout's prefill_quantum, so full-mesh layouts keep their
+    # 1/G-per-rank prefill split
+    token_budget: int = 0
+    # virtual-clock seconds charged per device step-fn dispatch (0 = off).
+    # Only meaningful with an injected clock: benches use it to model the
+    # per-dispatch overhead that mixed batching halves during a storm
+    dispatch_dt: float = 0.0
     temperature: float = 0.0
     time_scale: float = 1.0            # virtual seconds per wall second
     direct_reshard: bool = True        # paper's fused path when pure-EP
@@ -120,6 +137,7 @@ class MoebiusEngine:
         self._t0 = time.monotonic()
         self._clock = self.ecfg.clock
         self._clock_skip = 0.0
+        self._charged_disp = 0         # dispatches already billed dispatch_dt
 
         # --- the three layers ---
         self.ex = Executor(cfg, mesh, cc, self.ecfg, self.layouts, start,
@@ -227,6 +245,12 @@ class MoebiusEngine:
     def prefill_chunk(self) -> int:
         return self.ex.prefill_chunk
 
+    @property
+    def token_budget(self) -> int:
+        """Per-iteration mixed-batch token budget (0 in the config = auto:
+        the executor's quantum-rounded prefill chunk)."""
+        return self.ecfg.token_budget or self.ex.prefill_chunk
+
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
@@ -272,11 +296,49 @@ class MoebiusEngine:
     def _decode_step(self) -> None:
         """Dispatch one decode iteration on whichever control plane the
         engine is configured for (also the overlap step during a chunked
-        switch)."""
+        switch, which stays decode-only in BOTH engine modes: prefill does
+        not advance while a switch session is staging)."""
         if self.ecfg.decode_steps > 1:
             self.ex.decode_fused(self.sched, self._step_i)
         else:
             self._decode_once()
+
+    def _mixed_step(self) -> None:
+        """ONE token-budgeted dispatch per iteration (DESIGN.md §10): all
+        eligible decode tokens first, prefill chunks packed into the
+        remaining budget, through a single step function."""
+        if self.ecfg.decode_steps > 1:
+            if not self.sched.prefilling:
+                # pure decode: the fused N-step pipeline serves it (copies
+                # from admission land inside decode_fused's drain)
+                self.ex.decode_fused(self.sched, self._step_i)
+                return
+            # a prefill chunk joins: drain the one-deep pipeline to a step
+            # boundary and run single-token mixed dispatches until the
+            # storm passes (runners re-join the fused loop afterwards)
+            self.ex.suspend_fused(self.sched)
+        plan = self.sched.plan_mixed(self._step_i, budget=self.token_budget,
+                                     chunk=self.ex.prefill_chunk)
+        # CoW copies from BOTH prefill admission and the plan's page growth
+        # must land before the dispatch that could write their source pages
+        self.ex.run_copies(self.sched.drain_copies())
+        if plan.rows:
+            nxt = self.ex.run_mixed(plan, self._step_i)
+            self.sched.commit_mixed(plan, nxt, self.now())
+
+    def _charge_dispatches(self) -> None:
+        """Virtual-clock cost model: bill `dispatch_dt` seconds per device
+        step-fn dispatch issued this iteration. A storm iteration costs two
+        dispatches under two-phase (prefill + decode) but one under mixed
+        batching — the bursty bench's TPOT gate measures exactly this."""
+        dt = self.ecfg.dispatch_dt
+        if dt <= 0 or self._clock is None:
+            return
+        adv = getattr(self._clock, "advance", None)
+        delta = self.metrics.dispatches - self._charged_disp
+        self._charged_disp = self.metrics.dispatches
+        if adv is not None and delta > 0:
+            adv(delta * dt)
 
     # ------------------------------------------------------------------
     # switch
@@ -354,8 +416,12 @@ class MoebiusEngine:
         if dec.switch:
             self.execute_switch(dec.target)
         self.sched.start_prefills()          # admit waiting -> prefill
-        self._run_prefill()
-        self._decode_step()
+        if self.ecfg.mixed_batch:
+            self._mixed_step()
+        else:
+            self._run_prefill()
+            self._decode_step()
+        self._charge_dispatches()
         self.metrics.pages_resident(sum(a.total_held()
                                         for a in self.sched.alloc))
         self.metrics.sample_mode(self.now(), self.active,

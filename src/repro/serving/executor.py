@@ -4,10 +4,15 @@ The Executor owns the device-resident state the Scheduler must never see:
 layout packs + the single-copy expert store, the unified KV buffer, the
 step-function caches (`ResidentRuntime`), `DeviceDecodeState` + the fused
 one-deep dispatch pipeline, the CoW page copier, and the `SwitchExecutor`.
-It consumes the Scheduler's plans/decisions (prefill rows, decode plans,
-`CopyPages`) and reports completions back through the scheduler callbacks
-(`finish_prefill` / `commit_decode` are driven by the engine facade;
-fused-pipeline retirements go through the `on_finish` hook).
+It consumes the Scheduler's plans/decisions (`MixedPlan`s, `CopyPages`)
+and reports completions back through the scheduler callbacks
+(`commit_mixed` / `finish_prefill` / `commit_decode` are driven by the
+engine facade; fused-pipeline retirements go through the `on_finish`
+hook). `run_mixed` is THE dispatch path: one step-fn cache keyed by
+(layout, rung, chunk width) serves mixed, pure-decode, and pure-prefill
+plans alike — the legacy two-phase entry points (`run_prefill` /
+`run_decode`) are thin wrappers that build single-kind plans, so both
+engine modes share one set of compiled executables.
 
 Memory discipline mirrors the paper: the control plane (attention/embed/norm
 packs, compiled steps) is resident for EVERY registered layout (the
@@ -29,8 +34,9 @@ from repro.serving.device_state import DeviceDecodeState
 from repro.serving.kvcache import COPY_W, CacheConfig, make_copy_pages
 from repro.serving.metrics import ServeMetrics
 from repro.serving.request import Request
+from repro.serving.scheduler import MixedPlan, MixedRow
 from repro.serving.steps import (build_decode_loop, build_decode_pack,
-                                 build_serve_step)
+                                 build_mixed_step)
 
 
 class Executor:
@@ -93,6 +99,9 @@ class Executor:
         # one-deep dispatch pipeline (outputs consumed one iteration late)
         self._dstate: DeviceDecodeState | None = None
         self._pending: tuple | None = None
+        # host staging buffers, reused across steps (keyed by (B, Sq) and
+        # zeroed in place instead of reallocated every dispatch)
+        self._stage_bufs: dict = {}
         self.switcher = SwitchExecutor(
             cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
             direct_reshard=ecfg.direct_reshard)
@@ -107,13 +116,21 @@ class Executor:
     def ladder_for(self, layout: LayoutSpec):
         return get_layout(layout).decode_ladder(self.rt.ladder, self.G)
 
-    def _decode_fn(self, layout: LayoutSpec, B: int):
+    def _mixed_fn(self, layout: LayoutSpec, B: int, Sq: int):
+        """THE serve step (steps.build_mixed_step), cached by
+        (layout, rung, chunk width). Sq == 1 is the classic decode shape;
+        Sq == prefill_chunk serves mixed and pure-prefill plans. Legacy
+        two-phase dispatches route through the same keys, so both engine
+        modes select from one set of compiled executables."""
         return self.rt.get_or_build(
-            (layout, "decode", B),
-            lambda: build_serve_step(
-                self.cfg, self.mesh, layout, self.cc, B, Sq=1,
+            (layout, "mixed", B, Sq),
+            lambda: build_mixed_step(
+                self.cfg, self.mesh, layout, self.cc, B, Sq=Sq,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
                 model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+
+    def _decode_fn(self, layout: LayoutSpec, B: int):
+        return self._mixed_fn(layout, B, 1)
 
     def _decode_loop_fn(self, layout: LayoutSpec, B: int, N: int):
         return self.rt.get_or_build(
@@ -125,13 +142,7 @@ class Executor:
 
     def _prefill_fn(self, layout: LayoutSpec):
         Bp = get_layout(layout).prefill_width(self.G)
-        return self.rt.get_or_build(
-            (layout, "prefill", Bp),
-            lambda: build_serve_step(
-                self.cfg, self.mesh, layout, self.cc, Bp,
-                Sq=self.prefill_chunk,
-                temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+        return self._mixed_fn(layout, Bp, self.prefill_chunk)
 
     def warmup(self, layouts=None):
         """Compile every resident layout's runtime at startup (paper §4.4).
@@ -143,10 +154,14 @@ class Executor:
         compiles nothing). Inactive layouts are built only; their first
         execution happens behind a switch, whose benches warm explicitly.
         """
+        mixed = getattr(self.ecfg, "mixed_batch", True)
         for lo in (self.layouts if layouts is None else layouts):
             self._prefill_fn(lo)
             for b in self.ladder_for(lo):
                 self._decode_fn(lo, b)
+                if mixed:
+                    # mixed plans pair any ladder rung with the chunk width
+                    self._mixed_fn(lo, b, self.prefill_chunk)
                 if self.ecfg.decode_steps > 1:
                     self._decode_loop_fn(lo, b, self.ecfg.decode_steps)
             if self.ecfg.prefix_cache:
@@ -172,6 +187,11 @@ class Executor:
                 self._decode_fn(lo, b)(
                     pk, jnp.zeros_like(self.kv_flat),
                     jnp.zeros((self.Dd, b, 1), jnp.int32), z2, z2, bt, key)
+                if mixed:
+                    self._mixed_fn(lo, b, self.prefill_chunk)(
+                        pk, jnp.zeros_like(self.kv_flat),
+                        jnp.zeros((self.Dd, b, self.prefill_chunk),
+                                  jnp.int32), z2, z2, bt, key)
                 if self.ecfg.decode_steps > 1:
                     # match the live call's committed shardings exactly
                     st = DeviceDecodeState(self.mesh, lo, self.Dd, b, maxp,
@@ -233,55 +253,75 @@ class Executor:
             self.copy_pages(c.d, c.pool, list(c.pairs))
 
     # ------------------------------------------------------------------
-    # prefill / single-step decode dispatch
+    # mixed-batch dispatch (THE serve path; two-phase wrappers below)
     # ------------------------------------------------------------------
-    def run_prefill(self, picked: list, step_i: int) -> np.ndarray:
-        """One chunked prefill step (batched across data groups / ranks).
-        `picked` rows come from Scheduler.select_prefill_rows; returns the
-        (Dd, Bp) next-token array."""
-        chunk = self.prefill_chunk
-        Bp = self.active.prefill_width(self.G)
-        maxp = self.cc.max_pages_per_req
-        toks = np.zeros((self.Dd, Bp, chunk), np.int32)
-        pos = np.zeros((self.Dd, Bp), np.int32)
-        vl = np.zeros((self.Dd, Bp), np.int32)
-        bt = np.zeros((self.Dd, Bp, maxp), np.int32)
-        for r, d, row, n in picked:
-            toks[d, row, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
-            pos[d, row] = r.prefill_pos
-            vl[d, row] = n
-            bt[d, row, :len(r.pages)] = r.pages
-        fn = self._prefill_fn(self.active)
+    def _staging(self, B: int, Sq: int) -> tuple:
+        """(tokens, positions, valid_len, block_table) host buffers for one
+        (rung, chunk) shape — zeroed in place and reused across steps."""
+        bufs = self._stage_bufs.get((B, Sq))
+        if bufs is None:
+            maxp = self.cc.max_pages_per_req
+            bufs = (np.zeros((self.Dd, B, Sq), np.int32),
+                    np.zeros((self.Dd, B), np.int32),
+                    np.zeros((self.Dd, B), np.int32),
+                    np.zeros((self.Dd, B, maxp), np.int32))
+            self._stage_bufs[(B, Sq)] = bufs
+        else:
+            for a in bufs:
+                a.fill(0)
+        return bufs
+
+    def run_mixed(self, plan: MixedPlan, step_i: int) -> np.ndarray:
+        """Dispatch ONE mixed-batch step: decode rows (n_tokens == 1) and
+        prefill-chunk rows under a single executable. Returns the (Dd, B)
+        next-token array the engine hands to Scheduler.commit_mixed."""
+        B, Sq = plan.B, plan.Sq
+        toks, pos, vl, bt = self._staging(B, Sq)
+        n_dec = n_pref = 0
+        for row in plan.rows:
+            r, d, s, n = row.req, row.d, row.row, row.n_tokens
+            if row.kind == "decode":
+                toks[d, s, 0] = r.output[-1]
+                n_dec += 1
+            else:
+                toks[d, s, :n] = r.prompt_array()[row.start_pos:
+                                                  row.start_pos + n]
+                n_pref += n
+            pos[d, s] = row.start_pos
+            vl[d, s] = n
+            bt[d, s, :len(r.pages)] = r.pages
+        fn = self._mixed_fn(self.active, B, Sq)
         nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
                                jnp.asarray(toks), jnp.asarray(pos),
                                jnp.asarray(vl), jnp.asarray(bt),
                                self._step_key(step_i))
-        self.metrics.prefill(int(vl.sum()))
+        if n_pref:
+            self.metrics.prefill(n_pref)
+        if n_dec:
+            self.metrics.decode(n_dec, 1)
+        self.metrics.dispatch(mixed=bool(n_dec and n_pref))
         return np.asarray(nxt)
+
+    def run_prefill(self, picked: list, step_i: int) -> np.ndarray:
+        """Two-phase wrapper: one chunked prefill step (rows from
+        Scheduler.select_prefill_rows) as a prefill-only MixedPlan."""
+        rows = tuple(MixedRow(r, d, row, r.prefill_pos, n, "prefill")
+                     for r, d, row, n in picked)
+        plan = MixedPlan(B=self.active.prefill_width(self.G),
+                         Sq=self.prefill_chunk, rows=rows,
+                         prefill_tokens=sum(n for *_, n in picked))
+        return self.run_mixed(plan, step_i)
 
     def run_decode(self, B: int, stepped: list[Request],
                    step_i: int) -> dict[int, int]:
-        """Dispatch one single-token decode step over `stepped` (slots
-        already assigned by Scheduler.plan_decode); returns rid -> token."""
-        maxp = self.cc.max_pages_per_req
-        toks = np.zeros((self.Dd, B, 1), np.int32)
-        pos = np.zeros((self.Dd, B), np.int32)
-        vl = np.zeros((self.Dd, B), np.int32)
-        bt = np.zeros((self.Dd, B, maxp), np.int32)
-        for r in stepped:
-            d = r.data_group
-            toks[d, r.slot, 0] = r.output[-1]
-            # the fed token is output[-1]: its KV position is kv_len - 1
-            pos[d, r.slot] = r.kv_len - 1
-            vl[d, r.slot] = 1
-            bt[d, r.slot, :len(r.pages)] = r.pages
-        fn = self._decode_fn(self.active, B)
-        nxt, self.kv_flat = fn(self._assemble_pack(self.active), self.kv_flat,
-                               jnp.asarray(toks), jnp.asarray(pos),
-                               jnp.asarray(vl), jnp.asarray(bt),
-                               self._step_key(step_i))
-        nxt = np.asarray(nxt)
-        self.metrics.decode(len(stepped), 1)
+        """Two-phase wrapper: one single-token decode step over `stepped`
+        (slots assigned by Scheduler.plan_decode) as a decode-only
+        MixedPlan; returns rid -> token."""
+        # the fed token is output[-1]: its KV position is kv_len - 1
+        rows = tuple(MixedRow(r, r.data_group, r.slot, r.kv_len - 1, 1,
+                              "decode") for r in stepped)
+        plan = MixedPlan(B=B, Sq=1, rows=rows, decode_tokens=len(stepped))
+        nxt = self.run_mixed(plan, step_i)
         return {r.rid: int(nxt[r.data_group, r.slot]) for r in stepped}
 
     # ------------------------------------------------------------------
@@ -349,6 +389,7 @@ class Executor:
             r.budget_dev -= steps
             total += steps
         self.metrics.decode(total, N)
+        self.metrics.dispatch()
         prev, self._pending = self._pending, (out, plan, st)
         if prev is not None:
             self._consume(prev)
@@ -377,6 +418,20 @@ class Executor:
         if self._pending is not None:
             prev, self._pending = self._pending, None
             self._consume(prev)
+
+    def suspend_fused(self, sched) -> None:
+        """Drain the one-deep fused pipeline and park the device decode
+        state. While a prefill chunk rides the mixed step (decode_steps > 1
+        engines fall back to single-token mixed dispatches for the storm's
+        duration), the fused slot mirror would go stale — positions advance
+        host-side only. Every runner re-joins through `_rebuild_dstate` +
+        `plan_fused` once the engine returns to pure-decode iterations."""
+        self.drain_decode()
+        if self._dstate is not None:
+            for r in sched.running.values():
+                r.slot = None
+                r.budget_dev = 0
+            self._dstate = None
 
     # ------------------------------------------------------------------
     # switch execution (device side; the engine facade orchestrates)

@@ -16,6 +16,12 @@ class ServeMetrics:
     decode_dispatches: int = 0
     decode_substeps: int = 0
     decode_tokens: int = 0
+    # device step-fn dispatches of ANY kind (prefill / decode / fused /
+    # mixed); mixed_dispatches counts the ones that carried BOTH decode and
+    # prefill rows — the engine charges `dispatch_dt` virtual seconds per
+    # dispatch, which is exactly where mixed batching beats two-phase
+    dispatches: int = 0
+    mixed_dispatches: int = 0
     # prefill compute actually dispatched (tokens through the prefill step)
     prefill_tokens: int = 0
     # prefix cache: per-request lookup outcomes + page-level sharing
@@ -60,6 +66,11 @@ class ServeMetrics:
         self.decode_dispatches += 1
         self.decode_substeps += substeps
         self.decode_tokens += tokens
+
+    def dispatch(self, mixed: bool = False) -> None:
+        self.dispatches += 1
+        if mixed:
+            self.mixed_dispatches += 1
 
     def ttft(self) -> np.ndarray:
         return np.array([f - a for _, a, f, _, _ in self.records
@@ -106,6 +117,8 @@ class ServeMetrics:
                                    else float("nan")),
             "switch_total_mean_s": (float(totals.mean()) if len(totals)
                                     else float("nan")),
+            "dispatches": self.dispatches,
+            "mixed_dispatches": self.mixed_dispatches,
             "decode_dispatches": self.decode_dispatches,
             "decode_substeps": self.decode_substeps,
             "decode_tokens": self.decode_tokens,

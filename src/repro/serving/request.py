@@ -4,6 +4,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from enum import Enum
 
+import numpy as np
+
 
 class State(str, Enum):
     WAITING = "waiting"
@@ -47,6 +49,20 @@ class Request:
     # metrics
     first_token_s: float | None = None
     finish_s: float | None = None
+    # staging fast-path: the prompt as one int32 ndarray, so prefill rows
+    # are filled with a single vectorized slice assignment instead of a
+    # Python-list copy per chunk. Invalidation follows the same rule as
+    # `page_hashes`: reset whenever the prompt is rewritten (the length
+    # check below catches the only rewrite — teacher-forced folding, which
+    # strictly appends — and requeue clears it explicitly anyway).
+    _prompt_arr: object = field(default=None, repr=False, compare=False)
+
+    def prompt_array(self) -> "np.ndarray":
+        a = self._prompt_arr
+        if a is None or len(a) != len(self.prompt):
+            a = np.asarray(self.prompt, np.int32)
+            self._prompt_arr = a
+        return a
 
     @property
     def prompt_len(self) -> int:

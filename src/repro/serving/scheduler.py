@@ -24,11 +24,14 @@ everything device-visible it wants done is expressed as a typed decision —
                       `handle_starvation`);
   * `CopyPages`     — a device page copy the Executor must issue BEFORE
                       the next dispatch that could write the source page
-                      (copy-on-write forks; drained via `drain_copies`).
+                      (copy-on-write forks; drained via `drain_copies`);
+  * `MixedPlan`     — ONE token-budgeted batch for the next dispatch:
+                      every eligible decode token first, prefill chunks
+                      packed into the remaining budget (`plan_mixed`).
 
 The Executor (`serving/executor.py`) consumes the plans + copies and
 reports completions back through `finish_prefill` / `commit_decode` /
-`finish_request`. Layout geometry is duck-typed: the active `LayoutSpec`
+`commit_mixed` / `finish_request`. Layout geometry is duck-typed: the active `LayoutSpec`
 is handed over as an opaque object (`set_layout`) and only its pure
 attributes (`kv_per_rank`, `slots_sharded`, `prefill_width`,
 `decode_ladder`) are read — no layout import, no jax.
@@ -86,6 +89,33 @@ class Preempt:
 @dataclass(frozen=True)
 class Truncate:
     req: Request
+
+
+@dataclass(frozen=True)
+class MixedRow:
+    """One batch row of a mixed dispatch. A decode row feeds the last
+    sampled token (`n_tokens == 1`, `start_pos == kv_len - 1`); a prefill
+    row feeds the next `n_tokens` prompt tokens from `start_pos`. Both run
+    through the same step function — the row shape IS the phase."""
+    req: Request
+    d: int                        # data group
+    row: int                      # batch slot within the rung
+    start_pos: int                # KV position of the row's first token
+    n_tokens: int                 # valid tokens this dispatch
+    kind: str                     # "decode" | "prefill"
+
+
+@dataclass(frozen=True)
+class MixedPlan:
+    """One token-budgeted mixed-batch step (`plan_mixed`): decode and
+    prefill rows under a single dispatch. `Sq` is the compiled chunk
+    width — 1 when the plan carries no prefill rows, so pure-decode
+    iterations keep the exact decode-step executable."""
+    B: int                        # batch-slot rung
+    Sq: int                       # compiled chunk width
+    rows: tuple                   # MixedRow, ...
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
 
 
 @dataclass(frozen=True)
@@ -302,6 +332,7 @@ class Scheduler:
         r.output = []
         r.prefill_pos = 0
         r.page_hashes = r.full_hash = None      # prompt changed
+        r._prompt_arr = None
         r.state = State.WAITING
         r.owner_rank = 0
         r.pool_rank = 0
@@ -692,6 +723,160 @@ class Scheduler:
             r.output.append(int(tokens[r.rid]))
             if r.done():
                 self.finish_request(r)
+
+    # ------------------------------------------------------------------
+    # mixed-batch planning (token-budgeted decode + prefill, one dispatch)
+    # ------------------------------------------------------------------
+    def plan_mixed(self, step_i: int, *, budget: int,
+                   chunk: int) -> MixedPlan:
+        """One token-budgeted mixed-batch plan (DESIGN.md §10): fill the
+        per-iteration `budget` with every eligible decode token FIRST
+        (decode rows are never displaced — TPOT is the latency a storm
+        must not touch), then pack prefill chunks into the remainder,
+        FIFO over `prefilling`, each clamped to `chunk` and to what the
+        budget still holds. When decode alone fills the budget, the
+        head-of-line prefill still gets a 1-token grant so a sustained
+        storm can never starve prefill outright.
+
+        Slot assignment matches `plan_decode` (rotation under
+        oversubscription, owner-rank ranges under sharded slots); prefill
+        rows take the slots after each group's/rank's decode rows, so the
+        rung is sized for both. Page growth, CoW, starvation recovery run
+        exactly as in the two-phase planner — prefill rows already own
+        their pages (acquired at `start_prefill` under the watermark) and
+        are excluded from preemption while scheduled."""
+        self.last_decisions = []
+        per_group: dict[int, list[Request]] = {d: [] for d in range(self.Dd)}
+        for r in self.running.values():
+            per_group[r.data_group].append(r)
+
+        def rotated(reqs):
+            lst = sorted(reqs, key=lambda q: q.rid)
+            if not lst:
+                return lst
+            off = step_i % len(lst)    # fairness under oversubscription
+            return lst[off:] + lst[:off]
+
+        # --- decode first: planned decode tokens (slot-capped count) ---
+        cap_rows = self._ladder()[-1]
+        if not self.spec.slots_sharded:
+            n_dec = sum(min(len(v), cap_rows) for v in per_group.values())
+        else:
+            cap_loc = max(1, cap_rows // self.G)
+            cnt: dict = {}
+            for r in self.running.values():
+                k = (r.data_group, r.owner_rank)
+                cnt[k] = cnt.get(k, 0) + 1
+            n_dec = sum(min(c, cap_loc) for c in cnt.values())
+
+        # --- prefill chunks into the remainder (FIFO + min-grant) ---
+        rem = budget - n_dec
+        if rem <= 0 and self.prefilling:
+            rem = 1
+        picks: list[tuple] = []        # (req, n_tokens)
+        for r in self.prefilling:
+            if rem <= 0:
+                break
+            n = min(chunk, r.prompt_len - r.prefill_pos, rem)
+            if n <= 0:
+                continue
+            picks.append((r, n))
+            rem -= n
+
+        # --- size the rung for decode + prefill rows, assign slots ---
+        kept: list[tuple] = []         # (req, d, row, n_tokens)
+        if not self.spec.slots_sharded:
+            pref_d = [0] * self.Dd
+            for r, _ in picks:
+                pref_d[r.data_group] += 1
+            need = max(len(per_group[d]) + pref_d[d]
+                       for d in range(self.Dd))
+            B = self.pick_B(max(1, need))
+            used = [0] * self.Dd
+            for d, reqs in per_group.items():
+                for i, r in enumerate(rotated(reqs)):
+                    r.slot = i if i < B else None
+                used[d] = min(len(reqs), B)
+            for r, n in picks:
+                d = r.data_group
+                if used[d] < B:        # rung full: waits for a freed slot
+                    kept.append((r, d, used[d], n))
+                    used[d] += 1
+        else:
+            bs_need, loads = 1, {}
+            for d, reqs in per_group.items():
+                load = [0] * self.G
+                for r in reqs:
+                    r.slot = None
+                for r in rotated(reqs):
+                    g = r.owner_rank
+                    r.slot_local = load[g]
+                    load[g] += 1
+                loads[d] = load
+                bs_need = max(bs_need, max(load) if load else 0)
+            pref_cnt: dict = {}
+            for r, _ in picks:
+                k = (r.data_group, r.owner_rank)
+                pref_cnt[k] = pref_cnt.get(k, 0) + 1
+                bs_need = max(bs_need, loads[k[0]][k[1]] + pref_cnt[k])
+            B = self.pick_B(bs_need * self.G)
+            bs_loc = B // self.G
+            for r in self.running.values():
+                r.slot = (r.owner_rank * bs_loc + r.slot_local
+                          if r.slot_local < bs_loc else None)
+            used_g = {(d, g): min(loads[d][g], bs_loc)
+                      for d in range(self.Dd) for g in range(self.G)}
+            for r, n in picks:
+                k = (r.data_group, r.owner_rank)
+                if used_g[k] < bs_loc:
+                    kept.append((r, r.data_group,
+                                 r.owner_rank * bs_loc + used_g[k], n))
+                    used_g[k] += 1
+
+        # --- page growth + starvation recovery for the decode rows ---
+        rows: list[MixedRow] = []
+        stepped: list[Request] = []
+        starved: list[Request] = []
+        for r in list(self.running.values()):
+            if r.slot is None or r.slot >= B:
+                continue
+            ok = self.ensure_pages(r)
+            if ok == "cap":
+                self.last_decisions.append(self.truncate(r))
+                continue
+            if ok == "dry":
+                starved.append(r)
+                continue
+            stepped.append(r)
+            rows.append(MixedRow(r, r.data_group, r.slot, r.kv_len - 1, 1,
+                                 "decode"))
+        for r, d, row, n in kept:
+            rows.append(MixedRow(r, d, row, r.prefill_pos, n, "prefill"))
+        if starved:
+            # scheduled prefill rows are live this dispatch — their pages
+            # must not be preempted out from under the staged batch
+            self.handle_starvation(
+                starved, exclude=stepped + [p[0] for p in kept])
+        return MixedPlan(B=B, Sq=chunk if kept else 1, rows=tuple(rows),
+                         decode_tokens=len(stepped),
+                         prefill_tokens=sum(n for *_, n in kept))
+
+    def commit_mixed(self, plan: MixedPlan, tokens, t: float) -> None:
+        """Retire one mixed dispatch. `tokens` is indexable as
+        `tokens[d][row]` — the Executor's (Dd, B) next-token array, or
+        plain nested lists in device-free tests. Decode rows append their
+        sampled token; prefill rows advance by their chunk (the sampled
+        token only counts on prompt completion, exactly as
+        `finish_prefill` has always defined)."""
+        for row in plan.rows:
+            r = row.req
+            if row.kind == "decode":
+                r.output.append(int(tokens[row.d][row.row]))
+                if r.done():
+                    self.finish_request(r)
+            else:
+                self.finish_prefill(r, row.n_tokens,
+                                    int(tokens[row.d][row.row]), t)
 
     # ------------------------------------------------------------------
     # fused decode planning (decode_steps > 1)

@@ -1,7 +1,11 @@
-"""Layout-aware serve steps (decode + chunked prefill) under shard_map.
+"""Layout-aware serve steps (mixed decode + prefill-chunk rows) under
+shard_map.
 
 These are the per-layout runtimes the paper keeps resident (§4.4): each is
-AOT-compiled against fixed avals/shardings for a ladder of batch-slot sizes.
+AOT-compiled against fixed avals/shardings for a ladder of batch-slot
+sizes. `build_mixed_step` is the ONE step function: rows carry per-row
+`(start_pos, n_tokens)`, so a batch may mix single-token decode rows with
+prefill chunks under a single dispatch (DESIGN.md §10).
 
 Transformer families (dense / moe / vlm). Batch geometry per layout:
   TP: batch slots replicated over the model axis; heads sharded (rank-major
@@ -345,19 +349,29 @@ def _pack_specs_for(cfg, layout, G, G_exp, m, ep_axes):
     return decode_pack_specs(cfg, pack_shapes, layout, m, ep_axes=ep_axes)
 
 
-def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
+def build_mixed_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
                      Bslot: int, Sq: int = 1, *, temperature: float = 0.0,
                      data_axes=("data",), model_axis: str = "model",
                      attn_backend: str | None = None,
                      return_logits: bool = False, donate: bool = True):
-    """Build a jitted serve step. Sq == 1 -> decode; Sq > 1 -> prefill chunk.
+    """Build THE jitted serve step: one dispatch whose rows each carry a
+    per-row `(start_pos, n_tokens)`, so decode rows (n_tokens == 1) and
+    prefill-chunk rows (1 <= n_tokens <= Sq) share `_chunk_core` — the
+    same attention mask, KV write path, and sampling — under a single
+    compiled executable (DESIGN.md §10). Sq == 1 specializes it to the
+    classic decode step; a pure prefill batch is just every row carrying
+    a chunk. There is no separate prefill or decode step function.
 
     Global signature:
       pack, kv_flat (Dd, G, NE), tokens (Dd, Bslot, Sq), positions (Dd, Bslot),
       valid_len (Dd, Bslot), block_table (Dd, Bslot, maxp), key
       -> (next_token (Dd, Bslot), kv_flat')
-    `positions` = global position of tokens[:, :, 0] (== kv_len so far);
-    `valid_len` = #valid tokens in the chunk (1 for decode).
+    `positions` = global KV position of tokens[:, :, 0] (a decode row's
+    kv_len - 1, a prefill row's prefill_pos);
+    `valid_len` = #valid tokens in the row (1 for decode; 0 = dead slot).
+    Invalid tail tokens of a short row write their KV to the reserved
+    null page 0 and are masked out of attention; each row samples at its
+    last valid position.
     """
     m, da = model_axis, data_axes
     g = _layout_geometry(cfg, mesh, layout, cc, Bslot, m, da)
@@ -397,6 +411,12 @@ def build_serve_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         out_specs=out_specs, check_vma=False)
     donate_args = (1,) if donate else ()
     return jax.jit(smapped, donate_argnums=donate_args)
+
+
+# The historical name: Sq == 1 built "the decode step", Sq > 1 "the prefill
+# step". They were always the same function — the mixed-batch engine just
+# makes that the contract, so the alias stays for existing call sites.
+build_serve_step = build_mixed_step
 
 
 def build_decode_loop(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,

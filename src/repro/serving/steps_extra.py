@@ -1,4 +1,4 @@
-"""Decode steps for the non-transformer families (ssm / hybrid / encdec).
+"""Serve steps for the non-transformer families (ssm / hybrid / encdec).
 
 Same layout semantics as serving/steps.py, adapted per family (DESIGN.md
 §Arch-applicability):
@@ -10,6 +10,13 @@ Same layout semantics as serving/steps.py, adapted per family (DESIGN.md
     paged KV at every attn_every-th layer.
   * encdec (Whisper): decoder self-attn uses the paged pool; cross-attention
     reads a per-slot dense cross-KV cache computed at admission.
+
+Mixed-row contract (DESIGN.md §10): rows carry `(start_pos, n_tokens)` just
+like steps.build_mixed_step. The encdec step generalizes to Sq > 1, so a
+batch may mix decode rows (n_tokens == 1) with decoder prefill chunks
+(teacher-forced transcript prefixes) in one dispatch. The recurrent-state
+families (ssm / hybrid) keep Sq == 1 — the SSD recurrence advances one
+token per dispatch, so their rows degenerate to n_tokens ∈ {0, 1}.
 """
 from __future__ import annotations
 
@@ -330,12 +337,20 @@ def hybrid_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
 # ---------------------------------------------------------------------------
 
 def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
-                            cc: CacheConfig, Bslot: int, T_enc: int, *,
+                            cc: CacheConfig, Bslot: int, T_enc: int,
+                            Sq: int = 1, *,
                             temperature: float = 0.0, data_axes=("data",),
                             model_axis: str = "model", donate: bool = True,
                             attn_backend: str | None = None):
-    """Decoder decode step. cross_kv (Dd, Bslot, L, 2, T_enc, K, dh) is the
+    """Decoder serve step. cross_kv (Dd, Bslot, L, 2, T_enc, K, dh) is the
     per-slot cross-attention cache (computed once per request at admission).
+
+    Mixed-row contract as steps.build_mixed_step: tokens (Dd, Bslot, Sq),
+    `positions` = each row's start position, `valid` = n_tokens valid this
+    dispatch (1 for decode rows, 0 = dead slot). Invalid tail tokens write
+    their self-attn KV to the null page 0; cross-attention is non-causal
+    over the full encoder cache, so chunking needs no extra mask there.
+    Sq == 1 is the classic decode step.
     """
     layout = get_layout(layout)
     m, da = model_axis, data_axes
@@ -355,21 +370,26 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
 
     def body(pack, kv_flat, cross_kv, tokens, positions, valid,
              block_table, key):
-        tokens = tokens.reshape(bs)
+        tokens = tokens.reshape(bs, Sq)
         positions = positions.reshape(bs)
+        valid = valid.reshape(bs)
         bt = block_table.reshape(bs, maxp)
         pool = kv_flat.reshape(view)
         xkv = cross_kv.reshape((bs,) + cross_kv.shape[2:])  # (bs,L,2,T,Kl,dh)
         key = jax.random.wrap_key_data(key)
-        x = _embed_lookup(cfg, pack, tokens, layout, m)
+        pos_mat = positions[:, None] + jnp.arange(Sq)[None, :]   # (bs,Sq)
+        x = _embed_lookup(cfg, pack, tokens.reshape(-1), layout, m)
+        x = x.reshape(bs, Sq, -1)
         x = x + pack["dec_pos"][
-            jnp.clip(positions, 0, cfg.max_positions - 1)].astype(x.dtype)
-        pos_mat = positions[:, None]
+            jnp.clip(pos_mat, 0, cfg.max_positions - 1)].astype(x.dtype)
+        # zero dead slots (garbage hiddens poison shared einsums: NaN*0==NaN)
+        x = x * (valid > 0).astype(x.dtype)[:, None, None]
         pidx = jnp.clip(pos_mat // page, 0, maxp - 1)
-        page_ids = jnp.where(valid.reshape(bs, 1) > 0,
+        in_chunk = jnp.arange(Sq)[None, :] < valid[:, None]
+        page_ids = jnp.where(in_chunk,
                              jnp.take_along_axis(bt, pidx, axis=1), 0)
         slots = pos_mat % page
-        kv_total = positions + 1
+        kv_total = positions + valid
         # rope tables are layer-invariant: compute once, not per layer
         cos, sin = rope_cos_sin(pos_mat, cfg.dh, cfg.rope_theta)
 
@@ -380,23 +400,25 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
                 lp["attn"] = {k: v.squeeze(0) for k, v in lp["attn"].items()}
                 lp["xattn"] = {k: v.squeeze(0)
                                for k, v in lp["xattn"].items()}
-            hn = apply_norm(cfg, h[:, None], lp["attn_norm"])
+            hn = apply_norm(cfg, h, lp["attn_norm"])
             q, kk, vv = _project_heads(cfg, lp["attn"], hn, cos, sin)
             pool_l = _write_pages(pool_l, kk, vv, page_ids, slots)
             at = paged_attention(q, pool_l[0], pool_l[1], bt, kv_total,
                                  q_offset=positions, window=0,
                                  backend=attn_backend)
-            at = at.reshape(bs, -1) @ lp["attn"]["wo"]
+            at = at.reshape(bs, Sq, -1) @ lp["attn"]["wo"]
             if tp:
                 at = lax.psum(at, m)
             h = h + at.astype(h.dtype)
-            # cross attention over the per-slot dense cache
-            hn = apply_norm(cfg, h[:, None], lp["xattn_norm"])
+            # cross attention over the per-slot dense cache (non-causal:
+            # every query row attends to the whole encoder sequence, so
+            # chunk rows need no extra masking here)
+            hn = apply_norm(cfg, h, lp["xattn_norm"])
             dh_ = cfg.dh
-            qx = (hn @ lp["xattn"]["wq"]).reshape(bs, 1, -1, dh_)
+            qx = (hn @ lp["xattn"]["wq"]).reshape(bs, Sq, -1, dh_)
             from repro.models.common import flash_attention
             xat = flash_attention(qx, xkv_l[:, 0], xkv_l[:, 1], causal=False)
-            xat = xat.reshape(bs, -1) @ lp["xattn"]["wo"]
+            xat = xat.reshape(bs, Sq, -1) @ lp["xattn"]["wo"]
             if tp:
                 xat = lax.psum(xat, m)
             h = h + xat.astype(h.dtype)
@@ -411,7 +433,10 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
                                (pack["decoder"], pool,
                                 jnp.moveaxis(xkv, 1, 0)))
         x = apply_norm(cfg, x, pack["final_norm"])
-        nxt = _sample(cfg, pack, x, layout, m, key, temperature, 0)
+        # sample at the last valid position of each row
+        last = jnp.clip(valid - 1, 0, Sq - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        nxt = _sample(cfg, pack, xl, layout, m, key, temperature, 0)
         return nxt.reshape(1, bs), new_pool.reshape(1, 1, -1)
 
     norm = lambda: jax.tree.map(lambda _: P(), {"scale": 0, "bias": 0}) \

@@ -5,6 +5,10 @@ Mirrors the paper's evaluation workloads (§6.2, §6.3) at configurable scale:
     300-700 tokens, outputs U(800, 1200)  (scaled down by `scale`).
   * rollout: one batch of N prompts; outputs heavy-tailed (lognormal capped),
     inputs short/clustered — the burst-to-long-tail decay of Fig. 1(c).
+  * prefill storm: a handful of long-lived decoders hit by a sustained
+    wave of prompt-heavy arrivals — the mixed-batch TPOT stressor
+    (DESIGN.md §10; shared by bench_bursty's storm gate and the
+    byte-identity tests).
 """
 from __future__ import annotations
 
@@ -44,6 +48,44 @@ def bursty_trace(spec: BurstySpec, seed: int = 0) -> list[Request]:
         reqs.append(Request(rid=rid, prompt=list(rng.integers(5, 1000, plen)),
                             max_new_tokens=olen, arrival_s=t))
         rid += 1
+    return reqs
+
+
+@dataclass(frozen=True)
+class StormSpec:
+    """A prefill storm over live decoders: `n_decoders` short-prompt,
+    long-output requests start first (they are mid-decode when the storm
+    lands), then `n_storm` prompt-heavy, short-output requests arrive at a
+    steady interval. The decoders' TPOT during the storm window is the
+    number the mixed batch must protect."""
+    n_decoders: int = 4
+    decoder_prompt: int = 8
+    decoder_output: int = 60
+    n_storm: int = 12
+    storm_prompt: int = 256
+    storm_output: int = 2
+    storm_start_s: float = 0.5
+    storm_interval_s: float = 0.3
+    token_range: tuple = (5, 200)
+
+
+def storm_trace(spec: StormSpec, seed: int = 0) -> list[Request]:
+    """Arrival-ordered prefill-storm trace (deterministic lengths; only
+    the token ids are drawn from `seed`, so two engines replaying the
+    same seed see byte-identical prompts)."""
+    rng = np.random.default_rng(seed)
+    lo, hi = spec.token_range
+    reqs = [Request(rid=i, prompt=list(rng.integers(lo, hi,
+                                                    spec.decoder_prompt)),
+                    max_new_tokens=spec.decoder_output,
+                    forced_len=spec.decoder_output, arrival_s=0.0)
+            for i in range(spec.n_decoders)]
+    for j in range(spec.n_storm):
+        reqs.append(Request(
+            rid=spec.n_decoders + j,
+            prompt=list(rng.integers(lo, hi, spec.storm_prompt)),
+            max_new_tokens=spec.storm_output, forced_len=spec.storm_output,
+            arrival_s=spec.storm_start_s + j * spec.storm_interval_s))
     return reqs
 
 

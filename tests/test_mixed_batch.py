@@ -1,0 +1,167 @@
+"""Token-budgeted mixed-batch dispatch (DESIGN.md §10), single device.
+
+The unified step is an execution-shape change, not a semantic one: at
+temperature 0 every request's output depends only on its own prompt and
+KV, so mixed-batch outputs must equal the legacy two-phase loop
+byte-for-byte — on a prefill storm, across a live layout switch, under
+the fused decode loop, and with shared-prefix reuse in play.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.policy import PolicyConfig
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.frontend import AsyncEngine, VirtualClock
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+from repro.serving.workloads import StormSpec, replay, storm_trace
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+SPEC = StormSpec(n_decoders=2, decoder_prompt=6, decoder_output=10,
+                 n_storm=3, storm_prompt=24, storm_output=2,
+                 storm_start_s=0.2, storm_interval_s=0.1)
+
+
+def _mk(cfg, mesh, **kw):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    return MoebiusEngine(cfg, mesh,
+                         CacheConfig(page_size=4, pages_ep=64,
+                                     max_pages_per_req=16),
+                         ecfg=EngineConfig(start_layout="tp", ladder=(4, 8),
+                                           prefill_chunk=8, temperature=0.0,
+                                           policy=pol, **kw))
+
+
+def _outputs(eng, reqs0):
+    """Full generated sequence per rid (robust to a preemption fold)."""
+    plen0 = {r.rid: r.prompt_len for r in reqs0}
+    return {r.rid: list(r.prompt[plen0[r.rid]:]) + list(r.output)
+            for r in eng.finished}
+
+
+def _run_trace(cfg, mesh, reqs0, **kw):
+    eng = _mk(cfg, mesh, clock=VirtualClock(), **kw)
+    fe = AsyncEngine(eng, step_dt=0.05)
+    streams = replay(fe, copy.deepcopy(reqs0))
+    fe.run_until_complete()
+    assert all(s.finished for s in streams.values())
+    return _outputs(eng, reqs0), eng
+
+
+def test_mixed_matches_two_phase_on_storm_trace(tiny_moe, mesh11):
+    """The flagship identity: a prefill storm over live decoders produces
+    byte-identical outputs under one mixed dispatch per iteration and
+    under the legacy prefill-then-decode pair."""
+    reqs0 = storm_trace(SPEC, seed=0)
+    out_m, eng_m = _run_trace(tiny_moe, mesh11, reqs0, mixed_batch=True)
+    out_t, eng_t = _run_trace(tiny_moe, mesh11, reqs0, mixed_batch=False)
+    assert out_m == out_t
+    # the storm really did share dispatches with live decode rows
+    assert eng_m.metrics.mixed_dispatches > 0
+    assert eng_t.metrics.mixed_dispatches == 0
+
+
+def test_mixed_matches_two_phase_across_live_switch(tiny_moe, mesh11):
+    """Same identity with a live tp->ep switch mid-run in both modes
+    (the switch drains in-flight work, then the new layout resumes the
+    same plan shapes)."""
+    rng = np.random.default_rng(1)
+    reqs0 = [Request(rid=i, prompt=list(rng.integers(5, 200, 6 + 8 * (i % 2))),
+                     max_new_tokens=6, forced_len=6, arrival_s=0.0)
+             for i in range(5)]
+
+    def run(mixed):
+        eng = _mk(tiny_moe, mesh11, mixed_batch=mixed)
+        for r in copy.deepcopy(reqs0):
+            eng.submit(r)
+        switched, i = False, 0
+        while eng.pending or eng.waiting or eng.prefilling or eng.running:
+            if not switched and eng.running:
+                eng.execute_switch("ep")
+                switched = True
+            eng.step()
+            i += 1
+            assert i < 1000
+        assert switched
+        return _outputs(eng, reqs0)
+
+    assert run(True) == run(False)
+
+
+def test_mixed_with_fused_decode_suspends_and_resumes(tiny_moe, mesh11):
+    """decode_steps > 1: a storm forces the fused pipeline to drain to a
+    step boundary (suspend), serve single-token mixed steps, then re-join
+    the fused loop — outputs still byte-identical to every other mode."""
+    rng = np.random.default_rng(2)
+    reqs0 = [Request(rid=i, prompt=list(rng.integers(5, 200, 5 + 10 * (i % 2))),
+                     max_new_tokens=9, forced_len=9, arrival_s=0.0)
+             for i in range(5)]
+
+    def run(mixed, steps):
+        eng = _mk(tiny_moe, mesh11, mixed_batch=mixed, decode_steps=steps)
+        for r in copy.deepcopy(reqs0):
+            eng.submit(r)
+        eng.run(max_steps=2000)
+        return _outputs(eng, reqs0)
+
+    ref = run(False, 1)
+    assert run(True, 1) == ref
+    assert run(True, 4) == ref
+    assert run(False, 4) == ref
+
+
+def test_mixed_budget_cap_and_min_grant_invariant(tiny_moe, mesh11):
+    """Every planned iteration respects the budget: decode + prefill
+    tokens <= budget, except the 1-token min-grant when decode alone
+    saturates it."""
+    eng = _mk(tiny_moe, mesh11, token_budget=6)
+    plans = []
+    orig = eng.sched.plan_mixed
+
+    def spy(*a, **k):
+        p = orig(*a, **k)
+        plans.append(p)
+        return p
+
+    eng.sched.plan_mixed = spy
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=list(rng.integers(5, 200, 12)),
+                           max_new_tokens=8, forced_len=8, arrival_s=0.0))
+    eng.run(max_steps=2000)
+    assert len(eng.finished) == 6
+    assert any(p.prefill_tokens for p in plans)
+    for p in plans:
+        total = p.decode_tokens + p.prefill_tokens
+        assert total <= max(6, p.decode_tokens + 1), p
+
+
+def test_mixed_matches_two_phase_with_shared_prefixes(tiny_moe, mesh11):
+    """Prefix-cache forks + CoW under the mixed planner: groups of
+    requests sharing one prompt reuse cached pages and still match the
+    two-phase outputs byte-for-byte."""
+    rng = np.random.default_rng(4)
+    base = list(rng.integers(5, 200, 10))
+    reqs0 = [Request(rid=i, prompt=list(base) + [int(i) + 7],
+                     max_new_tokens=6, forced_len=6, arrival_s=0.0)
+             for i in range(4)]
+
+    def run(mixed):
+        eng = _mk(tiny_moe, mesh11, mixed_batch=mixed)
+        for r in copy.deepcopy(reqs0):
+            eng.submit(r)
+        eng.run(max_steps=2000)
+        return _outputs(eng, reqs0), eng
+
+    out_m, eng_m = run(True)
+    out_t, _ = run(False)
+    assert out_m == out_t
+    assert eng_m.metrics.prefix_hits > 0

@@ -309,6 +309,54 @@ print("OK")
 """, timeout=1200)
 
 
+def test_mixed_batch_matches_two_phase_across_switches():
+    """Tentpole acceptance: the token-budgeted mixed dispatch must be
+    byte-identical to the legacy two-phase loop on a real SPMD mesh — on a
+    prefill-storm-shaped batch (long prompts landing while short ones
+    decode), across live tp -> ep -> tpep switches, and with the fused
+    decode loop (decode_steps=4) suspending for the storm and resuming."""
+    run_multidevice(COMMON + """
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+def make_reqs():
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(5, 200, 4)),
+            max_new_tokens=14, forced_len=14, arrival_s=0.0)
+            for i in range(3)]                       # live decoders
+    reqs += [Request(rid=3 + j, prompt=list(rng.integers(5, 200, 20)),
+             max_new_tokens=3, forced_len=3, arrival_s=0.0)
+             for j in range(3)]                      # the storm
+    return reqs
+def run(mixed, n=1, switches=()):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout="tp", layouts=("tp", "ep", "tpep"), ladder=(4, 8),
+        prefill_chunk=8, temperature=0.0, policy=pol, seed=0,
+        decode_steps=n, mixed_batch=mixed))
+    for r in make_reqs(): eng.submit(r)
+    sw = dict(switches); i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if i in sw:
+            eng.execute_switch(sw[i])
+        eng.step(); i += 1
+        assert i < 500
+    if mixed:
+        assert eng.metrics.mixed_dispatches > 0, "storm never mixed"
+    return {r.rid: r.output for r in eng.finished}
+base = run(False)                           # legacy two-phase reference
+assert run(True) == base, "mixed != two-phase (static tp)"
+sw = ((3, "ep"), (8, "tpep"))
+assert run(False, switches=sw) == base, "two-phase switched diverged"
+assert run(True, switches=sw) == base, "mixed tp->ep->tpep diverged"
+assert run(True, n=4) == base, "mixed fused suspend/resume diverged"
+assert run(True, n=4, switches=sw) == base, "mixed fused + switches diverged"
+print("OK")
+""", timeout=1200)
+
+
 def test_prefix_cache_rollout_switches_match_baseline():
     """Tentpole acceptance: a rollout group with shared prefixes
     (samples_per_prompt), prefix cache ON, live tp -> ep -> tpep switches

@@ -308,6 +308,114 @@ def test_finish_releases_to_recorded_pool():
     s.alloc[0].check()
 
 
+# ---------------------------------------------------------------------------
+# token-budgeted mixed-batch planning (plan_mixed / commit_mixed)
+# ---------------------------------------------------------------------------
+
+def _decoding(s, rid, pool=0, arrival=0.0):
+    """A runner past prefill: prompt in KV, one generated token."""
+    q = _running(s, rid, pool=pool, npages=2, arrival=arrival, out_len=1)
+    q.prefill_pos = q.prompt_len
+    q.max_new_tokens = 64
+    return q
+
+
+def test_plan_mixed_decode_first_then_prefill_remainder():
+    """Every eligible decode token ships first; the prefill chunk is
+    clamped to what the budget still holds."""
+    s = make_sched(npages=33)
+    runners = [_decoding(s, 10 + i) for i in range(3)]
+    s.submit(req(0, plen=20, out=4))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 1
+    plan = s.plan_mixed(0, budget=8, chunk=16)
+    dec = [r for r in plan.rows if r.kind == "decode"]
+    pre = [r for r in plan.rows if r.kind == "prefill"]
+    assert plan.decode_tokens == 3 and len(dec) == 3
+    assert all(r.n_tokens == 1 and r.start_pos == r.req.kv_len - 1
+               for r in dec)
+    # remainder = 8 - 3 = 5: the 20-token prompt gets a 5-token chunk
+    assert plan.prefill_tokens == 5 and len(pre) == 1
+    assert pre[0].start_pos == 0 and pre[0].n_tokens == 5
+    assert plan.Sq == 16 and plan.B == 4
+    # prefill takes the slot after the group's decode rows; no collisions
+    assert len({r.row for r in plan.rows}) == len(plan.rows)
+    # commit: decode rows append, the prefill row advances its cursor
+    s.commit_mixed(plan, [[7] * plan.B], t=0.0)
+    assert all(q.output[-1] == 7 for q in runners)
+    assert s.prefilling[0].prefill_pos == 5
+
+
+def test_plan_mixed_pure_decode_keeps_decode_step_shape():
+    """No prefill rows -> Sq == 1: pure-decode iterations reuse the exact
+    compiled decode executable, not a widened chunk."""
+    s = make_sched(npages=33)
+    _decoding(s, 1)
+    plan = s.plan_mixed(0, budget=8, chunk=16)
+    assert plan.Sq == 1 and plan.prefill_tokens == 0
+    assert [r.kind for r in plan.rows] == ["decode"]
+
+
+def test_plan_mixed_prefill_fifo_and_chunk_clamp():
+    """Remainder packs prefilling FIFO: head gets a full chunk, the next
+    gets what's left."""
+    s = make_sched(npages=65, ladder=(8, 16))
+    for i in range(2):
+        _decoding(s, 10 + i)
+    s.submit(req(0, plen=20, out=4))
+    s.submit(req(1, plen=20, out=4))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 2
+    plan = s.plan_mixed(0, budget=30, chunk=16)
+    pre = [r for r in plan.rows if r.kind == "prefill"]
+    assert [(r.req.rid, r.n_tokens) for r in pre] == [(0, 16), (1, 12)]
+    assert plan.decode_tokens + plan.prefill_tokens <= 30
+    assert len({r.row for r in plan.rows}) == len(plan.rows)
+
+
+def test_plan_mixed_min_grant_defeats_decode_saturation():
+    """A decode set that alone fills the budget must not starve prefill:
+    the head-of-line prefill gets a 1-token grant every iteration, so a
+    sustained storm still drains — and the decoders never lose a token."""
+    s = make_sched(npages=65, ladder=(4, 8))
+    runners = [_decoding(s, 10 + i) for i in range(4)]
+    s.submit(req(0, plen=20, out=4))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 1
+    storm = s.prefilling[0]
+    for i in range(20):
+        plan = s.plan_mixed(i, budget=4, chunk=16)   # budget == n_dec
+        assert plan.decode_tokens == 4               # never displaced
+        assert plan.prefill_tokens == 1              # min-grant
+        s.commit_mixed(plan, [[5] * plan.B], t=float(i))
+    # 20 one-token grants completed the 20-token prompt
+    assert storm.rid in s.running and not s.prefilling
+    assert storm.prefill_pos == 20 and storm.output == [5]
+    assert all(len(q.output) == 21 for q in runners)
+
+
+def test_plan_mixed_sharded_rows_land_in_owner_rank_range():
+    """Sharded slots: prefill rows take the slot after their owner rank's
+    decode rows (slot = owner_rank * bs_loc + local), never colliding."""
+    s = make_sched(G=2, per_rank=True, npages=17, ladder=(4, 8))
+    _decoding(s, 1, pool=0)
+    _decoding(s, 2, pool=0)
+    _decoding(s, 3, pool=1)
+    s.submit(req(0, plen=6, out=4))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 1
+    r0 = s.prefilling[0]
+    assert r0.owner_rank == 1                        # least-loaded rank
+    plan = s.plan_mixed(0, budget=10, chunk=8)
+    assert plan.B == 4 and plan.decode_tokens == 3
+    pre = [r for r in plan.rows if r.kind == "prefill"]
+    bs_loc = plan.B // 2
+    assert pre[0].row == 1 * bs_loc + 1              # after rank 1's decoder
+    assert len({r.row for r in plan.rows}) == len(plan.rows)
+    for a in s.alloc:
+        a.check()
+
+
 def test_queue_snapshot_counts_inflight_tokens():
     s = make_sched()
     q = _running(s, 1, npages=1)
