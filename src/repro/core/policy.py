@@ -43,6 +43,11 @@ class PolicyConfig:
     window: int = 8
     cooldown_s: float = 5.0
     mode: str = "interactive"     # "interactive" | "rollout"
+    # QoS gate (DESIGN.md §11): when the interactive class's recent SLO
+    # attainment drops below this floor, the hysteresis hold is broken —
+    # the scorer's best layout at the CURRENT count is proposed even
+    # inside the dead band (cooldown still applies). 0 disables the gate.
+    attainment_floor: float = 0.9
 
     @classmethod
     def interactive(cls, t_high: int) -> "PolicyConfig":
@@ -94,6 +99,11 @@ class PolicyObservation:
                                    # the window has filled
     live_tokens: int
     ep_capacity_tokens: int        # group KV capacity under the EP view
+    # QoS signals (DESIGN.md §11): the interactive class's recent SLO
+    # attainment (None = no QoS metrics wired / no finishes yet) and the
+    # per-class queue depths from the scheduler's QueueSnapshot
+    interactive_attainment: float | None = None
+    per_class: tuple = ()
 
 
 @dataclass(frozen=True)
@@ -218,6 +228,25 @@ class HysteresisPolicy:
         here = rank.get(obs.active)
         if here is None:
             return None
+        # QoS gate: an interactive-class SLO violation breaks the
+        # hysteresis hold — the scorer's best layout at the CURRENT count
+        # wins in either direction (per-class p99 attainment, not just
+        # aggregate load, decides when "better parallelism" is worth a
+        # switch). Only fires when interactive work is actually queued.
+        # (a static config — t_low < 0 — stays a hard off switch, gate
+        # included: benchmarks rely on static baselines never switching)
+        att = obs.interactive_attainment
+        if (att is not None and 0 < self.pcfg.attainment_floor
+                and self.pcfg.t_low >= 0
+                and att < self.pcfg.attainment_floor
+                and any(inf > 0 for name, inf, _ in obs.per_class
+                        if name == "interactive")):
+            best = self.scorer.best_at(max(obs.in_flight, 1), obs)
+            if best is not None and best is not obs.active \
+                    and best in rank:
+                return Proposal(best,
+                                f"interactive attainment {att:.2f} < "
+                                f"{self.pcfg.attainment_floor:.2f} -> {best}")
         if obs.in_flight > self.pcfg.t_high:
             up = self.scorer.best_at(obs.in_flight, obs)
             if up is not None and rank.get(up, -1) > here:
@@ -278,14 +307,20 @@ class SwitchCoordinator:
         """
         return TP.kv_capacity_tokens(self.cfg, self.G, ep_capacity_tokens)
 
-    def observe_queues(self, q, ep_capacity_tokens: int) -> SwitchDecision:
+    def observe_queues(self, q, ep_capacity_tokens: int,
+                       attainment: float | None = None) -> SwitchDecision:
         """Observe through the Scheduler's queue snapshot
         (`scheduler.QueueSnapshot`) — the coordinator never reaches into
-        engine internals; the queue state IS the policy input."""
-        return self.observe(q.in_flight, q.live_tokens, ep_capacity_tokens)
+        engine internals; the queue state IS the policy input.
+        `attainment` is the interactive class's recent SLO attainment
+        (ServeMetrics.recent_attainment), the QoS switch gate's signal."""
+        return self.observe(q.in_flight, q.live_tokens, ep_capacity_tokens,
+                            attainment=attainment,
+                            per_class=getattr(q, "per_class", ()))
 
     def observe(self, in_flight: int, live_tokens: int,
-                ep_capacity_tokens: int) -> SwitchDecision:
+                ep_capacity_tokens: int, attainment: float | None = None,
+                per_class: tuple = ()) -> SwitchDecision:
         """Called once per decode iteration, between steps."""
         self._history.append(in_flight)
         now = self.clock()
@@ -296,7 +331,9 @@ class SwitchCoordinator:
                 if len(self._history) >= w else None)
         obs = PolicyObservation(active=self.active, in_flight=in_flight,
                                 window_mean=mean, live_tokens=live_tokens,
-                                ep_capacity_tokens=ep_capacity_tokens)
+                                ep_capacity_tokens=ep_capacity_tokens,
+                                interactive_attainment=attainment,
+                                per_class=tuple(per_class))
         prop = self.policy_impl.propose(obs)
         if prop is None:
             return SwitchDecision(False, self.active, "hold")

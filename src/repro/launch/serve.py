@@ -23,6 +23,12 @@ Examples (CPU, 8 host devices):
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload rollout --scale 0.02 --mesh 2x4 --policy static-tpep \
       --layouts tp,ep,tpep
+  # multi-tenant QoS trace (DESIGN.md §11), 30% tagged interactive
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload bursty --scale 0.05 --mesh 1x4 --slo-class-mix 0.3
+  # HTTP/SSE frontend (POST /v1/generate, GET /v1/metrics)
+  REPRO_HOST_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --mesh 1x4 --http-port 8000
 """
 import os
 if "REPRO_HOST_DEVICES" in os.environ:
@@ -43,16 +49,16 @@ def main():
     from repro.serving.engine import EngineConfig, MoebiusEngine
     from repro.serving.frontend import AsyncEngine
     from repro.serving.kvcache import CacheConfig
-    from repro.serving.workloads import (BurstySpec, RolloutSpec,
-                                         bursty_trace, replay,
-                                         rollout_batch)
+    from repro.serving.workloads import (BurstySpec, QosMixSpec, RolloutSpec,
+                                         bursty_trace, qos_mixed_trace,
+                                         replay, rollout_batch)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--mesh", default="1x4")
     ap.add_argument("--workload", default="rollout",
-                    choices=["rollout", "bursty"])
+                    choices=["rollout", "bursty", "qosmix"])
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--layouts", default="tp,ep",
                     help="comma-separated registered layouts the engine "
@@ -84,6 +90,19 @@ def main():
     ap.add_argument("--samples-per-prompt", type=int, default=1,
                     help="rollout workload: completions sampled per "
                          "distinct prompt (shared-prefix groups)")
+    ap.add_argument("--qos", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="class-aware QoS scheduling + interactive-"
+                         "attainment switch gating (DESIGN.md §11); "
+                         "--no-qos serves class-blind")
+    ap.add_argument("--slo-class-mix", type=float, default=0.0,
+                    help="fraction of trace requests tagged 'interactive' "
+                         "(rest 'batch'; deterministic in --seed). 0 "
+                         "keeps the workload's own tags")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve the HTTP/SSE frontend on this port "
+                         "instead of replaying a trace (POST /v1/generate"
+                         ", GET /v1/metrics; 0 = pick a free port)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=5000)
     args = ap.parse_args()
@@ -116,14 +135,32 @@ def main():
                                           policy=pol,
                                           decode_steps=args.decode_steps,
                                           prefix_cache=not args.no_prefix_cache,
+                                          qos=args.qos,
                                           seed=args.seed))
+    if args.http_port is not None:
+        # live HTTP/SSE mode: no trace — requests arrive over the wire
+        import asyncio
+
+        from repro.launch.http import serve_http
+        eng.warmup()
+        asyncio.run(serve_http(AsyncEngine(eng), port=args.http_port))
+        return
     if args.workload == "rollout":
         reqs = rollout_batch(
             RolloutSpec(scale=args.scale,
                         samples_per_prompt=args.samples_per_prompt),
             seed=args.seed)
+    elif args.workload == "qosmix":
+        reqs = qos_mixed_trace(QosMixSpec(), seed=args.seed)
     else:
         reqs = bursty_trace(BurstySpec(scale=args.scale), seed=args.seed)
+    if args.slo_class_mix > 0:
+        import numpy as np
+        mix_rng = np.random.default_rng(args.seed + 1)
+        for r in reqs:
+            r.slo_class = ("interactive"
+                           if mix_rng.random() < args.slo_class_mix
+                           else "batch")
     fe = AsyncEngine(eng)
     streams = replay(fe, reqs)
     summary = eng.run(max_steps=args.max_steps)

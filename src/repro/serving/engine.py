@@ -35,6 +35,7 @@ from repro.models.common import ModelConfig
 from repro.serving.executor import Executor
 from repro.serving.kvcache import CacheConfig, PageAllocator, PrefixCache
 from repro.serving.metrics import ServeMetrics
+from repro.serving.qos import QosPolicy, slo_targets
 from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler
 
@@ -90,6 +91,11 @@ class EngineConfig:
     # time_scale. A VirtualClock (serving/frontend.py) makes the event
     # loop fully deterministic; `idle_skip` then advances it directly.
     clock: object = None
+    # multi-tenant QoS (DESIGN.md §11): class-aware admission / victim /
+    # budget-share scheduling plus the interactive-attainment switch gate.
+    # Safe to leave on: with a single-class trace every QoS hook
+    # degenerates to the class-blind rule (byte-identical outputs).
+    qos: bool = True
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -148,9 +154,14 @@ class MoebiusEngine:
         # prefix cache: one index per data group over that group's allocator
         prefix = ([PrefixCache(alloc[d]) for d in range(self.Dd)]
                   if self.ecfg.prefix_cache else None)
+        qos = QosPolicy() if self.ecfg.qos else None
+        if qos is not None:
+            # per-class attainment needs the class targets installed
+            self.metrics.slo_targets = slo_targets()
         self.sched = Scheduler(cc, self.Dd, self.G, self.ex.rt.ladder,
                                alloc=alloc, prefix=prefix, spec=start,
-                               clock=self.now, metrics=self.metrics)
+                               clock=self.now, metrics=self.metrics,
+                               qos=qos)
         self.sched.clear_slot = self.ex.clear_slot
         self.ex.on_finish = self.sched.finish_request
         # the policy runs on the engine's virtual clock (time_scale-aware),
@@ -412,7 +423,10 @@ class MoebiusEngine:
         # scheduler's queue snapshot (in-flight fused tokens count toward
         # the live-token load)
         cap_ep = self.cc.capacity_tokens(self.cfg, self.G, EP)
-        dec = self.coord.observe_queues(self.sched.snapshot(), cap_ep)
+        att = (self.metrics.recent_attainment("interactive")
+               if self.ecfg.qos else None)
+        dec = self.coord.observe_queues(self.sched.snapshot(), cap_ep,
+                                        attainment=att)
         if dec.switch:
             self.execute_switch(dec.target)
         self.sched.start_prefills()          # admit waiting -> prefill

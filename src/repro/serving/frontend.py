@@ -99,6 +99,16 @@ class TokenStream:
         """Drain the stream to completion (drives the event loop)."""
         return list(self)
 
+    def drain_available(self) -> list[int]:
+        """Already-produced tokens not yet taken, WITHOUT pumping the
+        event loop — the non-blocking read the HTTP/SSE frontend
+        (launch/http.py) interleaves with cooperative pumps."""
+        out = []
+        while self._given < self._generated():
+            out.append(self._token_at(self._given))
+            self._given += 1
+        return out
+
 
 class AsyncEngine:
     """Streaming frontend over one `MoebiusEngine`.
@@ -144,18 +154,21 @@ class AsyncEngine:
 
     def generate(self, prompt, max_new_tokens: int = 16, *,
                  arrival_s: float | None = None, rid: int | None = None,
-                 forced_len: int | None = None) -> TokenStream:
+                 forced_len: int | None = None,
+                 slo_class: str = "interactive") -> TokenStream:
         """Stream tokens for one prompt as the engine produces them.
 
         Returns immediately; iterate the stream (or call `.tokens()`) to
         drive the event loop. `arrival_s=None` arrives at the current
-        engine clock (real-time submission)."""
+        engine clock (real-time submission). Streaming callers default to
+        the `interactive` SLO class (serving/qos.py) — batch traffic
+        should say so (`slo_class="batch"`)."""
         if rid is None:
             rid = self._next_rid
         t = self.engine.now() if arrival_s is None else arrival_s
         req = Request(rid=rid, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, arrival_s=t,
-                      forced_len=forced_len)
+                      forced_len=forced_len, slo_class=str(slo_class))
         return self.submit(req)
 
     # ------------------------------------------------------------------

@@ -9,6 +9,12 @@ import numpy as np
 @dataclass
 class ServeMetrics:
     records: list = field(default_factory=list)   # (rid, arrival, first, finish, out_len)
+    # SLO class of records[i] (parallel list: the 5-tuple records stay
+    # unchanged — benches/tests unpack them positionally)
+    classes: list = field(default_factory=list)
+    # class name -> (ttft_target_s, tpot_target_s); installed from the
+    # qos registry by the engine. Empty = attainment not computed.
+    slo_targets: dict = field(default_factory=dict)
     mode_samples: list = field(default_factory=list)  # (t, mode, running)
     switch_events: list = field(default_factory=list)  # (t, direction, pause_s, total_s)
     # decode control-plane accounting: one dispatch may cover many substeps
@@ -38,6 +44,7 @@ class ServeMetrics:
     def finish(self, req) -> None:
         self.records.append((req.rid, req.arrival_s, req.first_token_s,
                              req.finish_s, len(req.output)))
+        self.classes.append(getattr(req, "slo_class", "batch"))
 
     def prefill(self, tokens: int) -> None:
         self.prefill_tokens += tokens
@@ -72,22 +79,31 @@ class ServeMetrics:
         if mixed:
             self.mixed_dispatches += 1
 
-    def ttft(self) -> np.ndarray:
-        return np.array([f - a for _, a, f, _, _ in self.records
+    def _recs(self, cls: str | None = None):
+        """Records, optionally filtered to one SLO class (the `classes`
+        list is index-parallel to `records`)."""
+        if cls is None:
+            return self.records
+        return [r for r, c in zip(self.records, self.classes) if c == cls]
+
+    def ttft(self, cls: str | None = None) -> np.ndarray:
+        return np.array([f - a for _, a, f, _, _ in self._recs(cls)
                          if f is not None])
 
-    def tpot(self) -> np.ndarray:
+    def tpot(self, cls: str | None = None) -> np.ndarray:
         out = []
-        for _, a, f, fin, n in self.records:
+        for _, a, f, fin, n in self._recs(cls):
             if f is not None and fin is not None and n > 1:
                 out.append((fin - f) / (n - 1))
         return np.array(out)
 
-    def percentiles(self, tt=None, tp=None) -> dict:
+    def percentiles(self, tt=None, tp=None, cls: str | None = None) -> dict:
         """Per-request TTFT/TPOT p50/p99 (the frontend's SLO surface).
-        Pass precomputed ttft()/tpot() arrays to avoid rebuilding them."""
-        tt = self.ttft() if tt is None else tt
-        tp = self.tpot() if tp is None else tp
+        Pass precomputed ttft()/tpot() arrays to avoid rebuilding them;
+        `cls` filters to one SLO class (flat keys unchanged either way —
+        benches parse them)."""
+        tt = self.ttft(cls) if tt is None else tt
+        tp = self.tpot(cls) if tp is None else tp
 
         def pct(a, q):
             return float(np.percentile(a, q)) if len(a) else float("nan")
@@ -96,6 +112,56 @@ class ServeMetrics:
             "ttft_p50_s": pct(tt, 50), "ttft_p99_s": pct(tt, 99),
             "tpot_p50_s": pct(tp, 50), "tpot_p99_s": pct(tp, 99),
         }
+
+    # ------------------------------------------------------------------
+    # per-class attainment (DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def _attained(self, rec, cls: str) -> bool:
+        """Did one finished request meet its class targets? TTFT always
+        checked; TPOT only when the request decoded > 1 token."""
+        tgt = self.slo_targets.get(cls)
+        if tgt is None:
+            return True
+        _, a, f, fin, n = rec
+        if f is None:
+            return False
+        if f - a > tgt[0]:
+            return False
+        return not (n > 1 and fin is not None
+                    and (fin - f) / (n - 1) > tgt[1])
+
+    def attainment(self, cls: str) -> float:
+        """Fraction of the class's finished requests meeting BOTH targets
+        (NaN with no finished requests or no installed target)."""
+        recs = self._recs(cls)
+        if not recs or cls not in self.slo_targets:
+            return float("nan")
+        return sum(self._attained(r, cls) for r in recs) / len(recs)
+
+    def recent_attainment(self, cls: str, window: int = 32) -> float | None:
+        """Attainment over the last `window` finishes of the class — the
+        switch policy's gate signal (None until the class has finishes,
+        or when no target is installed)."""
+        if cls not in self.slo_targets:
+            return None
+        recs = self._recs(cls)[-window:]
+        if not recs:
+            return None
+        return sum(self._attained(r, cls) for r in recs) / len(recs)
+
+    def by_class(self) -> dict:
+        """Per-class breakdown: n, TTFT/TPOT p50/p99, and attainment when
+        a target is installed. Keyed by class name; classes appear in
+        finish order."""
+        out: dict = {}
+        for cls in dict.fromkeys(self.classes):
+            entry = {"n": len(self._recs(cls)), **self.percentiles(cls=cls)}
+            if cls in self.slo_targets:
+                entry["attainment"] = self.attainment(cls)
+                entry["ttft_target_s"] = self.slo_targets[cls][0]
+                entry["tpot_target_s"] = self.slo_targets[cls][1]
+            out[cls] = entry
+        return out
 
     def summary(self) -> dict:
         tt, tp = self.ttft(), self.tpot()
@@ -136,4 +202,7 @@ class ServeMetrics:
             "preemptions": self.preemptions,
             "truncations": self.truncations,
             "kv_pages_peak": self.kv_pages_peak,
+            # per-class breakdown rides along; every flat key above is
+            # unchanged (benches parse them positionally)
+            "by_class": self.by_class(),
         }

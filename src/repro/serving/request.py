@@ -22,6 +22,10 @@ class Request:
     arrival_s: float = 0.0
     # forced output length for replay-style benchmarks (paper §6.3 methodology)
     forced_len: int | None = None
+    # SLO class name (serving/qos.py registry): "interactive" | "batch" |
+    # any registered class. Pure metadata to the device; the Scheduler's
+    # QosPolicy and ServeMetrics' per-class attainment read it.
+    slo_class: str = "batch"
     state: State = State.WAITING
     output: list[int] = field(default_factory=list)
     prefill_pos: int = 0           # tokens already prefilled

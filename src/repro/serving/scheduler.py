@@ -35,6 +35,13 @@ reports completions back through `finish_prefill` / `commit_decode` /
 is handed over as an opaque object (`set_layout`) and only its pure
 attributes (`kv_per_rank`, `slots_sharded`, `prefill_width`,
 `decode_ladder`) are read — no layout import, no jax.
+
+Multi-tenant QoS (DESIGN.md §11): an injected `QosPolicy`
+(serving/qos.py, equally device-free) makes three decision points
+class-aware — prefill-start ordering over `waiting`, preemption-victim
+choice (lightest class evicted first), and per-class token-budget shares
+inside `plan_mixed` (`_pick_prefills`). With `qos=None`, or with every
+request in one SLO class, each hook degenerates to the class-blind rule.
 """
 from __future__ import annotations
 
@@ -127,6 +134,16 @@ class QueueSnapshot:
     waiting: int
     prefilling: int
     running: int
+    # per-SLO-class queue depths (DESIGN.md §11): ((name, in_flight,
+    # pending), ...) sorted by name — the switch policy gates on the
+    # interactive class's state, not just aggregate load
+    per_class: tuple = ()
+
+    def class_in_flight(self, name: str) -> int:
+        for cls, inf, _pend in self.per_class:
+            if cls == name:
+                return inf
+        return 0
 
 
 class Scheduler:
@@ -141,7 +158,7 @@ class Scheduler:
 
     def __init__(self, cc, Dd: int, G: int, ladder: tuple, *,
                  alloc=None, prefix=None, spec=None, clock=None,
-                 metrics: ServeMetrics | None = None):
+                 metrics: ServeMetrics | None = None, qos=None):
         self.cc, self.Dd, self.G = cc, Dd, G
         self.ladder = tuple(ladder)
         self.alloc = alloc or []
@@ -149,6 +166,11 @@ class Scheduler:
         self.spec = spec
         self.clock = clock or (lambda: 0.0)
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        # class-aware scheduling policy (serving/qos.py QosPolicy, duck-
+        # typed) or None = class-blind. With every request in one class
+        # the QoS hooks degenerate to the class-blind rules, so the two
+        # modes are byte-identical on single-tenant traces.
+        self.qos = qos
         # Executor hook: vacate a fused-decode device slot (no-op default
         # covers the single-step path and device-free unit tests)
         self.clear_slot = self._clear_slot_host
@@ -187,14 +209,28 @@ class Scheduler:
     def snapshot(self) -> QueueSnapshot:
         """Queue state for the switch policy (SwitchCoordinator observes
         through this, never through engine internals). In-flight fused
-        tokens count toward the live-token load."""
+        tokens count toward the live-token load; per-class depths ride
+        along so the policy can gate on the interactive class alone."""
+        inf: dict[str, int] = {}
+        for r in (list(self.running.values()) + self.waiting
+                  + self.prefilling):
+            c = getattr(r, "slo_class", "batch")
+            inf[c] = inf.get(c, 0) + 1
+        pend: dict[str, int] = {}
+        for r in self.pending:
+            c = getattr(r, "slo_class", "batch")
+            pend[c] = pend.get(c, 0) + 1
+        per_class = tuple(sorted(
+            (name, inf.get(name, 0), pend.get(name, 0))
+            for name in set(inf) | set(pend)))
         return QueueSnapshot(
             in_flight=(len(self.running) + len(self.waiting)
                        + len(self.prefilling)),
             live_tokens=sum(r.kv_len + r.inflight + 1
                             for r in self.running.values()),
             pending=len(self.pending), waiting=len(self.waiting),
-            prefilling=len(self.prefilling), running=len(self.running))
+            prefilling=len(self.prefilling), running=len(self.running),
+            per_class=per_class)
 
     def has_work(self) -> bool:
         return bool(self.pending or self.waiting or self.prefilling
@@ -380,7 +416,12 @@ class Scheduler:
             eligible = [q for q in holders
                         if q.inflight == 0 and q.rid not in ex]
             if len(holders) > 1 and eligible:
-                victim = max(eligible, key=lambda q: (q.arrival_s, q.rid))
+                # class-aware victim choice: lightest SLO class first
+                # (batch evicted before interactive), youngest within a
+                # class — class-blind collapses to (arrival, rid) as today
+                key = (self.qos.victim_key if self.qos is not None
+                       else (lambda q: (q.arrival_s, q.rid)))
+                victim = max(eligible, key=key)
                 out.append(self.preempt(victim))
             elif holders == [r]:
                 out.append(self.truncate(r))
@@ -567,15 +608,21 @@ class Scheduler:
                             shared)
 
     def start_prefills(self) -> list[StartPrefill]:
-        """Walk `waiting` in admission order; whoever can't start stays."""
-        still, out = [], []
-        for r in self.waiting:
+        """Walk `waiting` in admission order — or, under QoS, heavier SLO
+        classes first (stable: FIFO within a class, so single-tenant
+        traces keep the class-blind order); whoever can't start stays."""
+        order = self.waiting
+        if self.qos is not None:
+            order = sorted(order, key=self.qos.admission_key)
+        out = []
+        for r in order:
             dec = self.start_prefill(r)
-            if dec is None:
-                still.append(r)
-            else:
+            if dec is not None:
                 out.append(dec)
-        self.waiting = still
+        started = {id(d.req) for d in out}
+        # keep the surviving queue in ADMISSION order regardless of the
+        # class-priority walk (FIFO within a class stays meaningful)
+        self.waiting = [r for r in self.waiting if id(r) not in started]
         return out
 
     def prefill_row(self, r: Request) -> int:
@@ -587,7 +634,9 @@ class Scheduler:
         """Pick at most one prefilling request per (data group, batch row)
         for this step's chunked prefill: [(req, d, row, n_tokens), ...]."""
         used, picked = set(), []
-        for r in self.prefilling:
+        order = self.prefilling if self.qos is None else \
+            sorted(self.prefilling, key=self.qos.admission_key)
+        for r in order:
             d = r.data_group
             row = self.prefill_row(r)
             if (d, row) in used:
@@ -727,6 +776,31 @@ class Scheduler:
     # ------------------------------------------------------------------
     # mixed-batch planning (token-budgeted decode + prefill, one dispatch)
     # ------------------------------------------------------------------
+    def _pick_prefills(self, rem: int, chunk: int) -> list:
+        """Prefill chunks for one mixed plan: [(req, n_tokens), ...].
+
+        Class-blind: FIFO over `prefilling` into the remainder, with the
+        head-of-line 1-token min-grant under decode saturation. Under QoS
+        the remainder is split weight-proportionally across the classes
+        with prefill waiting (interactive packs first, leftover share
+        spills down, and EVERY class keeps a >= 1-token min-grant — batch
+        absorbs budget pressure but never fully starves; DESIGN.md §11).
+        """
+        if self.qos is not None:
+            return self.qos.plan_prefill(self.prefilling, rem, chunk)
+        if rem <= 0 and self.prefilling:
+            rem = 1
+        picks: list[tuple] = []        # (req, n_tokens)
+        for r in self.prefilling:
+            if rem <= 0:
+                break
+            n = min(chunk, r.prompt_len - r.prefill_pos, rem)
+            if n <= 0:
+                continue
+            picks.append((r, n))
+            rem -= n
+        return picks
+
     def plan_mixed(self, step_i: int, *, budget: int,
                    chunk: int) -> MixedPlan:
         """One token-budgeted mixed-batch plan (DESIGN.md §10): fill the
@@ -769,19 +843,9 @@ class Scheduler:
                 cnt[k] = cnt.get(k, 0) + 1
             n_dec = sum(min(c, cap_loc) for c in cnt.values())
 
-        # --- prefill chunks into the remainder (FIFO + min-grant) ---
-        rem = budget - n_dec
-        if rem <= 0 and self.prefilling:
-            rem = 1
-        picks: list[tuple] = []        # (req, n_tokens)
-        for r in self.prefilling:
-            if rem <= 0:
-                break
-            n = min(chunk, r.prompt_len - r.prefill_pos, rem)
-            if n <= 0:
-                continue
-            picks.append((r, n))
-            rem -= n
+        # --- prefill chunks into the remainder (FIFO + min-grant;
+        # class-aware weight-proportional shares under QoS) ---
+        picks = self._pick_prefills(budget - n_dec, chunk)
 
         # --- size the rung for decode + prefill rows, assign slots ---
         kept: list[tuple] = []         # (req, d, row, n_tokens)

@@ -9,6 +9,9 @@ Mirrors the paper's evaluation workloads (§6.2, §6.3) at configurable scale:
     wave of prompt-heavy arrivals — the mixed-batch TPOT stressor
     (DESIGN.md §10; shared by bench_bursty's storm gate and the
     byte-identity tests).
+  * qos mix: bursty interactive arrivals over a steady batch floor — the
+    multi-tenant trace the QoS scheduler is measured on (DESIGN.md §11;
+    bench_qos gates interactive p99 attainment QoS vs class-blind).
 """
 from __future__ import annotations
 
@@ -87,6 +90,51 @@ def storm_trace(spec: StormSpec, seed: int = 0) -> list[Request]:
             max_new_tokens=spec.storm_output, forced_len=spec.storm_output,
             arrival_s=spec.storm_start_s + j * spec.storm_interval_s))
     return reqs
+
+
+@dataclass(frozen=True)
+class QosMixSpec:
+    """Multi-tenant mix: a steady floor of prompt-heavy, short-output
+    batch requests with bursts of short-prompt interactive requests
+    layered on top. Under a class-blind FIFO the interactive TTFT waits
+    behind the batch floor's prefill tokens; the QoS scheduler packs
+    interactive first — that gap is bench_qos's gate. Arrivals and
+    lengths are deterministic (only token ids come from `seed`), so two
+    engines replaying the same spec see byte-identical traces."""
+    duration_s: float = 12.0
+    # batch floor: one long-prompt request every interval, for the whole
+    # trace — keeps the prefill queue non-empty so shares matter
+    batch_interval_s: float = 0.6
+    batch_prompt: int = 192
+    batch_output: int = 4
+    # interactive bursts: windows of closely-spaced chat-style requests
+    burst_windows: tuple = ((1.0, 4.0), (7.0, 10.0))
+    burst_interval_s: float = 0.25
+    inter_prompt: int = 24
+    inter_output: int = 12
+    token_range: tuple = (5, 200)
+
+
+def qos_mixed_trace(spec: QosMixSpec, seed: int = 0) -> list[Request]:
+    """Arrival-ordered, slo_class-tagged trace for the QoS benchmarks."""
+    rng = np.random.default_rng(seed)
+    lo, hi = spec.token_range
+    plan = []                               # (t, class, plen, olen)
+    t = 0.0
+    while t < spec.duration_s:
+        plan.append((t, "batch", spec.batch_prompt, spec.batch_output))
+        t += spec.batch_interval_s
+    for s, e in spec.burst_windows:
+        t = s
+        while t < min(e, spec.duration_s):
+            plan.append((t, "interactive", spec.inter_prompt,
+                         spec.inter_output))
+            t += spec.burst_interval_s
+    plan.sort(key=lambda p: (p[0], p[1]))
+    return [Request(rid=i, prompt=list(rng.integers(lo, hi, plen)),
+                    max_new_tokens=olen, forced_len=olen, arrival_s=t,
+                    slo_class=cls)
+            for i, (t, cls, plen, olen) in enumerate(plan)]
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,185 @@
+"""HTTP/SSE frontend (launch/http.py, DESIGN.md §11), single device.
+
+The HTTP layer is an observation layer over the same AsyncEngine event
+loop: SSE-streamed tokens must equal the batch `generate()` outputs
+byte-for-byte — across a live layout switch included — and `/v1/metrics`
+must serve the per-class summary without touching the flat keys.
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.policy import PolicyConfig
+from repro.launch.http import HttpFrontend
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.frontend import AsyncEngine, VirtualClock
+from repro.serving.kvcache import CacheConfig
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _mk(cfg, mesh):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh,
+                        CacheConfig(page_size=4, pages_ep=64,
+                                    max_pages_per_req=16),
+                        ecfg=EngineConfig(start_layout="tp", ladder=(4, 8),
+                                          prefill_chunk=8, temperature=0.0,
+                                          policy=pol, clock=VirtualClock()))
+    return AsyncEngine(eng, step_dt=0.01)
+
+
+def _prompt(seed=0, n=6):
+    return [int(x) for x in np.random.default_rng(seed).integers(5, 200, n)]
+
+
+async def _request(srv, method, path, payload=None):
+    """One HTTP round-trip; returns (status_line, header_block, body)."""
+    reader, writer = await asyncio.open_connection(srv.host, srv.port)
+    body = json.dumps(payload).encode() if payload is not None else b""
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    head, _, payload = raw.partition(b"\r\n\r\n")
+    status, _, hdrs = head.decode().partition("\r\n")
+    return status, hdrs, payload
+
+
+def _sse_tokens(payload: bytes) -> list[int]:
+    toks = []
+    for line in payload.split(b"\n"):
+        line = line.strip()
+        if line.startswith(b"data: ") and line != b"data: [DONE]":
+            toks.append(json.loads(line[6:])["token"])
+    return toks
+
+
+def test_sse_stream_matches_batch_across_live_switch(tiny_moe, mesh11):
+    """SSE tokens == batch generate() outputs byte-for-byte, with a live
+    tp->ep switch injected after the first streamed event (client and
+    server share one loop, so the switch lands between iterations)."""
+    prompt = _prompt()
+    ref = _mk(tiny_moe, mesh11).generate(list(prompt),
+                                         max_new_tokens=10).tokens()
+    assert len(ref) == 10
+
+    async def run():
+        fe = _mk(tiny_moe, mesh11)
+        srv = await HttpFrontend(fe).start()
+        try:
+            reader, writer = await asyncio.open_connection(srv.host,
+                                                           srv.port)
+            body = json.dumps({"prompt": prompt,
+                               "max_new_tokens": 10}).encode()
+            writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(body)}\r\n\r\n").encode()
+                         + body)
+            await writer.drain()
+            toks, switched = [], False
+            while True:
+                line = (await reader.readline()).strip()
+                if line == b"data: [DONE]":
+                    break
+                if not line.startswith(b"data: "):
+                    continue
+                toks.append(json.loads(line[6:])["token"])
+                if not switched:
+                    fe.engine.execute_switch("ep")
+                    switched = True
+            writer.close()
+            await writer.wait_closed()
+            return toks, switched, str(fe.engine.active)
+        finally:
+            await srv.close()
+
+    toks, switched, final = asyncio.run(run())
+    assert switched and final == "ep"
+    assert toks == ref
+
+
+def test_non_streaming_generate_and_metrics(tiny_dense, mesh11):
+    """stream=false returns the full token list as JSON; /v1/metrics
+    serves the flat summary keys plus the per-class breakdown, with the
+    request's slo_class tag showing up."""
+    prompt = _prompt(seed=1)
+    ref = _mk(tiny_dense, mesh11).generate(list(prompt),
+                                           max_new_tokens=8).tokens()
+
+    async def run():
+        fe = _mk(tiny_dense, mesh11)
+        srv = await HttpFrontend(fe).start()
+        try:
+            status, _, body = await _request(
+                srv, "POST", "/v1/generate",
+                {"prompt": prompt, "max_new_tokens": 8, "stream": False,
+                 "slo_class": "interactive"})
+            status2, _, body2 = await _request(srv, "GET", "/v1/metrics")
+            status3, _, _ = await _request(srv, "GET", "/nope")
+        finally:
+            await srv.close()
+        return status, json.loads(body), status2, json.loads(body2), status3
+
+    status, out, status2, summary, status3 = asyncio.run(run())
+    assert "200" in status and "200" in status2 and "404" in status3
+    assert out["tokens"] == ref and out["n"] == 8
+    for k in ("ttft_p50_s", "tpot_p99_s", "n", "total_tokens"):
+        assert k in summary                     # flat keys unchanged
+    assert summary["n"] == 1
+    bc = summary["by_class"]["interactive"]
+    assert bc["n"] == 1 and "attainment" in bc
+    assert bc["ttft_target_s"] == 1.0
+
+
+def test_concurrent_sse_streams_interleave(tiny_dense, mesh11):
+    """Two SSE clients share the engine's continuous batch: both complete
+    with their full token counts while pumping cooperatively."""
+    async def run():
+        fe = _mk(tiny_dense, mesh11)
+        srv = await HttpFrontend(fe).start()
+        try:
+
+            async def one(seed, n):
+                _, _, payload = await _request(
+                    srv, "POST", "/v1/generate",
+                    {"prompt": _prompt(seed=seed), "max_new_tokens": n})
+                return _sse_tokens(payload)
+
+            a, b = await asyncio.gather(one(2, 7), one(3, 9))
+        finally:
+            await srv.close()
+        return a, b, fe.metrics.summary()
+
+    a, b, summary = asyncio.run(run())
+    assert len(a) == 7 and len(b) == 9
+    assert summary["n"] == 2
+    assert summary["by_class"]["interactive"]["n"] == 2
+
+
+def test_bad_request_is_a_400_not_a_crash(tiny_dense, mesh11):
+    async def run():
+        fe = _mk(tiny_dense, mesh11)
+        srv = await HttpFrontend(fe).start()
+        try:
+            status, _, body = await _request(srv, "POST", "/v1/generate",
+                                             {"max_new_tokens": 4})
+            status2, _, _ = await _request(
+                srv, "POST", "/v1/generate",
+                {"prompt": prompt_bad, "max_new_tokens": 4})
+        finally:
+            await srv.close()
+        return status, json.loads(body), status2
+
+    prompt_bad = ["not", "ints"]
+    status, body, status2 = asyncio.run(run())
+    assert "400" in status and "error" in body
+    assert "400" in status2

@@ -174,3 +174,55 @@ def test_engine_policy_runs_on_virtual_clock(tiny_dense):
     # advance the VIRTUAL clock by 12s (0.2 wall-s * time_scale=60)
     eng._t0 -= 0.2
     assert eng.coord.observe(0, 0, 10**9).reason != "cooldown"
+
+
+def test_attainment_gate_breaks_hysteresis_hold():
+    """QoS gate (DESIGN.md §11): an interactive-class SLO violation fires
+    the scorer's best layout on the INSTANTANEOUS count — no windowed-mean
+    wait — but only when interactive work is actually in flight."""
+    inter = (("interactive", 2, 0),)
+    # control: a single dip below t_low without the gate holds (window=4)
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    assert not c.observe(10, 0, 10**9).switch
+    # same dip with a violated floor (0.9 default) switches down NOW
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    d = c.observe(10, 0, 10**9, attainment=0.5, per_class=inter)
+    assert d.switch and d.target == TP and "attainment" in d.reason
+    # no interactive in flight -> the gate stays quiet
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    assert not c.observe(10, 0, 10**9, attainment=0.5,
+                         per_class=(("batch", 3, 0),)).switch
+    # healthy attainment -> the normal hold still applies
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    assert not c.observe(10, 0, 10**9, attainment=1.0,
+                         per_class=inter).switch
+
+
+def test_attainment_gate_respects_static_config():
+    """A static config (t_low < 0) is a hard off switch, attainment gate
+    included — benchmark baselines rely on static engines never moving."""
+    c, clock = _coord(active=EP, t_high=10**9, t_low=-1)
+    clock.t = 10.0
+    for _ in range(6):
+        d = c.observe(10, 0, 10**9, attainment=0.0,
+                      per_class=(("interactive", 5, 0),))
+        assert not d.switch
+        clock.t += 1.0
+    assert c.active == EP
+
+
+def test_observe_queues_threads_attainment_and_classes():
+    """The coordinator's snapshot entrypoint forwards the per-class depths
+    and the attainment signal into the PolicyObservation the gate reads."""
+    from repro.serving.scheduler import QueueSnapshot
+    c, clock = _coord(active=EP)
+    clock.t = 10.0
+    q = QueueSnapshot(in_flight=10, live_tokens=0, pending=0, waiting=0,
+                      prefilling=0, running=10,
+                      per_class=(("interactive", 10, 0),))
+    d = c.observe_queues(q, 10**9, attainment=0.2)
+    assert d.switch and d.target == TP

@@ -39,7 +39,7 @@ class CC:
 
 
 def make_sched(Dd=1, G=1, npages=17, per_rank=False, prefix=False,
-               ladder=(4, 8), cc=None, clock=None):
+               ladder=(4, 8), cc=None, clock=None, qos=None):
     cc = cc or CC()
     spec = FakeSpec(kv_per_rank=per_rank, slots_sharded=per_rank)
     npools = G if per_rank else 1
@@ -49,7 +49,7 @@ def make_sched(Dd=1, G=1, npages=17, per_rank=False, prefix=False,
     t = {"v": 0.0}
     return Scheduler(cc, Dd, G, ladder, alloc=alloc, prefix=pre, spec=spec,
                      clock=clock or (lambda: t["v"]),
-                     metrics=ServeMetrics())
+                     metrics=ServeMetrics(), qos=qos)
 
 
 def req(rid, plen=5, out=8, arrival=0.0, **kw):
@@ -62,6 +62,7 @@ def test_scheduler_imports_no_jax():
     in jax, directly or transitively."""
     code = ("import sys; import repro.serving.scheduler; "
             "import repro.serving.paging; import repro.serving.request; "
+            "import repro.serving.qos; "
             "assert 'jax' not in sys.modules, 'scheduler imported jax'; "
             "print('ok')")
     import os
@@ -426,3 +427,124 @@ def test_queue_snapshot_counts_inflight_tokens():
     snap = s.snapshot()
     assert snap.in_flight == 1 and snap.pending == 1
     assert snap.live_tokens == q.kv_len + 2 + 1
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant QoS (DESIGN.md §11): class-aware victim / admission / shares
+# ---------------------------------------------------------------------------
+
+def _qos():
+    from repro.serving.qos import QosPolicy
+    return QosPolicy()
+
+
+def test_qos_victim_evicts_batch_before_interactive():
+    """Pool-exhaustion victim choice under QoS: the LIGHTEST class loses
+    first (batch before interactive) even when the interactive request is
+    the youngest; youngest-first within the class, as ever."""
+    s = make_sched(npages=9, qos=_qos())
+    b_old = _running(s, 1, npages=2, arrival=1.0, out_len=2)
+    b_young = _running(s, 2, npages=2, arrival=2.0, out_len=2)
+    inter = _running(s, 3, npages=2, arrival=3.0, out_len=2)
+    b_old.slo_class = b_young.slo_class = "batch"
+    inter.slo_class = "interactive"
+    decs = s.handle_starvation([b_old], exclude=[])
+    assert [type(d) for d in decs] == [Preempt]
+    assert decs[0].req is b_young                 # youngest BATCH, not the
+    assert inter.rid in s.running                 # youngest overall
+    s.alloc[0].check()
+
+
+def test_qos_victim_uniform_class_matches_class_blind():
+    """Degeneracy: with every holder in one class the QoS victim rule is
+    exactly the class-blind youngest-first rule."""
+    for qos in (None, _qos()):
+        s = make_sched(npages=9, qos=qos)
+        _running(s, 1, npages=2, arrival=1.0, out_len=2)
+        young = _running(s, 2, npages=2, arrival=3.0, out_len=2)
+        _running(s, 3, npages=2, arrival=2.0, out_len=2)
+        decs = s.handle_starvation([s.running[1]], exclude=[])
+        assert decs[0].req is young, f"qos={qos}"
+
+
+def test_qos_prefill_starts_interactive_first_fifo_within_class():
+    """start_prefills walks heavier classes first, FIFO within a class;
+    whoever can't start stays in `waiting` in ADMISSION order."""
+    s = make_sched(npages=65, qos=_qos())
+    s.submit(req(0, plen=5, slo_class="batch"))
+    s.submit(req(1, plen=5, slo_class="batch"))
+    s.submit(req(2, plen=5, slo_class="interactive"))
+    s.submit(req(3, plen=5, slo_class="interactive"))
+    s.admit(t=0.0)
+    decs = s.start_prefills()
+    assert [d.req.rid for d in decs] == [2, 3, 0, 1]
+    assert not s.waiting
+
+
+def test_qos_snapshot_reports_per_class_depths():
+    s = make_sched(qos=_qos())
+    q = _running(s, 1, npages=1)
+    q.slo_class = "interactive"
+    s.submit(req(7, arrival=99.0, slo_class="batch"))
+    s.submit(req(8, arrival=99.0, slo_class="interactive"))
+    snap = s.snapshot()
+    assert snap.per_class == (("batch", 0, 1), ("interactive", 1, 1))
+    assert snap.class_in_flight("interactive") == 1
+    assert snap.class_in_flight("batch") == 0
+    assert snap.class_in_flight("nope") == 0
+
+
+def test_qos_plan_mixed_weight_proportional_shares():
+    """The prefill remainder splits 4:1 (interactive:batch weights) with
+    interactive packing first; the batch share is still granted."""
+    s = make_sched(npages=65, ladder=(8, 16), qos=_qos())
+    s.submit(req(0, plen=30, slo_class="batch"))
+    s.submit(req(1, plen=30, slo_class="interactive"))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 2
+    plan = s.plan_mixed(0, budget=20, chunk=32)     # no decode: rem = 20
+    pre = [(r.req.rid, r.n_tokens) for r in plan.rows
+           if r.kind == "prefill"]
+    # shares: interactive 20*4//5 = 16, batch max(1, 20*1//5) = 4
+    assert pre == [(1, 16), (0, 4)]
+    assert plan.prefill_tokens == 20
+
+
+def test_qos_plan_mixed_single_class_consumes_full_remainder():
+    """Degeneracy: one class present -> its share is the whole remainder
+    and packing is FIFO — byte-identical to the class-blind plan."""
+    s_blind = make_sched(npages=65, ladder=(8, 16))
+    s_qos = make_sched(npages=65, ladder=(8, 16), qos=_qos())
+    for s in (s_blind, s_qos):
+        s.submit(req(0, plen=20, slo_class="batch"))
+        s.submit(req(1, plen=20, slo_class="batch"))
+        s.admit(t=0.0)
+        assert len(s.start_prefills()) == 2
+    p_blind = s_blind.plan_mixed(0, budget=30, chunk=16)
+    p_qos = s_qos.plan_mixed(0, budget=30, chunk=16)
+    pick = lambda p: [(r.req.rid, r.n_tokens, r.kind) for r in p.rows]
+    assert pick(p_blind) == pick(p_qos) == [(0, 16, "prefill"),
+                                            (1, 14, "prefill")]
+
+
+def test_qos_batch_min_grant_survives_interactive_saturation():
+    """A sustained interactive prefill that alone absorbs the remainder
+    must not starve batch: every present class keeps a >= 1-token grant,
+    so the batch prompt still completes."""
+    s = make_sched(npages=65, ladder=(8, 16), qos=_qos())
+    s.submit(req(0, plen=12, slo_class="batch"))
+    # a stream of big interactive prompts saturating every remainder
+    for i in range(1, 5):
+        s.submit(req(i, plen=40, slo_class="interactive"))
+    s.admit(t=0.0)
+    assert len(s.start_prefills()) == 5
+    batch = next(r for r in s.prefilling if r.slo_class == "batch")
+    for i in range(24):
+        if batch.rid not in [r.rid for r in s.prefilling]:
+            break
+        plan = s.plan_mixed(i, budget=8, chunk=16)
+        mine = [r.n_tokens for r in plan.rows
+                if r.kind == "prefill" and r.req is batch]
+        assert mine and mine[0] >= 1          # the per-class min-grant
+        s.commit_mixed(plan, [[5] * plan.B], t=float(i))
+    assert batch.rid in s.running             # finished its prefill
