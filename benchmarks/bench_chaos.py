@@ -1,0 +1,213 @@
+"""Chaos replay: scripted faults under the virtual clock (DESIGN.md §12).
+
+``--smoke`` (the CI gate, BENCH_chaos.json) replays ONE deterministic
+fault script (`serving/faults.FaultPlan`) against a chunked-switch engine
+on a `VirtualClock` and compares it with a fault-free run of the same
+trace:
+
+  * ``pool_exhaust``      — every free page of the group's pool seized for
+                            a few iterations (decode growth fails -> the
+                            normal preemption path, which is byte-stable);
+  * ``rank_fail`` at chunk boundary 0 of a scripted tp->ep switch — the
+                            switch ABORTS (source layout stays live, the
+                            staged session is dropped wholesale) and the
+                            whole group teacher-force re-prefills;
+  * ``client_disconnect`` — one request cancelled mid-decode, slot+pages
+                            freed through the normal finish path;
+  * a second scripted tp->ep switch that COMMITS, then a ``rank_fail``
+                            under EP — a per-rank failure, so placement
+                            avoids the dead pool while the recovery
+                            re-prefills (degraded-mode serving).
+
+Gates:
+  1. every surviving request's tokens are byte-identical to the fault-free
+     run (the disconnected request's partial output is a prefix of its
+     fault-free output);
+  2. page conservation: `PagePoolAllocator.check()` passes on every
+     allocator of both runs after completion;
+  3. the chaos run recorded >= 1 switch abort and >= 1 degraded recovery,
+     and every recovery completed within ``RECOVERY_BOUND`` engine
+     iterations.
+"""
+from __future__ import annotations
+
+import time
+
+# virtual seconds charged per engine iteration (event-loop step_dt)
+STEP_DT = 0.05
+# max engine iterations a rank-failure recovery may take (gate 3)
+RECOVERY_BOUND = 120
+# the request the scripted client_disconnect kills
+DISCONNECT_RID = 2
+
+
+def _trace(seed: int = 0):
+    """Fixed mixed-length trace: everything arrives early so every fault
+    in the script lands on live work."""
+    import numpy as np
+
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    outs = (40, 48, 56, 64, 40, 56, 48, 64)
+    for i, n_out in enumerate(outs):
+        plen = int(rng.integers(8, 15))
+        prompt = [int(x) for x in rng.integers(5, 500, plen)]
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_out,
+                            arrival_s=0.02 * i, slo_class="batch"))
+    return reqs
+
+
+def _chaos_plan():
+    from repro.serving.faults import Fault, FaultPlan
+    return FaultPlan((
+        # seize the pool: decode growth fails -> preemption (byte-stable)
+        Fault("pool_exhaust", at_step=10, data_group=0, pool=0,
+              duration_steps=6),
+        # scripted tp->ep switch whose FIRST chunk boundary loses rank 1:
+        # the switch aborts, the whole TP group re-prefills
+        Fault("switch", at_step=14, target="ep"),
+        Fault("rank_fail", switch_chunk=0, switch_index=0, data_group=0,
+              rank=1),
+        # a client walks away mid-decode
+        Fault("client_disconnect", at_step=30, rid=DISCONNECT_RID),
+        # the retried switch commits; then a per-rank failure under EP
+        # exercises degraded-mode placement + recovery
+        Fault("switch", at_step=44, target="ep"),
+        Fault("rank_fail", at_step=52, data_group=0, rank=2),
+    ))
+
+
+def _calm_plan():
+    """The fault-free reference: the same scripted switches, no faults
+    (greedy outputs are switch-invariant, so this pins the baseline)."""
+    from repro.serving.faults import Fault, FaultPlan
+    return FaultPlan((
+        Fault("switch", at_step=14, target="ep"),
+        Fault("switch", at_step=44, target="ep"),
+    ))
+
+
+def _run(cfg, mesh, reqs, plan):
+    import copy
+
+    from benchmarks.common import make_engine
+    from repro.serving.frontend import AsyncEngine, VirtualClock
+    from repro.serving.workloads import replay
+
+    eng = make_engine(cfg, mesh, ladder=(4, 8), page=8, pages_ep=64,
+                      maxp=16, prefill_chunk=16, chunk_layers=1,
+                      clock=VirtualClock(), faults=plan)
+    eng.warmup()                       # both layouts: the script switches
+    fe = AsyncEngine(eng, step_dt=STEP_DT)
+    streams = replay(fe, copy.deepcopy(reqs))
+    summary = fe.run_until_complete()
+    assert all(st.finished for st in streams.values())
+    outputs = {rid: st.drain_available() for rid, st in streams.items()}
+    for a in eng.sched.alloc:
+        a.check()                      # gate 2: page conservation
+    return eng, outputs, summary
+
+
+def smoke_rows(seed: int = 0):
+    from benchmarks.common import bench_cfg
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 4), ("data", "model"))
+    cfg = bench_cfg()                  # 2 layers -> 2 chunks per switch
+    reqs = _trace(seed)
+
+    _, base_out, base_s = _run(cfg, mesh, reqs, _calm_plan())
+    eng, chaos_out, chaos_s = _run(cfg, mesh, reqs, _chaos_plan())
+
+    survivors = [r.rid for r in reqs if r.rid != DISCONNECT_RID]
+    ok_bytes = all(chaos_out[rid] == base_out[rid] for rid in survivors)
+    cut = chaos_out[DISCONNECT_RID]
+    ok_prefix = (len(cut) < len(base_out[DISCONNECT_RID])
+                 and cut == base_out[DISCONNECT_RID][:len(cut)])
+    ok_aborts = chaos_s["switch_aborts"] >= 1
+    ok_degraded = chaos_s["degraded_recoveries"] >= 1
+    ok_recovery = (chaos_s["recoveries"] >= 1
+                   and chaos_s["recovery_steps_max"] <= RECOVERY_BOUND)
+    inj = eng._faults
+    ok_fired = inj is not None and inj.done
+
+    rows = [
+        ("chaos.smoke.n_requests", float(len(reqs)),
+         f"survivors={len(survivors)}"),
+        ("chaos.smoke.faults_injected", float(chaos_s["faults_injected"]),
+         f"all_fired={ok_fired}"),
+        ("chaos.smoke.byte_identity_gate", float(ok_bytes),
+         f"survivors_byte_identical={ok_bytes};"
+         f"disconnect_prefix={ok_prefix};"
+         f"n_survivors={len(survivors)}"),
+        ("chaos.smoke.switch_abort_gate", float(chaos_s["switch_aborts"]),
+         f"aborts_ge_1={ok_aborts};"
+         f"switches_committed={chaos_s['switches']};"
+         f"baseline_switches={base_s['switches']}"),
+        ("chaos.smoke.recovery_gate", float(chaos_s["recovery_steps_max"]),
+         f"degraded_ge_1={ok_degraded};recoveries={chaos_s['recoveries']};"
+         f"rank_failures={chaos_s['rank_failures']};"
+         f"steps_le_{RECOVERY_BOUND}={ok_recovery}"),
+        ("chaos.smoke.frontend_counters",
+         float(chaos_s["client_disconnects"]),
+         f"client_disconnects={chaos_s['client_disconnects']};"
+         f"pool_exhaust_events={chaos_s['pool_exhaust_events']};"
+         f"preemptions={chaos_s['preemptions']}"),
+    ]
+    ok = (ok_bytes and ok_prefix and ok_aborts and ok_degraded
+          and ok_recovery and ok_fired)
+    rows.append(("chaos.smoke.gate", float(ok), f"chaos_gate={ok}"))
+    return rows
+
+
+def run(smoke: bool = False, seed: int = 0):
+    if smoke:
+        return smoke_rows(seed=seed)
+    # full mode: the same script across seeds (different prompts, same
+    # fault timeline — determinism must hold for every trace)
+    rows = []
+    for s in range(2):
+        rows.extend(smoke_rows(seed=s))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _bootstrap import ensure_env_and_path
+    ensure_env_and_path()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: scripted rank-failure mid-switch + "
+                         "client disconnect + pool exhaustion replayed "
+                         "under a VirtualClock; survivors byte-identical "
+                         "to a fault-free run, pages conserved, >= 1 "
+                         "switch abort and >= 1 degraded recovery; writes "
+                         "BENCH_chaos.json")
+    ap.add_argument("--json", default="BENCH_chaos.json",
+                    help="JSON artifact path (a copy always lands in the "
+                         "repo root as BENCH_chaos.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows = list(run(smoke=args.smoke, seed=args.seed))
+    print("name,value,derived")
+    ok = not args.smoke
+    for nm, v, derived in rows:
+        print(f"{nm},{v:.4f},{derived}", flush=True)
+        if nm == "chaos.smoke.gate" and "chaos_gate=True" in derived:
+            ok = True
+    from benchmarks.common import write_bench_json
+    write_bench_json({
+        "benchmark": "chaos", "smoke": args.smoke,
+        "unix_time": time.time(),
+        "rows": [{"name": nm, "value": v, "derived": derived}
+                 for nm, v, derived in rows]}, args.json, "chaos")
+    if not ok:
+        raise SystemExit("chaos smoke gate FAILED (see rows above)")
+
+
+if __name__ == "__main__":
+    main()

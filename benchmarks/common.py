@@ -35,7 +35,7 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
                 time_scale=1.0, chunk_layers=0, decode_steps=1,
                 attn_backend=None, prefix_cache=True, clock=None,
                 mixed_batch=True, token_budget=0, dispatch_dt=0.0,
-                qos=True):
+                qos=True, faults=None):
     from repro.core.policy import PolicyConfig
     from repro.serving.engine import EngineConfig, MoebiusEngine
     from repro.serving.kvcache import CacheConfig
@@ -48,7 +48,7 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
         chunk_layers=chunk_layers, decode_steps=decode_steps,
         attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock,
         mixed_batch=mixed_batch, token_budget=token_budget,
-        dispatch_dt=dispatch_dt, qos=qos))
+        dispatch_dt=dispatch_dt, qos=qos, faults=faults))
 
 
 def write_bench_json(payload: dict, path: str | None, name: str) -> None:

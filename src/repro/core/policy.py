@@ -48,6 +48,14 @@ class PolicyConfig:
     # the scorer's best layout at the CURRENT count is proposed even
     # inside the dead band (cooldown still applies). 0 disables the gate.
     attainment_floor: float = 0.9
+    # exponential switch-cooldown backoff after aborted/failed switches
+    # (DESIGN.md §12): each abort multiplies the effective cooldown by
+    # `backoff_base` (capped at `backoff_max` times the base cooldown);
+    # a completed switch resets it. A flapping fault — a rank that keeps
+    # dying mid-migration — then can't thrash the engine with repeated
+    # plan/stage/abort cycles. base <= 1 disables the backoff.
+    backoff_base: float = 2.0
+    backoff_max: float = 64.0
 
     @classmethod
     def interactive(cls, t_high: int) -> "PolicyConfig":
@@ -287,6 +295,10 @@ class SwitchCoordinator:
     _last_switch: float = -1e18
     switches: list = field(default_factory=list)
     canceled: int = 0
+    # abort backoff state (DESIGN.md §12): multiplier on cooldown_s,
+    # grown by switch_aborted(), reset by switch_completed()
+    backoff_mult: float = 1.0
+    aborted: int = 0
 
     def __post_init__(self):
         self.active = get_layout(self.active)
@@ -324,7 +336,7 @@ class SwitchCoordinator:
         """Called once per decode iteration, between steps."""
         self._history.append(in_flight)
         now = self.clock()
-        if now - self._last_switch < self.policy.cooldown_s:
+        if now - self._last_switch < self.effective_cooldown_s:
             return SwitchDecision(False, self.active, "cooldown")
         w = self.policy.window
         mean = (sum(list(self._history)[-w:]) / w
@@ -351,3 +363,51 @@ class SwitchCoordinator:
         self.switches.append((now, self.active, target, reason))
         self.active = get_layout(target)
         return SwitchDecision(True, self.active, reason)
+
+    # ------------------------------------------------------------------
+    # fault tolerance (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    @property
+    def effective_cooldown_s(self) -> float:
+        """Cooldown with the abort backoff applied."""
+        return self.policy.cooldown_s * self.backoff_mult
+
+    def switch_aborted(self, actual_active, now: float | None = None) -> None:
+        """An in-flight switch was abandoned: re-point `active` at the
+        layout the engine actually still runs (the source), re-arm the
+        cooldown from now, and grow the exponential backoff so a flapping
+        fault can't thrash the engine with plan/stage/abort cycles."""
+        self.active = get_layout(actual_active)
+        self.aborted += 1
+        self._last_switch = now if now is not None else self.clock()
+        base = self.policy.backoff_base
+        if base > 1.0:
+            self.backoff_mult = min(self.backoff_mult * base,
+                                    self.policy.backoff_max)
+
+    def switch_completed(self, actual_active) -> None:
+        """A switch committed: sync `active` with the engine (direct
+        `execute_switch` calls bypass the coordinator) and reset the
+        abort backoff — the fabric is healthy again."""
+        self.active = get_layout(actual_active)
+        self.backoff_mult = 1.0
+
+    def mid_switch_reversal(self, src, target, q,
+                            ep_capacity_tokens: int) -> bool:
+        """Regret check the engine runs at every chunk boundary of a
+        chunked switch: True when the scorer now prefers the SOURCE
+        layout at the instantaneous in-flight count — the load moved
+        back across the band while chunks were migrating, so committing
+        would immediately want to switch back. Aborting is cheap (the
+        source is still live); committing and re-switching costs a full
+        migration. Static configs (no scorer verdict) never reverse."""
+        src, target = get_layout(src), get_layout(target)
+        scorer = getattr(self.policy_impl, "scorer", None)
+        if scorer is None or src is target:
+            return False
+        obs = PolicyObservation(active=target, in_flight=q.in_flight,
+                                window_mean=None,
+                                live_tokens=q.live_tokens,
+                                ep_capacity_tokens=ep_capacity_tokens,
+                                per_class=getattr(q, "per_class", ()))
+        return scorer.best_at(q.in_flight, obs) is src

@@ -377,6 +377,29 @@ class SwitchExecutor:
         s.next_chunk += 1
         return not s.done
 
+    def abort(self) -> SwitchStats:
+        """Abandon the in-flight chunked session at a chunk boundary
+        (DESIGN.md §12): the switch never happened.
+
+        `start()` plans with mutate=False and `plan_switch` is pure on the
+        source side, so nothing the live engine depends on — request
+        metadata, the live allocators and prefix caches, the source
+        expert/KV buffers decode kept reading — was ever touched. Dropping
+        the session therefore *is* the rollback: the staged destination
+        buffers become garbage, and every planned destination page and
+        cache-move ref lives in the session's fresh `new_alloc`, which
+        dies with it. The source layout simply remains live,
+        byte-identical, and `SwitchExecutor` is immediately ready to plan
+        a new switch."""
+        s = self.session
+        assert s is not None, "no switch in progress"
+        self.session = None
+        return SwitchStats(direction=s.direction,
+                           total_s=time.perf_counter() - s.t_start,
+                           plan_s=s.plan_pause_s, kv_pages=s.kv_pages,
+                           chunks=s.next_chunk,
+                           live_requests=s.live_requests)
+
     def _dst_page(self, d: int, pool: int) -> int:
         """Commit-time destination-pool allocation for a live request's
         top-up/CoW re-point. A full pool sacrifices still-alive planned

@@ -34,9 +34,13 @@ def plan_rescale(cfg, old_mesh_shape: dict, new_mesh_shape: dict,
     if cfg.num_heads and cfg.num_heads % G_new and G_new % cfg.num_heads:
         ok, why = False, f"heads {cfg.num_heads} !~ model axis {G_new}"
     if cfg.is_moe:
-        import math
-        if math.gcd(cfg.num_experts, G_new) == 0:
-            ok, why = False, "expert divisibility"
+        # experts must tile the model axis in one direction: E % G == 0
+        # (each rank owns E/G experts) or G % E == 0 (experts replicated
+        # across rank subgroups). gcd(E, G) == 0 only when BOTH are zero,
+        # so the old check rejected nothing.
+        if cfg.num_experts % G_new and G_new % cfg.num_experts:
+            ok, why = False, (f"experts {cfg.num_experts} !~ "
+                              f"model axis {G_new}")
     return RescalePlan(old_mesh_shape, new_mesh_shape, ok, why)
 
 
@@ -59,7 +63,18 @@ def fail_rank(engine, data_group: int, rank: int) -> list:
     Under EP only the rank's own requests are hit; under TP every request in
     the group holds a head-shard there, so the whole group re-prefills —
     the capacity/blast-radius asymmetry of the two layouts.
+
+    Legal DURING a chunked switch (DESIGN.md §12): the in-flight session is
+    aborted first — its staged buffers and planned dst pages (which may
+    target the failed rank) are dropped wholesale — then the recovery runs
+    against the still-live source layout. A per-rank (EP) failure also
+    marks the rank's page pool dead so placement avoids it until every hit
+    request has re-prefilled (degraded-mode serving).
     """
+    in_flight = getattr(engine, "switch_in_progress", None)
+    if in_flight is not None and in_flight():
+        engine.abort_switch(f"rank {rank} of group {data_group} failed "
+                            f"mid-switch")
     # fused decode: consume in-flight tokens so every request sits at a
     # step boundary (requeueing mid-flight would leave a live device slot
     # writing KV through a stale block table into released pages)
@@ -77,9 +92,18 @@ def fail_rank(engine, data_group: int, rank: int) -> list:
     # pooled view sharded every page's heads across the rank)
     if getattr(engine, "prefix", None) is not None:
         engine.prefix[data_group].drop_pool(rank if per_rank else 0)
+    # degraded mode: a per-rank failure takes its pool out of prefill
+    # placement until the recovery completes (getattr guards keep older
+    # duck-typed engine stand-ins working)
+    sched = getattr(engine, "sched", None)
+    if per_rank and sched is not None:
+        sched.mark_pool_dead(data_group, rank)
     for r in hit:
         # release pages (to the recorded pool), teacher-force the generated
         # prefix, vacate the device slot, re-prefill — the engine's shared
         # requeue path (same one preemption uses)
         engine.requeue_for_reprefill(r)
+    note = getattr(engine, "note_rank_failure", None)
+    if note is not None:
+        note(data_group, rank, hit, per_rank and sched is not None)
     return hit

@@ -14,9 +14,15 @@ Endpoints:
   POST /v1/generate
       body: {"prompt": [token ids], "max_new_tokens": int,
              "slo_class": "interactive" | "batch" (default interactive),
-             "stream": bool (default true)}
+             "stream": bool (default true),
+             "max_time": seconds | null (per-request deadline: past it
+             the request finishes truncated with whatever it generated)}
       stream=true  -> text/event-stream; one `data: {"token": id}` event
-                      per generated token, then `data: [DONE]`.
+                      per generated token, then `data: [DONE]`. A client
+                      that disconnects mid-stream gets its request
+                      CANCELLED: the engine frees the slot/pages through
+                      the normal finish path and other streams continue
+                      (`client_disconnects` in /v1/metrics).
       stream=false -> application/json {"rid", "tokens", "n"}.
 
   GET /v1/metrics
@@ -135,10 +141,12 @@ class HttpFrontend:
             await self._json(writer, {"error": f"bad request: {e!r}"},
                              "400 Bad Request")
             return
+        max_time = spec.get("max_time")
         stream = self.fe.generate(
             prompt,
             max_new_tokens=int(spec.get("max_new_tokens", 16)),
-            slo_class=str(spec.get("slo_class", "interactive")))
+            slo_class=str(spec.get("slo_class", "interactive")),
+            max_time=float(max_time) if max_time is not None else None)
         if spec.get("stream", True):
             await self._stream_sse(writer, stream)
         else:
@@ -161,21 +169,34 @@ class HttpFrontend:
         return toks
 
     async def _stream_sse(self, writer, stream) -> None:
+        """Stream one request's tokens; a broken pipe mid-stream cancels
+        the request (DESIGN.md §12) so its slot and pages go back to the
+        batch instead of decoding for a client that is gone."""
         writer.write(self._head("200 OK", "text/event-stream"))
-        await writer.drain()
-        while True:
-            # drain first, test finished after: a finished request can't
-            # grow its output, so empty-after-drain + finished == done
-            for tok in stream.drain_available():
-                writer.write(_sse({"token": int(tok)}))
+        try:
             await writer.drain()
-            if stream.finished:
-                break
-            if self.fe.engine.sched.has_work():
-                self.fe._pump()
-            await asyncio.sleep(0)
-        writer.write(_sse("[DONE]"))
-        await writer.drain()
+            while True:
+                # drain first, test finished after: a finished request
+                # can't grow its output, so empty-after-drain + finished
+                # == done
+                for tok in stream.drain_available():
+                    writer.write(_sse({"token": int(tok)}))
+                await writer.drain()
+                if stream.finished:
+                    break
+                if writer.transport.is_closing():
+                    raise ConnectionResetError("client went away")
+                if self.fe.engine.sched.has_work():
+                    self.fe._pump()
+                await asyncio.sleep(0)
+            writer.write(_sse("[DONE]"))
+            await writer.drain()
+        except (ConnectionError, OSError):
+            # handled here (not in _handle's net) so the cancel happens
+            # even for non-Connection OSErrors; the writer closes in
+            # _handle's finally either way
+            if not stream.finished:
+                self.fe.cancel(stream.rid)
 
 
 async def serve_http(frontend, host: str = "127.0.0.1",

@@ -33,6 +33,7 @@ from repro.core.layouts import EP, TP, LayoutSpec, get_layout
 from repro.core.policy import PolicyConfig, SwitchCoordinator
 from repro.models.common import ModelConfig
 from repro.serving.executor import Executor
+from repro.serving.faults import FaultInjector
 from repro.serving.kvcache import CacheConfig, PageAllocator, PrefixCache
 from repro.serving.metrics import ServeMetrics
 from repro.serving.qos import QosPolicy, slo_targets
@@ -96,6 +97,11 @@ class EngineConfig:
     # Safe to leave on: with a single-class trace every QoS hook
     # degenerates to the class-blind rule (byte-identical outputs).
     qos: bool = True
+    # deterministic fault injection (DESIGN.md §12): a FaultPlan /
+    # FaultInjector / iterable of Faults scripted against the virtual
+    # clock. None = no chaos. The engine polls it at the top of every
+    # iteration and at every chunk boundary of a chunked switch.
+    faults: object = None
     policy: PolicyConfig = field(default_factory=PolicyConfig)
     seed: int = 0
 
@@ -144,6 +150,11 @@ class MoebiusEngine:
         self._clock = self.ecfg.clock
         self._clock_skip = 0.0
         self._charged_disp = 0         # dispatches already billed dispatch_dt
+        # fault tolerance (DESIGN.md §12)
+        self._faults = (None if self.ecfg.faults is None
+                        else FaultInjector(self.ecfg.faults))
+        self._holds: list = []         # live pool_exhaust page seizures
+        self._recoveries: list = []    # in-progress rank-failure recoveries
 
         # --- the three layers ---
         self.ex = Executor(cfg, mesh, cc, self.ecfg, self.layouts, start,
@@ -354,7 +365,7 @@ class MoebiusEngine:
     # ------------------------------------------------------------------
     # switch
     # ------------------------------------------------------------------
-    def execute_switch(self, target: str) -> None:
+    def execute_switch(self, target: str) -> bool:
         """Live switch between decode iterations; no request is drained.
         The target may be ANY registered layout the engine keeps resident —
         the switch plan is the src->target slice-ownership diff.
@@ -363,7 +374,10 @@ class MoebiusEngine:
         migration. Chunked mode stages the destination buffers layer chunk
         by layer chunk with decode steps interleaved in between (still on
         the intact source layout), then pauses only for the dirty-page
-        delta + commit (DESIGN.md §4.3).
+        delta + commit (DESIGN.md §4.3). A chunked attempt can ABORT at a
+        chunk boundary — injected fault or mid-switch policy reversal —
+        leaving the source layout live (DESIGN.md §12); returns False in
+        that case, True when the switch committed.
         """
         target = get_layout(target)
         assert target is not self.active, "switch target == active layout"
@@ -374,6 +388,8 @@ class MoebiusEngine:
         self.ex.drain_decode()
         if self.ecfg.chunk_layers > 0:
             rec = self._execute_switch_chunked(target)
+            if rec is None:                # aborted; source layout live
+                return False
         else:
             alloc, caches, st = self.ex.switch_monolithic(
                 target, self.sched.live(), self.sched.alloc,
@@ -387,17 +403,65 @@ class MoebiusEngine:
                 pause_s=st.pause_s, chunks=st.chunks)
         self.switch_records.append(rec)
         self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
+        # sync the coordinator with the engine's real layout (benches call
+        # execute_switch directly, bypassing observe) + reset its backoff
+        self.coord.switch_completed(self.active)
+        return True
 
-    def _execute_switch_chunked(self, target: LayoutSpec) -> SwitchRecord:
+    def _execute_switch_chunked(self, target: LayoutSpec):
+        """One chunked switch attempt; returns its SwitchRecord, or None
+        when the attempt aborted (fault / policy reversal) at a chunk
+        boundary — the abort path already recorded metrics + backoff."""
+        inj = self._faults
+        if inj is not None:
+            inj.begin_switch()
+        cap_ep = self.cc.capacity_tokens(self.cfg, self.G, EP)
         sess = self.ex.switch_start(target, self.sched.live(),
                                     self.ecfg.chunk_layers,
                                     self.sched.alloc, self.sched.prefix)
+        abort_reason, rank_fault = None, None
         while not sess.done:
             self.ex.switch_advance()
             # overlap: decode continues in the source layout on the source
             # buffers while the chunk's collectives are in flight
             self._step_i += 1
             self._decode_step()
+            boundary = sess.next_chunk - 1
+            if inj is not None:
+                for f in inj.poll_switch(boundary):
+                    if f.kind == "chunk_slow":
+                        # straggler chunk: charge the virtual clock and
+                        # keep migrating
+                        self.metrics.faults_injected += 1
+                        self.metrics.chunk_slowdowns += 1
+                        self._advance_clock(f.delay_s)
+                    elif f.kind == "chunk_fail":
+                        self.metrics.faults_injected += 1
+                        abort_reason = f"chunk {boundary} failed"
+                    elif f.kind == "rank_fail":
+                        # applied after the break: fail_rank itself aborts
+                        # the session before invalidating the rank
+                        abort_reason = (f"rank {f.rank} failed at "
+                                        f"chunk {boundary}")
+                        rank_fault = f
+                    elif f.kind != "switch":   # no nested switches
+                        self._apply_fault(f)
+                if abort_reason is not None:
+                    break
+            # mid-switch policy reversal: the scorer now prefers the SOURCE
+            # layout for the post-commit queue state — finishing the
+            # migration would buy a layout we'd immediately leave
+            if self.coord.mid_switch_reversal(self.active, target,
+                                              self.sched.snapshot(), cap_ep):
+                abort_reason = "policy reversal"
+                break
+        if abort_reason is not None:
+            self.ex.drain_decode()
+            if rank_fault is not None:
+                self._apply_fault(rank_fault)
+            else:
+                self.abort_switch(abort_reason)
+            return None
         # drain to a step boundary so the commit-time dirty-page delta sees
         # every KV write the overlap window produced
         self.ex.drain_decode()
@@ -412,13 +476,143 @@ class MoebiusEngine:
             delta_pages=st.delta_pages)
 
     # ------------------------------------------------------------------
+    # fault tolerance (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def switch_in_progress(self) -> bool:
+        return self.ex.switcher.session is not None
+
+    def abort_switch(self, reason: str = "") -> bool:
+        """Abandon the in-flight chunked switch at the current chunk
+        boundary: staging buffers and planned dst pages are dropped, the
+        source layout stays live and byte-identical (SwitchExecutor.abort).
+        Grows the coordinator's cooldown backoff."""
+        if not self.switch_in_progress():
+            return False
+        st = self.ex.switch_abort()
+        now = self.now()
+        self.metrics.switch_abort(now, st.direction, reason)
+        self.coord.switch_aborted(self.active, now)
+        return True
+
+    def cancel(self, rid: int, *, kind: str = "disconnect") -> bool:
+        """Client-side cancellation (SSE disconnect): drop the request
+        wherever it sits and free its slot/pages through the scheduler's
+        finish path. Returns False for an unknown/finished rid."""
+        self.ex.drain_decode()        # cancel_request needs inflight == 0
+        r = self.sched.cancel_request(rid)
+        if r is None:
+            return False
+        if kind == "disconnect":
+            self.metrics.client_disconnects += 1
+        return True
+
+    def note_rank_failure(self, data_group: int, rank: int, hit: list,
+                          degraded: bool) -> None:
+        """Called by elastic.fail_rank after it requeued the hit requests:
+        record the failure and start tracking its recovery — complete when
+        every hit request has re-prefilled (left waiting/prefilling). A
+        `degraded` (per-rank, EP) failure keeps the pool out of placement
+        until then."""
+        now = self.now()
+        self.metrics.rank_failure(now, data_group, rank, len(hit))
+        if not hit:
+            # nothing to re-prefill: recovery is instantaneous
+            self.metrics.recovery(now, 0, 0, degraded)
+            if degraded:
+                self.sched.revive_pool(data_group, rank)
+            return
+        self._recoveries.append({
+            "rids": {r.rid for r in hit}, "d": data_group, "rank": rank,
+            "start_step": self._step_i, "degraded": degraded})
+
+    def _check_recoveries(self) -> None:
+        """A recovery completes when none of its requests is still queued
+        for (re-)prefill — each is running again or finished. Revives the
+        dead pool of a degraded (per-rank) failure."""
+        if not self._recoveries:
+            return
+        queued = {r.rid for r in (self.sched.waiting + self.sched.prefilling
+                                  + list(self.sched.pending))}
+        still = []
+        for rec in self._recoveries:
+            if rec["rids"] & queued:
+                still.append(rec)
+                continue
+            self.metrics.recovery(self.now(),
+                                  self._step_i - rec["start_step"],
+                                  len(rec["rids"]), rec["degraded"])
+            if rec["degraded"]:
+                self.sched.revive_pool(rec["d"], rec["rank"])
+        self._recoveries = still
+
+    def _apply_fault(self, f) -> None:
+        """Act on one fired Fault (see serving/faults.py for the kinds)."""
+        self.metrics.faults_injected += 1
+        if f.kind == "rank_fail":
+            from repro.distributed.elastic import fail_rank
+            fail_rank(self, f.data_group, f.rank)
+        elif f.kind == "pool_exhaust":
+            self.metrics.pool_exhaust_events += 1
+            alloc = self.sched.alloc[f.data_group]
+            n = alloc.free_pages(f.pool)
+            pages = alloc.try_alloc(f.pool, n) if n > 0 else None
+            if pages:
+                self._holds.append({
+                    "alloc": alloc, "d": f.data_group, "pool": f.pool,
+                    "pages": pages,
+                    "release_step": self._step_i + f.duration_steps})
+        elif f.kind == "client_disconnect":
+            self.cancel(f.rid)
+        elif f.kind == "chunk_slow":
+            self.metrics.chunk_slowdowns += 1
+            self._advance_clock(f.delay_s)
+        elif f.kind == "switch":
+            # scripted event, not a fault: lets a plan place chunk faults
+            if get_layout(f.target) is not self.active:
+                self.execute_switch(f.target)
+        # chunk_fail outside a switch: nothing to fail — ignored
+
+    def _release_expired_holds(self) -> None:
+        """Release expired pool_exhaust seizures — but only into the
+        allocator that handed the pages out; a switch replaces the
+        scheduler's allocators, and a hold dies with the old one."""
+        if not self._holds:
+            return
+        keep = []
+        for h in self._holds:
+            if self._step_i < h["release_step"]:
+                keep.append(h)
+            elif self.sched.alloc[h["d"]] is h["alloc"]:
+                h["alloc"].release(h["pool"], h["pages"])
+        self._holds = keep
+
+    def _advance_clock(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        if self._clock is not None:
+            adv = getattr(self._clock, "advance", None)
+            if adv is not None:
+                adv(dt)
+            return
+        self._clock_skip += dt
+
+    # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
     def step(self) -> None:
         self._step_i += 1
         if self.ecfg.idle_skip:
             self._skip_idle()
+        self._release_expired_holds()
+        if self._faults is not None:
+            for f in self._faults.poll(self._step_i, self.now()):
+                self._apply_fault(f)
         self.sched.admit(self.now())
+        if self.sched.deadline_due(self.now()):
+            # expiry finishes requests in place: drain the fused pipeline
+            # first so none has in-flight tokens
+            self.ex.drain_decode()
+            self.sched.expire_deadlines(self.now())
         # policy: sample once per iteration, between steps, through the
         # scheduler's queue snapshot (in-flight fused tokens count toward
         # the live-token load)
@@ -436,6 +630,7 @@ class MoebiusEngine:
             self._run_prefill()
             self._decode_step()
         self._charge_dispatches()
+        self._check_recoveries()
         self.metrics.pages_resident(sum(a.total_held()
                                         for a in self.sched.alloc))
         self.metrics.sample_mode(self.now(), self.active,

@@ -469,6 +469,13 @@ class Executor:
         self.switcher.advance(
             self._experts if self.cfg.is_moe else None, self.kv_flat)
 
+    def switch_abort(self):
+        """Abandon the chunked session (SwitchExecutor.abort): the active
+        layout, device decode state, and assembled packs are untouched —
+        decode never left the source buffers — so no _post_switch runs.
+        Returns the aborted attempt's SwitchStats."""
+        return self.switcher.abort()
+
     def switch_commit(self, target: LayoutSpec, live: list[Request]):
         """Dirty-page delta + commit; returns (new_alloc, new_caches, stats)."""
         (experts, self.kv_flat, alloc, caches,

@@ -155,21 +155,32 @@ class AsyncEngine:
     def generate(self, prompt, max_new_tokens: int = 16, *,
                  arrival_s: float | None = None, rid: int | None = None,
                  forced_len: int | None = None,
-                 slo_class: str = "interactive") -> TokenStream:
+                 slo_class: str = "interactive",
+                 max_time: float | None = None) -> TokenStream:
         """Stream tokens for one prompt as the engine produces them.
 
         Returns immediately; iterate the stream (or call `.tokens()`) to
         drive the event loop. `arrival_s=None` arrives at the current
         engine clock (real-time submission). Streaming callers default to
         the `interactive` SLO class (serving/qos.py) — batch traffic
-        should say so (`slo_class="batch"`)."""
+        should say so (`slo_class="batch"`). `max_time` is a per-request
+        deadline in engine-clock seconds from arrival: past it the request
+        finishes truncated with whatever it generated (DESIGN.md §12)."""
         if rid is None:
             rid = self._next_rid
         t = self.engine.now() if arrival_s is None else arrival_s
         req = Request(rid=rid, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, arrival_s=t,
-                      forced_len=forced_len, slo_class=str(slo_class))
+                      forced_len=forced_len, slo_class=str(slo_class),
+                      deadline_s=(t + max_time) if max_time is not None
+                      else None)
         return self.submit(req)
+
+    def cancel(self, rid: int, *, kind: str = "disconnect") -> bool:
+        """Cancel a live request (SSE client disconnect): the engine
+        finishes it immediately and frees its slot/pages. The stream stays
+        registered — it reads as finished with whatever was generated."""
+        return self.engine.cancel(rid, kind=kind)
 
     # ------------------------------------------------------------------
     # the event loop

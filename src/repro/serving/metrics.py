@@ -40,6 +40,19 @@ class ServeMetrics:
     preemptions: int = 0
     truncations: int = 0
     kv_pages_peak: int = 0
+    # fault tolerance (DESIGN.md §12): aborted switches, rank failures and
+    # their recoveries (a recovery completes when every hit request has
+    # re-prefilled; `steps` is the engine-iteration count that took, and
+    # `degraded` marks recoveries served while placement avoided the dead
+    # per-rank pool), plus the frontend/injection counters
+    switch_abort_events: list = field(default_factory=list)  # (t, dir, why)
+    rank_failure_events: list = field(default_factory=list)  # (t, d, rank, n)
+    recovery_events: list = field(default_factory=list)  # (t, steps, n, degr)
+    faults_injected: int = 0
+    pool_exhaust_events: int = 0
+    chunk_slowdowns: int = 0
+    client_disconnects: int = 0
+    deadline_truncations: int = 0
 
     def finish(self, req) -> None:
         self.records.append((req.rid, req.arrival_s, req.first_token_s,
@@ -68,6 +81,17 @@ class ServeMetrics:
     def switch(self, t: float, direction: str, pause_s: float,
                total_s: float) -> None:
         self.switch_events.append((t, direction, pause_s, total_s))
+
+    def switch_abort(self, t: float, direction: str, reason: str) -> None:
+        self.switch_abort_events.append((t, direction, reason))
+
+    def rank_failure(self, t: float, data_group: int, rank: int,
+                     n_hit: int) -> None:
+        self.rank_failure_events.append((t, data_group, rank, n_hit))
+
+    def recovery(self, t: float, steps: int, n: int,
+                 degraded: bool) -> None:
+        self.recovery_events.append((t, steps, n, degraded))
 
     def decode(self, tokens: int, substeps: int) -> None:
         self.decode_dispatches += 1
@@ -202,6 +226,19 @@ class ServeMetrics:
             "preemptions": self.preemptions,
             "truncations": self.truncations,
             "kv_pages_peak": self.kv_pages_peak,
+            "switch_aborts": len(self.switch_abort_events),
+            "rank_failures": len(self.rank_failure_events),
+            "recoveries": len(self.recovery_events),
+            "degraded_recoveries": sum(
+                1 for *_, degr in self.recovery_events if degr),
+            "recovery_steps_max": (
+                max(s for _, s, _, _ in self.recovery_events)
+                if self.recovery_events else 0),
+            "faults_injected": self.faults_injected,
+            "pool_exhaust_events": self.pool_exhaust_events,
+            "chunk_slowdowns": self.chunk_slowdowns,
+            "client_disconnects": self.client_disconnects,
+            "deadline_truncations": self.deadline_truncations,
             # per-class breakdown rides along; every flat key above is
             # unchanged (benches parse them positionally)
             "by_class": self.by_class(),

@@ -45,6 +45,12 @@ class Request:
     full_hash: int | None = None
     # finished early because the per-request page cap was reached
     truncated: bool = False
+    # client abandoned the request (SSE disconnect / scripted fault): the
+    # Scheduler finishes it immediately with whatever it generated
+    canceled: bool = False
+    # absolute virtual-clock deadline (frontend `max_time`): past it the
+    # Scheduler truncates the request with whatever it generated
+    deadline_s: float | None = None
     # fused-decode bookkeeping (engine decode_steps > 1): tokens dispatched
     # on device but not yet fetched, and the remaining-token budget the
     # DeviceDecodeState currently holds for this request's slot

@@ -181,6 +181,13 @@ class Scheduler:
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self._copies: list[CopyPages] = []
+        # degraded-mode placement (DESIGN.md §12): (data_group, rank)
+        # pools a rank failure killed — prefill placement under per-rank
+        # KV views skips them until the recovery revives the pool
+        self.dead_pools: set[tuple[int, int]] = set()
+        # set once any submitted request carries a deadline, so the
+        # per-iteration deadline scan costs nothing on deadline-free runs
+        self._deadlines_used = False
         # decisions of the CURRENT planning pass (Grow/Preempt/Truncate
         # from plan_decode / plan_fused+resolve_fused) — observability and
         # unit-test surface; executors read request state directly.
@@ -255,6 +262,8 @@ class Scheduler:
     # admission
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if getattr(req, "deadline_s", None) is not None:
+            self._deadlines_used = True
         self.pending.append(req)
 
     def _pick_group(self, r: Request, load: list) -> int:
@@ -391,6 +400,79 @@ class Scheduler:
         self.finish_request(r)
         self.metrics.truncations += 1
         return Truncate(r)
+
+    # ------------------------------------------------------------------
+    # degraded-mode placement + cancellation + deadlines (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def mark_pool_dead(self, d: int, rank: int) -> None:
+        """A rank failure killed (data_group, rank): per-rank prefill
+        placement avoids the pool until `revive_pool`."""
+        self.dead_pools.add((d, rank))
+
+    def revive_pool(self, d: int, rank: int) -> None:
+        """Recovery complete (or the rank was replaced): the pool takes
+        placements again."""
+        self.dead_pools.discard((d, rank))
+
+    def _remove_from_queues(self, r: Request) -> None:
+        if r in self.waiting:
+            self.waiting.remove(r)
+        if r in self.prefilling:
+            self.prefilling.remove(r)
+
+    def cancel_request(self, rid: int) -> Request | None:
+        """Client-side cancellation (SSE disconnect / scripted fault):
+        drop the request wherever it sits and finish it immediately with
+        whatever it generated, releasing pages and slot through the same
+        path every finish uses. Requires a drained pipeline (inflight ==
+        0) — the engine drains before delegating. Returns the request,
+        or None when the rid is unknown or already finished."""
+        r = None
+        for q in self.pending:
+            if q.rid == rid:
+                r = q
+                self.pending.remove(q)
+                break
+        if r is None:
+            pools = (self.waiting + self.prefilling
+                     + list(self.running.values()))
+            r = next((q for q in pools if q.rid == rid), None)
+        if r is None or r.state is State.FINISHED:
+            return None
+        assert r.inflight == 0, "cancelling a request with in-flight tokens"
+        r.canceled = True
+        self._remove_from_queues(r)
+        self.clear_slot(r)
+        self.finish_request(r)
+        return r
+
+    def deadline_due(self, now: float) -> bool:
+        """Any live request past its `max_time` deadline? Cheap gate the
+        engine checks before draining the pipeline for expiry."""
+        if not self._deadlines_used:
+            return False
+        return any(r.deadline_s is not None and now >= r.deadline_s
+                   for r in (self.waiting + self.prefilling
+                             + list(self.running.values())))
+
+    def expire_deadlines(self, now: float) -> list[Truncate]:
+        """Finish every live request past its deadline, truncated with
+        whatever it generated — a request with `max_time` can stall but
+        never hang. Skips requests with in-flight fused tokens (the
+        engine drains first, so only a mid-drain race could leave any)."""
+        out = []
+        for r in (self.waiting + self.prefilling
+                  + list(self.running.values())):
+            if (r.deadline_s is None or now < r.deadline_s
+                    or r.inflight != 0):
+                continue
+            r.truncated = True
+            self._remove_from_queues(r)
+            self.clear_slot(r)
+            self.finish_request(r)
+            self.metrics.deadline_truncations += 1
+            out.append(Truncate(r))
+        return out
 
     def handle_starvation(self, starved: list, exclude=()) -> list:
         """Pool-dry requests that cannot even be budget-clamped forward.
@@ -573,16 +655,23 @@ class Scheduler:
         if self.spec.kv_per_rank:
             load = self._ep_rank_load(d)
             cap = self._ladder()[-1] // self.G
+            # degraded mode (DESIGN.md §12): a failed rank's pool takes no
+            # new placements while its recovery re-prefills — surviving
+            # ranks keep serving with the same per-rank cap
+            ranks = [g for g in range(self.G)
+                     if (d, g) not in self.dead_pools]
+            if not ranks:
+                return None
             hits = None
             if self.prefix is not None:
                 self._prefix_keys(r)
                 # prefer the rank whose pool caches the longest prefix
                 # (each pool's hit is computed ONCE and reused below)
-                hits = {g: self._pool_hit(d, g, r) for g in range(self.G)}
-                order = sorted(range(self.G),
+                hits = {g: self._pool_hit(d, g, r) for g in ranks}
+                order = sorted(ranks,
                                key=lambda g: (-hits[g][1], load[g], g))
             else:
-                order = sorted(range(self.G), key=lambda g: (load[g], g))
+                order = sorted(ranks, key=lambda g: (load[g], g))
             for g in order:
                 if load[g] >= cap:
                     continue

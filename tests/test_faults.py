@@ -1,0 +1,249 @@
+"""Fault tolerance (DESIGN.md §12): deterministic injection, degraded-mode
+scheduling, cancellation/deadlines, and single-device switch abort.
+
+The injector/scheduler halves run device-free (plain Python, like
+tests/test_scheduler.py); the abort test drives a real engine on a 1x1
+mesh — chunked switches work there (tests/test_system.py), so abort's
+"source stays live and byte-identical" contract is checkable in tier 1.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.faults import Fault, FaultInjector, FaultPlan
+from repro.serving.metrics import ServeMetrics
+from repro.serving.paging import PagePoolAllocator
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: triggers, ordering, switch-attempt matching
+# ---------------------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault("melt_cpu", at_step=1)
+    with pytest.raises(ValueError):
+        Fault("rank_fail")                         # no trigger
+    with pytest.raises(ValueError):
+        Fault("rank_fail", at_step=1, at_s=2.0)    # two triggers
+    with pytest.raises(TypeError):
+        FaultPlan(("rank_fail",))                  # not a Fault
+
+
+def test_injector_fires_once_in_plan_order():
+    plan = FaultPlan((Fault("rank_fail", at_step=5),
+                      Fault("client_disconnect", at_s=2.0, rid=1),
+                      Fault("pool_exhaust", at_step=3)))
+    inj = FaultInjector(plan)
+    assert inj.poll(1, 0.0) == []
+    # both step-3 and t=2.0 due together: plan order, not trigger order
+    due = inj.poll(3, 2.5)
+    assert [f.kind for f in due] == ["client_disconnect", "pool_exhaust"]
+    # a fired fault never fires again, late triggers still fire
+    assert [f.kind for f in inj.poll(9, 9.0)] == ["rank_fail"]
+    assert inj.poll(10, 10.0) == [] and inj.done
+    assert [f.kind for _, _, f in inj.log] == \
+        ["client_disconnect", "pool_exhaust", "rank_fail"]
+
+
+def test_injector_matches_switch_attempt():
+    """switch_chunk faults fire only at their chunk of their attempt."""
+    inj = FaultInjector((Fault("chunk_fail", switch_chunk=1),
+                         Fault("chunk_slow", switch_chunk=0,
+                               switch_index=1, delay_s=0.5)))
+    assert inj.begin_switch() == 0
+    assert inj.poll_switch(0) == []
+    assert [f.kind for f in inj.poll_switch(1)] == ["chunk_fail"]
+    assert inj.begin_switch() == 1
+    assert [f.kind for f in inj.poll_switch(0)] == ["chunk_slow"]
+    assert inj.done
+    # wrapping an injector (engine re-wrap) is idempotent
+    assert len(FaultInjector(inj).plan) == 2
+
+
+# ---------------------------------------------------------------------------
+# elastic.plan_rescale: expert divisibility (the gcd-bug regression)
+# ---------------------------------------------------------------------------
+
+def test_plan_rescale_rejects_indivisible_experts():
+    """gcd(E, G) == 0 is only true when both are 0 — the old check
+    accepted every mesh. E=8 must reject G=3 (neither 8%3 nor 3%8 is 0)
+    and accept G=4 (8%4==0) and G=16 (16%8==0, replicated subgroups)."""
+    import types
+
+    from repro.distributed.elastic import plan_rescale
+    cfg = types.SimpleNamespace(num_heads=0, num_experts=8, is_moe=True)
+    bad = plan_rescale(cfg, {"model": 8}, {"model": 3}, "ep")
+    assert not bad.compatible and "experts" in bad.reason
+    assert plan_rescale(cfg, {"model": 8}, {"model": 4}, "ep").compatible
+    assert plan_rescale(cfg, {"model": 8}, {"model": 16}, "ep").compatible
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: degraded-mode placement, cancellation, deadlines (device-free)
+# ---------------------------------------------------------------------------
+
+from tests.test_scheduler import make_sched, req  # noqa: E402
+
+
+def test_dead_pool_placement_avoidance_and_revive():
+    """Per-rank (EP) placement skips dead pools; revive restores them."""
+    s = make_sched(G=2, per_rank=True, ladder=(4, 8))
+    s.mark_pool_dead(0, 0)
+    for i in range(4):
+        s.submit(req(i))
+    s.admit(t=0.0)
+    started = s.start_prefills()
+    assert started and all(d.req.owner_rank == 1 for d in started)
+    # every rank dead: nothing starts, requests stay waiting
+    s.mark_pool_dead(0, 1)
+    s.submit(req(10))
+    s.admit(t=0.0)
+    assert s.start_prefills() == []
+    assert any(r.rid == 10 for r in s.waiting)
+    # revive: placement resumes (and balances onto the emptier pool 0)
+    s.revive_pool(0, 0)
+    s.revive_pool(0, 1)
+    again = s.start_prefills()
+    assert any(d.req.rid == 10 for d in again)
+    assert next(d for d in again if d.req.rid == 10).req.owner_rank == 0
+
+
+def test_cancel_request_conserves_pages():
+    """Cancel from each queue position; pages/refcounts conserved."""
+    s = make_sched(npages=17)
+    for i in range(3):
+        s.submit(req(i, plen=6))
+    s.admit(t=0.0)
+    s.start_prefills()
+    held_before = s.alloc[0].total_held()
+    assert held_before > 0
+    r = s.cancel_request(1)
+    assert r is not None and r.canceled and r.state is State.FINISHED
+    assert r.pages == [] and s.alloc[0].total_held() < held_before
+    s.alloc[0].check()
+    # unknown rid and already-finished rid are both None
+    assert s.cancel_request(99) is None
+    assert s.cancel_request(1) is None
+    # cancel straight out of pending (never admitted)
+    s.submit(req(7, arrival=100.0))
+    assert s.cancel_request(7).rid == 7 and not s.pending
+    s.alloc[0].check()
+
+
+def test_expire_deadlines_truncates_past_due():
+    s = make_sched()
+    a, b = req(0, plen=4), req(1, plen=4)
+    a.deadline_s = 5.0
+    s.submit(a)
+    s.submit(b)
+    assert s._deadlines_used
+    s.admit(t=0.0)
+    s.start_prefills()
+    assert not s.deadline_due(4.9)
+    assert s.expire_deadlines(4.9) == []
+    assert s.deadline_due(5.0)
+    out = s.expire_deadlines(5.0)
+    assert [d.req.rid for d in out] == [0]
+    assert a.truncated and a.state is State.FINISHED
+    assert s.metrics.deadline_truncations == 1
+    # b has no deadline: untouched, and the gate goes quiet again
+    assert b.state is not State.FINISHED
+    assert not s.deadline_due(100.0)
+
+    # a request with in-flight fused tokens is skipped (engine drains
+    # before expiry; this is the mid-drain-race backstop)
+    c = req(2, plen=4)
+    c.deadline_s = 1.0
+    s.submit(c)
+    s.admit(t=10.0)
+    c.inflight = 2
+    assert s.expire_deadlines(10.0) == []
+    c.inflight = 0
+    assert [d.req.rid for d in s.expire_deadlines(10.0)] == [2]
+    s.alloc[0].check()
+
+
+# ---------------------------------------------------------------------------
+# single-device engine: chunked-switch abort leaves the source byte-intact
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, mesh, faults=None):
+    from repro.core.policy import PolicyConfig
+    from repro.serving.engine import EngineConfig, MoebiusEngine
+    from repro.serving.kvcache import CacheConfig
+    pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    return MoebiusEngine(cfg, mesh,
+                         CacheConfig(page_size=4, pages_ep=64,
+                                     max_pages_per_req=16),
+                         ecfg=EngineConfig(start_layout="tp", ladder=(4, 8),
+                                           prefill_chunk=8, temperature=0.0,
+                                           policy=pol, chunk_layers=1,
+                                           faults=faults))
+
+
+def _reqs(n=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200, 5)),
+                    max_new_tokens=12, arrival_s=0.0) for i in range(n)]
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        eng.step()
+        i += 1
+        assert i < 1000, "engine made no progress"
+    eng.ex.drain_decode()
+    return {r.rid: list(r.output) for r in eng.finished}
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_chunked_switch_abort_conserves_and_stays_byte_identical(
+        tiny_moe, mesh11):
+    """A chunk_fail at boundary 0 aborts the scripted tp->ep switch: the
+    run completes ON TP, outputs byte-identical to a never-switching run,
+    allocator refcounts conserved, abort + backoff recorded."""
+    base = _drive(_engine(tiny_moe, mesh11), _reqs())
+
+    plan = FaultPlan((Fault("switch", at_step=4, target="ep"),
+                      Fault("chunk_fail", switch_chunk=0)))
+    eng = _engine(tiny_moe, mesh11, faults=plan)
+    out = _drive(eng, _reqs())
+
+    assert out == base, "abort changed surviving outputs"
+    assert str(eng.active) == "tp", "abort must leave the source active"
+    assert eng.switch_records == [], "aborted attempt is not a switch"
+    s = eng.metrics.summary()
+    assert s["switches"] == 0 and s["switch_aborts"] == 1
+    assert eng.coord.backoff_mult > 1.0 and eng.coord.aborted == 1
+    assert eng._faults.done
+    eng.alloc[0].check()
+    eng.clear_prefix_cache()
+    assert eng.alloc[0].total_free() == 63     # every page back home
+
+
+def test_scripted_switch_commit_resets_backoff(tiny_moe, mesh11):
+    """A later clean switch commits, resets the abort backoff, and stays
+    byte-identical (switch-invariance holds through an earlier abort)."""
+    base = _drive(_engine(tiny_moe, mesh11), _reqs())
+    plan = FaultPlan((Fault("switch", at_step=4, target="ep"),
+                      Fault("chunk_fail", switch_chunk=0, switch_index=0),
+                      Fault("switch", at_step=8, target="ep")))
+    eng = _engine(tiny_moe, mesh11, faults=plan)
+    out = _drive(eng, _reqs())
+    assert out == base
+    assert str(eng.active) == "ep"
+    s = eng.metrics.summary()
+    assert s["switches"] == 1 and s["switch_aborts"] == 1
+    assert eng.coord.backoff_mult == 1.0       # reset by the commit
+    for a in eng.alloc:
+        a.check()

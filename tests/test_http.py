@@ -183,3 +183,86 @@ def test_bad_request_is_a_400_not_a_crash(tiny_dense, mesh11):
     status, body, status2 = asyncio.run(run())
     assert "400" in status and "error" in body
     assert "400" in status2
+
+
+# ---------------------------------------------------------------------------
+# robustness (DESIGN.md §12): client disconnect + per-request deadline
+# ---------------------------------------------------------------------------
+
+def test_sse_client_disconnect_cancels_request(tiny_dense, mesh11):
+    """A client that drops its socket mid-stream gets its request
+    CANCELLED: the slot/pages go back through the normal finish path, a
+    concurrent stream finishes untouched, and /v1/metrics counts it."""
+    async def run():
+        fe = _mk(tiny_dense, mesh11)
+        srv = await HttpFrontend(fe).start()
+        try:
+            # long-running victim stream: read 2 tokens, then RST the
+            # socket (abort() skips the FIN handshake, so the server's
+            # next drain/write raises instead of buffering silently)
+            reader, writer = await asyncio.open_connection(srv.host,
+                                                           srv.port)
+            body = json.dumps({"prompt": _prompt(seed=4),
+                               "max_new_tokens": 64}).encode()
+            writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(body)}\r\n\r\n").encode()
+                         + body)
+            await writer.drain()
+            got = 0
+            while got < 2:
+                line = (await reader.readline()).strip()
+                if line.startswith(b"data: ") and line != b"data: [DONE]":
+                    got += 1
+            writer.transport.abort()
+
+            # a second, well-behaved stream must finish normally
+            _, _, payload = await _request(
+                srv, "POST", "/v1/generate",
+                {"prompt": _prompt(seed=5), "max_new_tokens": 6})
+
+            # let the abandoned handler observe the dead socket and
+            # cancel; it pumps cooperatively with us
+            for _ in range(200):
+                if fe.metrics.client_disconnects:
+                    break
+                await asyncio.sleep(0)
+            return (_sse_tokens(payload), fe.metrics.summary(),
+                    fe.engine.sched.finished, fe.engine.alloc)
+        finally:
+            await srv.close()
+
+    toks, summary, finished, alloc = asyncio.run(run())
+    assert len(toks) == 6
+    assert summary["client_disconnects"] == 1
+    canceled = [r for r in finished if r.canceled]
+    assert len(canceled) == 1 and len(canceled[0].output) < 64
+    for a in alloc:
+        a.check()                      # refcounts conserved after cancel
+
+
+def test_max_time_deadline_truncates(tiny_dense, mesh11):
+    """`max_time` bounds a request in engine-clock seconds: past the
+    deadline it finishes truncated with whatever it generated, and the
+    truncation is counted in /v1/metrics."""
+    async def run():
+        fe = _mk(tiny_dense, mesh11)     # VirtualClock + step_dt=0.01
+        srv = await HttpFrontend(fe).start()
+        try:
+            status, _, body = await _request(
+                srv, "POST", "/v1/generate",
+                {"prompt": _prompt(seed=6), "max_new_tokens": 5000,
+                 "stream": False, "max_time": 0.25})
+            _, _, mbody = await _request(srv, "GET", "/v1/metrics")
+        finally:
+            await srv.close()
+        return status, json.loads(body), json.loads(mbody), fe
+
+    status, out, summary, fe = asyncio.run(run())
+    assert "200" in status
+    # admission clamps 5000 to the page cap (57 here); the deadline must
+    # cut even below that
+    assert 0 < out["n"] < 57, "deadline must cut the request short"
+    assert summary["deadline_truncations"] == 1
+    r = fe.engine.sched.finished[0]
+    assert r.truncated and r.finish_s >= r.deadline_s
+    fe.engine.alloc[0].check()

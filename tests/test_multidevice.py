@@ -526,6 +526,83 @@ print("OK")
 """, timeout=1200)
 
 
+FAULT_PHASES = ("before", "chunk0", "chunk1", "after")
+
+
+@pytest.mark.parametrize("phase", FAULT_PHASES)
+def test_rank_failure_at_every_switch_phase(phase):
+    """Robustness acceptance (DESIGN.md §12): a rank failure BEFORE a
+    chunked tp->ep switch, AT each chunk boundary DURING it (the switch
+    must abort, source layout stays live), and AFTER it commits (per-rank
+    EP failure -> degraded-mode placement + recovery) — in every phase the
+    full generated text of every request is byte-identical to a
+    never-faulted, never-switched baseline."""
+    run_multidevice(COMMON + f"""
+phase = {phase!r}
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.faults import Fault, FaultPlan
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+P = 6                                    # original prompt length
+def reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200, P)),
+                    max_new_tokens=10, arrival_s=0.0) for i in range(6)]
+PLANS = {{
+    # TP failure while no switch is staged; the later switch commits
+    "before": (Fault("rank_fail", at_step=3, data_group=0, rank=1),
+               Fault("switch", at_step=8, target="ep")),
+    # failure at a chunk boundary of the in-flight switch: abort first
+    # (SwitchExecutor.abort), then the normal re-prefill recovery
+    "chunk0": (Fault("switch", at_step=4, target="ep"),
+               Fault("rank_fail", switch_chunk=0, switch_index=0,
+                     data_group=0, rank=1)),
+    "chunk1": (Fault("switch", at_step=4, target="ep"),
+               Fault("rank_fail", switch_chunk=1, switch_index=0,
+                     data_group=0, rank=1)),
+    # per-rank EP failure after the commit: degraded-mode placement
+    "after": (Fault("switch", at_step=4, target="ep"),
+              Fault("rank_fail", at_step=12, data_group=0, rank=1)),
+}}
+def run(plan=None):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout="tp", ladder=(4, 8), prefill_chunk=8, temperature=0.0,
+        policy=pol, seed=0, chunk_layers=1,
+        faults=None if plan is None else FaultPlan(plan)))
+    for r in reqs(): eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        eng.step(); i += 1
+        assert i < 800
+    # generated text = tokens teacher-forced back into the prompt at
+    # recovery (everything past the original prompt) + remaining output
+    return eng, {{r.rid: list(r.prompt[P:]) + list(r.output)
+                  for r in eng.finished}}
+_, base = run(None)                      # never-faulted, never-switched
+eng, out = run(PLANS[phase])
+assert out == base, (phase, out, base)
+s = eng.metrics.summary()
+assert s["rank_failures"] == 1 and eng._faults.done
+if phase in ("chunk0", "chunk1"):
+    # the in-flight switch aborted; the source layout never moved
+    assert str(eng.active) == "tp" and s["switches"] == 0
+    assert s["switch_aborts"] == 1 and eng.coord.backoff_mult > 1.0
+else:
+    assert str(eng.active) == "ep" and s["switches"] == 1
+    assert s["switch_aborts"] == 0
+if phase == "after":
+    # EP is per-rank: the failure degrades one pool, recovery revives it
+    assert s["degraded_recoveries"] >= 1
+    assert not eng.sched.dead_pools
+for al in eng.alloc:
+    al.check()
+print("OK")
+""", timeout=1200)
+
+
 def test_ssm_serve_step_matches_reference():
     run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np

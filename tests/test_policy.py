@@ -226,3 +226,65 @@ def test_observe_queues_threads_attainment_and_classes():
                       per_class=(("interactive", 10, 0),))
     d = c.observe_queues(q, 10**9, attainment=0.2)
     assert d.switch and d.target == TP
+
+
+# ---------------------------------------------------------------------------
+# abort backoff (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def test_abort_backoff_grows_effective_cooldown():
+    """Every aborted switch multiplies the effective cooldown by
+    backoff_base, capped at backoff_max; observe() honors it."""
+    c, clock = _coord(active=TP, cooldown=5.0)
+    assert c.effective_cooldown_s == 5.0
+    clock.t = 10.0
+    c.switch_aborted(TP)
+    assert c.aborted == 1 and c.active == TP
+    assert c.effective_cooldown_s == 10.0          # base 2.0
+    c.switch_aborted(TP)
+    assert c.effective_cooldown_s == 20.0
+    # cooldown re-armed at the abort: a burst inside the backed-off
+    # window holds even past the base cooldown
+    clock.t = 10.0 + 12.0                          # > 5 s, < 20 s
+    assert not c.observe(150, 0, 10**9).switch
+    clock.t = 10.0 + 21.0
+    assert c.observe(150, 0, 10**9).switch
+
+
+def test_abort_backoff_caps_and_resets_on_completion():
+    c, clock = _coord(active=TP, cooldown=1.0)
+    for _ in range(20):
+        c.switch_aborted(TP)
+    assert c.backoff_mult == c.policy.backoff_max  # capped, not 2**20
+    c.switch_completed(EP)
+    assert c.backoff_mult == 1.0 and c.active == EP
+
+
+def test_abort_backoff_disabled_by_base_le_1():
+    cfg = get_config("qwen3-235b-a22b")
+    c = SwitchCoordinator(cfg, 8,
+                          PolicyConfig(backoff_base=1.0, cooldown_s=5.0),
+                          active=TP, clock=FakeClock())
+    c.switch_aborted(TP)
+    assert c.effective_cooldown_s == 5.0
+
+
+def test_mid_switch_reversal_follows_scorer():
+    """The regret check: reversal iff the scorer prefers the SOURCE at the
+    instantaneous count; static configs never reverse."""
+    from repro.serving.scheduler import QueueSnapshot
+
+    def q(n):
+        return QueueSnapshot(in_flight=n, live_tokens=0, pending=0,
+                             waiting=0, prefilling=0, running=n)
+
+    c, _ = _coord(active=TP, t_high=100, t_low=80)
+    # migrating tp -> ep while load collapsed below t_low: reverse
+    assert c.mid_switch_reversal(TP, EP, q(10), 10**9)
+    # load still above t_high: the target is right, keep migrating
+    assert not c.mid_switch_reversal(TP, EP, q(150), 10**9)
+    # dead-band: no verdict, no reversal
+    assert not c.mid_switch_reversal(TP, EP, q(90), 10**9)
+    # static config: never
+    s, _ = _coord(active=TP, t_high=10**9, t_low=-1)
+    assert not s.mid_switch_reversal(TP, EP, q(1), 10**9)

@@ -62,7 +62,7 @@ def test_scheduler_imports_no_jax():
     in jax, directly or transitively."""
     code = ("import sys; import repro.serving.scheduler; "
             "import repro.serving.paging; import repro.serving.request; "
-            "import repro.serving.qos; "
+            "import repro.serving.qos; import repro.serving.faults; "
             "assert 'jax' not in sys.modules, 'scheduler imported jax'; "
             "print('ok')")
     import os
