@@ -1,0 +1,194 @@
+"""Elastic world-size autoscaling bench (DESIGN.md §13).
+
+``--smoke`` (the CI gate, BENCH_elastic.json) replays ONE deterministic
+quiet-then-burst trace under a ``VirtualClock`` against an engine whose
+resident layouts span two device counts (tp on the full 4-device mesh,
+tp@2 on half of it):
+
+  * during the quiet head of the trace a scripted switch SHRINKS the
+    serving world tp -> tp@2 — live requests migrate through the chunked
+    cross-world (host-bounce) path, decode continues on the source
+    between chunks;
+  * when the burst lands, a second scripted switch GROWS tp@2 -> tp —
+    the mid-burst KV set migrates back up to the full world.
+
+Gates (vs. a static full-world run of the SAME trace):
+  1. zero dropped requests, and every request's tokens byte-identical to
+     the static run (greedy outputs are resize-invariant);
+  2. recovered throughput: burst-phase decode throughput after the grow
+     >= ``THROUGHPUT_FLOOR`` x the static run's (the migration pause is
+     bounded);
+  3. page conservation: ``PagePoolAllocator.check()`` passes on every
+     allocator of both runs;
+  4. both switches committed through the cross-world path
+     (``cross_world_switches == 2``, zero aborts).
+"""
+from __future__ import annotations
+
+import time
+
+# virtual seconds charged per engine iteration (event-loop step_dt)
+STEP_DT = 0.05
+# gate 2: elastic burst throughput >= this fraction of the static run's
+THROUGHPUT_FLOOR = 0.9
+# the burst's first rid (rids below are the quiet head)
+BURST_RID0 = 3
+# scripted timeline (engine iterations): shrink while quiet, grow after
+# the burst has arrived (the burst lands at virtual t=2.0 ~= step 40)
+SHRINK_STEP = 10
+GROW_STEP = 44
+
+
+def _trace(seed: int = 0):
+    """Quiet head (3 long-running requests) + a 12-request burst at
+    virtual t=2.0: the quiet requests are still decoding at BOTH resizes,
+    so live KV migrates down AND back up."""
+    import numpy as np
+
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+
+    def prompt():
+        return [int(x) for x in rng.integers(5, 500,
+                                             int(rng.integers(8, 15)))]
+
+    reqs = [Request(rid=i, prompt=prompt(), max_new_tokens=50,
+                    arrival_s=0.05 * i, slo_class="batch")
+            for i in range(BURST_RID0)]
+    reqs += [Request(rid=BURST_RID0 + i, prompt=prompt(),
+                     max_new_tokens=32, arrival_s=2.0 + 0.02 * i,
+                     slo_class="batch")
+             for i in range(12)]
+    return reqs
+
+
+def _resize_plan():
+    from repro.serving.faults import Fault, FaultPlan
+    return FaultPlan((
+        Fault("switch", at_step=SHRINK_STEP, target="tp@2"),
+        Fault("switch", at_step=GROW_STEP, target="tp"),
+    ))
+
+
+def _run(cfg, mesh, reqs, plan):
+    import copy
+
+    from benchmarks.common import make_engine
+    from repro.serving.frontend import AsyncEngine, VirtualClock
+    from repro.serving.workloads import replay
+
+    eng = make_engine(cfg, mesh, ladder=(4, 8), page=8, pages_ep=64,
+                      maxp=16, prefill_chunk=16, chunk_layers=1,
+                      clock=VirtualClock(), faults=plan,
+                      layouts=("tp", "ep", "tp@2"))
+    eng.warmup()
+    fe = AsyncEngine(eng, step_dt=STEP_DT)
+    streams = replay(fe, copy.deepcopy(reqs))
+    summary = fe.run_until_complete()
+    assert all(st.finished for st in streams.values())
+    outputs = {rid: st.drain_available() for rid, st in streams.items()}
+    for a in eng.sched.alloc:
+        a.check()                      # gate 3: page conservation
+    return eng, outputs, summary
+
+
+def _burst_throughput(eng) -> float:
+    """Decode throughput over the burst cohort: tokens / (last finish -
+    first token), in virtual seconds — the post-grow serving rate."""
+    recs = [r for r in eng.metrics.records if r[0] >= BURST_RID0]
+    toks = sum(n for *_, n in recs)
+    t0 = min(f for _, _, f, _, _ in recs)
+    t1 = max(fin for *_, fin, _ in recs)
+    return toks / max(t1 - t0, 1e-9)
+
+
+def smoke_rows(seed: int = 0):
+    from benchmarks.common import bench_cfg
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 4), ("data", "model"))
+    cfg = bench_cfg()                  # 2 layers -> 2 chunks per resize
+    reqs = _trace(seed)
+
+    beng, base_out, base_s = _run(cfg, mesh, reqs, None)
+    seng, el_out, el_s = _run(cfg, mesh, reqs, _resize_plan())
+
+    ok_bytes = el_out == base_out and len(el_out) == len(reqs)
+    ok_drops = (el_s["n"] == len(reqs) and base_s["n"] == len(reqs)
+                and el_s["preemptions"] == 0)
+    ok_switch = (el_s["cross_world_switches"] == 2
+                 and el_s["switches"] == 2 and el_s["switch_aborts"] == 0)
+    tp_el = _burst_throughput(seng)
+    tp_base = _burst_throughput(beng)
+    ratio = tp_el / max(tp_base, 1e-9)
+    ok_tput = ratio >= THROUGHPUT_FLOOR
+
+    rows = [
+        ("elastic.smoke.n_requests", float(len(reqs)),
+         f"quiet={BURST_RID0};burst={len(reqs) - BURST_RID0}"),
+        ("elastic.smoke.byte_identity_gate", float(ok_bytes),
+         f"outputs_byte_identical={ok_bytes};zero_drops={ok_drops};"
+         f"preemptions={el_s['preemptions']}"),
+        ("elastic.smoke.cross_world_gate", float(ok_switch),
+         f"cross_world_switches={el_s['cross_world_switches']};"
+         f"switches={el_s['switches']};aborts={el_s['switch_aborts']}"),
+        ("elastic.smoke.burst_throughput_tok_s", tp_el,
+         f"static={tp_base:.1f};ratio={ratio:.3f};"
+         f"floor={THROUGHPUT_FLOOR}"),
+        ("elastic.smoke.switch_pause_mean_s",
+         float(el_s["switch_pause_mean_s"]),
+         f"switch_total_mean_s={el_s['switch_total_mean_s']:.4f}"),
+    ]
+    ok = ok_bytes and ok_drops and ok_switch and ok_tput
+    rows.append(("elastic.smoke.gate", float(ok), f"elastic_gate={ok}"))
+    return rows
+
+
+def run(smoke: bool = False, seed: int = 0):
+    if smoke:
+        return smoke_rows(seed=seed)
+    rows = []
+    for s in range(2):
+        rows.extend(smoke_rows(seed=s))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _bootstrap import ensure_env_and_path
+    ensure_env_and_path()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: scripted quiet shrink tp->tp@2 + "
+                         "burst grow tp@2->tp under a VirtualClock; "
+                         "outputs byte-identical to a static full-world "
+                         "run, zero drops, pages conserved, burst "
+                         "throughput >= 0.9x static; writes "
+                         "BENCH_elastic.json")
+    ap.add_argument("--json", default="BENCH_elastic.json",
+                    help="JSON artifact path (a copy always lands in the "
+                         "repo root as BENCH_elastic.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows = list(run(smoke=args.smoke, seed=args.seed))
+    print("name,value,derived")
+    ok = not args.smoke
+    for nm, v, derived in rows:
+        print(f"{nm},{v:.4f},{derived}", flush=True)
+        if nm == "elastic.smoke.gate" and "elastic_gate=True" in derived:
+            ok = True
+    from benchmarks.common import write_bench_json
+    write_bench_json({
+        "benchmark": "elastic", "smoke": args.smoke,
+        "unix_time": time.time(),
+        "rows": [{"name": nm, "value": v, "derived": derived}
+                 for nm, v, derived in rows]}, args.json, "elastic")
+    if not ok:
+        raise SystemExit("elastic smoke gate FAILED (see rows above)")
+
+
+if __name__ == "__main__":
+    main()

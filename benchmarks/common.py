@@ -35,20 +35,21 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
                 time_scale=1.0, chunk_layers=0, decode_steps=1,
                 attn_backend=None, prefix_cache=True, clock=None,
                 mixed_batch=True, token_budget=0, dispatch_dt=0.0,
-                qos=True, faults=None):
+                qos=True, faults=None, layouts=None):
     from repro.core.policy import PolicyConfig
     from repro.serving.engine import EngineConfig, MoebiusEngine
     from repro.serving.kvcache import CacheConfig
     pol = policy or PolicyConfig(t_high=10**9, t_low=-1, cooldown_s=10**9)
     cc = CacheConfig(page_size=page, pages_ep=pages_ep,
                      max_pages_per_req=maxp)
+    kw = {} if layouts is None else {"layouts": tuple(layouts)}
     return MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
         start_layout=start, ladder=ladder, prefill_chunk=prefill_chunk,
         temperature=0.0, policy=pol, seed=seed, time_scale=time_scale,
         chunk_layers=chunk_layers, decode_steps=decode_steps,
         attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock,
         mixed_batch=mixed_batch, token_budget=token_budget,
-        dispatch_dt=dispatch_dt, qos=qos, faults=faults))
+        dispatch_dt=dispatch_dt, qos=qos, faults=faults, **kw))
 
 
 def write_bench_json(payload: dict, path: str | None, name: str) -> None:

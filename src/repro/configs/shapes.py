@@ -29,6 +29,20 @@ SHAPES = {
     "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
 }
 
+# chip count the global batches above assume (the single-pod production
+# mesh); smaller worlds scale proportionally via shape_for_chips
+PRODUCTION_CHIPS = 256
+
+
+def shape_for_chips(shape: ShapeSpec, chips: int) -> ShapeSpec:
+    """Scale a shape's global batch to a sub-mesh run (elastic world
+    sizes, DESIGN.md §13): the per-chip batch is the invariant, so an
+    in-process run on fewer devices keeps the same local shapes."""
+    if chips >= PRODUCTION_CHIPS:
+        return shape
+    gb = max(1, shape.global_batch * chips // PRODUCTION_CHIPS)
+    return ShapeSpec(shape.name, shape.seq_len, gb, shape.kind)
+
 # archs for which long_500k is runnable (sub-quadratic decode state)
 LONG_OK_FAMILIES = ("ssm", "hybrid")
 

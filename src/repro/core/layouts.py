@@ -65,22 +65,27 @@ class LayoutSpec(str):
     # NOTE: no __slots__ — CPython forbids nonempty __slots__ on str
     # subclasses; immutability is enforced by the __setattr__ override.
     _FIELDS = ("slots_sharded", "kv_view", "dense_tp", "expert_kind",
-               "expert_full_mesh", "description")
+               "expert_full_mesh", "world", "description")
 
     def __new__(cls, name: str, *, slots_sharded: bool, kv_view: str,
                 dense_tp: bool, expert_kind: str, expert_full_mesh: bool,
-                description: str = ""):
+                world: int | None = None, description: str = ""):
         if kv_view not in ("ep", "tp"):
             raise ValueError(f"kv_view must be 'ep' or 'tp', got {kv_view!r}")
         if expert_kind not in ("ep", "tp"):
             raise ValueError(f"expert_kind must be 'ep' or 'tp', "
                              f"got {expert_kind!r}")
+        if world is not None and int(world) < 1:
+            raise ValueError(f"world must be a positive device count, "
+                             f"got {world!r}")
         self = super().__new__(cls, name)
         object.__setattr__(self, "slots_sharded", slots_sharded)
         object.__setattr__(self, "kv_view", kv_view)
         object.__setattr__(self, "dense_tp", dense_tp)
         object.__setattr__(self, "expert_kind", expert_kind)
         object.__setattr__(self, "expert_full_mesh", expert_full_mesh)
+        object.__setattr__(self, "world",
+                           int(world) if world is not None else None)
         object.__setattr__(self, "description", description)
         return self
 
@@ -89,6 +94,29 @@ class LayoutSpec(str):
 
     def __repr__(self) -> str:  # the name; attrs via vars-like helper
         return f"LayoutSpec({str.__repr__(self)})"
+
+    # -- world (device-count) dimension -------------------------------------
+    @property
+    def base_name(self) -> str:
+        """Registered name without the `@world` size suffix."""
+        return str(self).partition("@")[0]
+
+    @property
+    def base(self) -> "LayoutSpec":
+        """The registered unsized spec this layout derives from. Sized specs
+        are distinct str values ("tp@4" != "tp"), so code that compares
+        layouts against `TP`/`EP` must normalize through this first."""
+        return self if self.world is None else get_layout(self.base_name)
+
+    def sized(self, world: int | None) -> "LayoutSpec":
+        """This layout pinned to a device count: `TP.sized(4)` is `tp@4`.
+
+        `world=None` (or the spec's own world) returns the spec unchanged;
+        anything else resolves through the registry so sized variants stay
+        interned value objects like their bases."""
+        if world is None or world == self.world:
+            return self
+        return get_layout(f"{self.base_name}@{int(world)}")
 
     # -- batch/slot geometry ------------------------------------------------
     @property
@@ -162,18 +190,44 @@ def register_layout(spec: LayoutSpec) -> LayoutSpec:
 
 
 def get_layout(name) -> LayoutSpec:
-    """Resolve a layout name (or spec) to the registered spec instance."""
+    """Resolve a layout name (or spec) to the registered spec instance.
+
+    Sized names (`"tp@4"`) resolve lazily: the first lookup derives a spec
+    from the registered base layout with `world=4` and interns it, so the
+    registry can hold the same parallelism scheme at several device counts
+    (`tp@8`, `tp@4`, ...) — world is a layout dimension, not a constant.
+    """
     if isinstance(name, LayoutSpec):
         return name
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(f"unknown layout {name!r}; registered: "
-                       f"{tuple(_REGISTRY)}") from None
+        pass
+    base_name, at, w = str(name).rpartition("@")
+    if at and base_name in _REGISTRY:
+        try:
+            world = int(w)
+        except ValueError:
+            world = 0
+        if world >= 1:
+            base = _REGISTRY[base_name]
+            fields = {f: getattr(base, f) for f in LayoutSpec._FIELDS}
+            fields["world"] = world
+            return register_layout(LayoutSpec(str(name), **fields))
+    raise KeyError(f"unknown layout {name!r}; registered: "
+                   f"{tuple(_REGISTRY)}") from None
 
 
 def registered_layouts() -> tuple[LayoutSpec, ...]:
     return tuple(_REGISTRY.values())
+
+
+def world_of(layout, default_G: int) -> int:
+    """Device count a layout runs on: its own `world`, else the launch
+    group size. Every geometry derivation goes through this instead of
+    reading a module-global G or `len(jax.devices())`."""
+    w = getattr(get_layout(layout), "world", None)
+    return int(w) if w else int(default_G)
 
 
 TP = register_layout(LayoutSpec(

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
 from repro.core.cost_model import HWSpec, TPU_V5E, decode_step_time
-from repro.core.layouts import EP, TP, LayoutSpec, get_layout
+from repro.core.layouts import EP, TP, LayoutSpec, get_layout, world_of
 from repro.models.common import ModelConfig
 
 
@@ -177,6 +177,13 @@ class CostModelScorer:
     hw: HWSpec = TPU_V5E
     kv_len: int | None = None      # None: derive mean context from the obs
     chips: int | None = None       # full-mesh extent for tpep-style layouts
+    # world-aware scoring (elastic device counts, DESIGN.md §13): at or
+    # below `quiet_count` in-flight, a smaller-world layout wins whenever
+    # its step time is within `world_slack` of the best — a near-tie at
+    # low concurrency goes to fewer devices (the autoscaler half of the
+    # policy). None disables the preference (pure min-time ranking).
+    quiet_count: int | None = None
+    world_slack: float = 2.0
 
     def __post_init__(self):
         self.layouts = tuple(get_layout(l) for l in self.layouts)
@@ -187,27 +194,46 @@ class CostModelScorer:
         onset = {l: math.inf for l in self.layouts}
         b = 1
         while b <= 4096:
-            w = min(self.layouts, key=lambda l: self._time(l, b, kv))
+            w = self._pick(b, list(self.layouts), kv)
             onset[w] = min(onset[w], b)
             b *= 2
         self.ordered = tuple(sorted(self.layouts,
                                     key=lambda l: (onset[l], str(l))))
 
+    def _world(self, layout: LayoutSpec) -> int:
+        return world_of(layout, self.G)
+
     def _time(self, layout: LayoutSpec, count: float, kv_len: int) -> float:
+        w = self._world(layout)
+        chips = self.chips * w // self.G if self.chips else None
         return decode_step_time(self.cfg, layout, max(1, int(count)), kv_len,
-                                self.hw, self.G, chips=self.chips)["total"]
+                                self.hw, w, chips=chips)["total"]
 
     def _feasible(self, layout: LayoutSpec, obs: PolicyObservation) -> bool:
-        cap = layout.kv_capacity_tokens(self.cfg, self.G,
-                                        obs.ep_capacity_tokens)
+        # EP group capacity is linear in the world size: scale the observed
+        # (current-world) capacity to the candidate's world before the view
+        # conversion
+        w = self._world(layout)
+        cap = layout.kv_capacity_tokens(
+            self.cfg, w, obs.ep_capacity_tokens * w // self.G)
         return obs.live_tokens <= cap
+
+    def _pick(self, count: float, cands: list, kv: int) -> LayoutSpec:
+        best = min(cands, key=lambda l: self._time(l, count, kv))
+        if self.quiet_count is None or count > self.quiet_count:
+            return best
+        tbest = self._time(best, count, kv)
+        ok = [l for l in cands
+              if self._time(l, count, kv) <= self.world_slack * tbest]
+        return min(ok, key=lambda l: (self._world(l),
+                                      self._time(l, count, kv), str(l)))
 
     def best_at(self, count: float, obs: PolicyObservation):
         kv = self.kv_len or max(1, obs.live_tokens // max(1, obs.in_flight))
         cands = [l for l in self.layouts if self._feasible(l, obs)]
         if not cands:
             return None
-        return min(cands, key=lambda l: self._time(l, count, kv))
+        return self._pick(count, cands, kv)
 
 
 # ---------------------------------------------------------------------------
@@ -307,8 +333,12 @@ class SwitchCoordinator:
             if set(self.layouts) == {TP, EP}:
                 scorer = ThresholdScorer(self.policy)
             else:
+                # quiet_count = t_low: below the down-move band, near-tie
+                # candidates resolve toward the smaller world, so the
+                # hysteresis down-walk doubles as a scale-down
                 scorer = CostModelScorer(self.cfg, self.G, self.layouts,
-                                         chips=self.chips)
+                                         chips=self.chips,
+                                         quiet_count=self.policy.t_low)
             self.policy_impl = HysteresisPolicy(scorer, self.policy)
 
     def tp_kv_capacity_tokens(self, ep_capacity_tokens: int) -> int:
@@ -350,7 +380,9 @@ class SwitchCoordinator:
         if prop is None:
             return SwitchDecision(False, self.active, "hold")
         target = get_layout(prop.target)
-        cap = target.kv_capacity_tokens(self.cfg, self.G, ep_capacity_tokens)
+        w_t = world_of(target, self.G)
+        cap = target.kv_capacity_tokens(self.cfg, w_t,
+                                        ep_capacity_tokens * w_t // self.G)
         if live_tokens > cap:
             self.canceled += 1
             self._last_switch = now          # retry after cooldown
@@ -404,6 +436,13 @@ class SwitchCoordinator:
         src, target = get_layout(src), get_layout(target)
         scorer = getattr(self.policy_impl, "scorer", None)
         if scorer is None or src is target:
+            return False
+        # honor the SAME hysteresis band as propose(): inside
+        # [t_low, t_high] the policy holds, so a committed (or scripted)
+        # decision is not second-guessed on a scorer near-tie — and a
+        # static config (t_high huge, t_low < 0) never reverses. Matters
+        # for the cost-model scorer, whose best_at always has a verdict.
+        if self.policy.t_low <= q.in_flight <= self.policy.t_high:
             return False
         obs = PolicyObservation(active=target, in_flight=q.in_flight,
                                 window_mean=None,

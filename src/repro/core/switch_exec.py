@@ -47,15 +47,15 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.layouts import EP, TP, get_layout
-from repro.core.switch import (apply_assignments,
+from repro.core.switch import (apply_assignments, copy_kv_pages_host,
                                expert_pair_dst_struct, kv_migration_direction,
                                make_migrate_kv, make_migrate_kv_chunk,
                                make_reshard_experts_direct,
                                make_reshard_experts_direct_chunk,
                                make_reshard_experts_pair,
                                make_reshard_experts_pair_chunk,
-                               pair_expert_layouts, pairs_to_plan,
-                               plan_switch)
+                               pack_experts_host, pair_expert_layouts,
+                               pairs_to_plan, plan_cross_world, plan_switch)
 from repro.models.common import ModelConfig
 from repro.models.moe import make_expert_layout
 from repro.serving.kvcache import (CacheConfig, PageAllocator, PrefixCache,
@@ -538,5 +538,224 @@ class SwitchExecutor:
             live_requests=s.live_requests)
         out = (s.experts_dst, s.kv_dst if s.kv_dst is not None else kv_flat,
                s.new_alloc, new_caches, stats)
+        self.session = None
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-world switching (ordered pairs with DIFFERENT device counts)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CrossWorldSession:
+    """State of one in-progress chunked cross-world switch."""
+    src: object                             # source LayoutSpec
+    dst: object                             # destination LayoutSpec
+    G_src: int
+    G_dst: int
+    direction: str                          # "<src>_to_<dst>" (stats label)
+    t_start: float
+    assignments: list                       # per data group lists merged
+    moves: list                             # per-d (spool,spage,dpool,dpage)
+    new_alloc: list                         # per-d PageAllocator @ G_dst
+    chunks: list                            # [(w_lo, w_hi, kv_lo, kv_hi)]
+    next_chunk: int = 0
+    experts_chunks: list = None             # staged [(w13, w2)] np, in order
+    kv_host: np.ndarray = None              # staged (Dd, G_dst, NE) np
+    kv_pages: int = 0
+    live_requests: int = 0
+    plan_pause_s: float = 0.0
+    caches: object = None                   # engine's PrefixCaches (or None)
+
+    @property
+    def done(self) -> bool:
+        return self.next_chunk >= len(self.chunks)
+
+
+class CrossWorldSwitcher:
+    """Drives live switches between layouts on DIFFERENT device counts.
+
+    No common mesh spans both worlds, so no collective can move the state;
+    the movers bounce through the host instead: expert chunks are re-packed
+    from the executor's canonical host copy (experts are read-only in
+    serving, so the copy is never stale), and KV chunks snapshot the live
+    source buffer (device_get) and copy planned pages into a staged host
+    buffer in the destination world's view. The chunked pre-copy +
+    commit-time dirty-page delta discipline is the same as
+    `SwitchExecutor`'s: decode keeps running on the intact source between
+    chunks, nothing on a request changes before commit, and `abort()` just
+    drops the host buffers — the source device state was never mutated, so
+    dropping the session *is* the rollback. Prefix caches do not migrate:
+    a cross-world commit starts with fresh empty caches.
+    """
+
+    def __init__(self, cfg: ModelConfig, cc: CacheConfig, Dd: int,
+                 moe_host: dict | None, *, model_axis: str = "model",
+                 data_axis: str = "data"):
+        self.cfg, self.cc, self.Dd = cfg, cc, Dd
+        self.moe_host = moe_host        # canonical {"w13": (L,E,..)} np
+        self.m, self.da = model_axis, data_axis
+        self.Lk = num_kv_layers(cfg)
+        self.session: CrossWorldSession | None = None
+
+    def _layer_chunks(self, chunk_layers: int) -> list:
+        Lw = self.cfg.num_layers if self.cfg.is_moe else 0
+        Lref = max(Lw, self.Lk, 1)
+        n = max(1, -(-Lref // max(1, chunk_layers)))
+        return [(Lw * i // n, Lw * (i + 1) // n,
+                 self.Lk * i // n, self.Lk * (i + 1) // n)
+                for i in range(n)]
+
+    def start(self, src, dst, G_src: int, G_dst: int, live, kv_flat,
+              chunk_layers: int, caches=None) -> CrossWorldSession:
+        """Plan the cross-world switch and stage the host-side buffers.
+        Source buffers and request metadata stay live for overlap decode."""
+        assert self.session is None, "cross-world switch already in progress"
+        src, dst = get_layout(src), get_layout(dst)
+        t0 = time.perf_counter()
+        new_alloc = [PageAllocator(self.cc, self.cfg, G_dst, dst)
+                     for _ in range(self.Dd)]
+        assignments, moves = [], []
+        for d in range(self.Dd):
+            reqs = [r for r in live if r.data_group == d]
+            mv, asg = plan_cross_world(reqs, self.cfg, self.cc, new_alloc[d],
+                                       src, dst, G_src, G_dst)
+            moves.append(mv)
+            assignments.extend(asg)
+        kv_host = None
+        if self.Lk > 0:
+            # per-rank NE is world-independent (cc.nelems ignores G), so the
+            # destination rows reuse the source buffer's trailing dim
+            kv_host = np.zeros((self.Dd, G_dst, kv_flat.shape[-1]),
+                               dtype=kv_flat.dtype)
+        self.session = CrossWorldSession(
+            src=src, dst=dst, G_src=G_src, G_dst=G_dst,
+            direction=f"{src}_to_{dst}", t_start=t0,
+            assignments=assignments, moves=moves, new_alloc=new_alloc,
+            chunks=self._layer_chunks(chunk_layers),
+            experts_chunks=[] if self.cfg.is_moe else None,
+            kv_host=kv_host, kv_pages=sum(len(m) for m in moves),
+            live_requests=len(live),
+            plan_pause_s=time.perf_counter() - t0, caches=caches)
+        return self.session
+
+    def advance(self, kv_flat) -> bool:
+        """Stage the next layer chunk on host (decode may keep running on
+        the source in between). Returns True while chunks remain."""
+        s = self.session
+        assert s is not None and not s.done
+        w_lo, w_hi, kv_lo, kv_hi = s.chunks[s.next_chunk]
+        if self.cfg.is_moe and w_hi > w_lo:
+            eg = s.dst.expert_group(s.G_dst, self.Dd * s.G_dst)
+            s.experts_chunks.append(
+                pack_experts_host(self.cfg, self.moe_host, s.dst, eg,
+                                  w_lo, w_hi))
+        if s.kv_host is not None and kv_hi > kv_lo:
+            src_host = np.asarray(kv_flat)             # (Dd, G_src, NE)
+            for d in range(self.Dd):
+                copy_kv_pages_host(self.cfg, self.cc, s.src, s.dst,
+                                   s.G_src, s.G_dst, src_host[d],
+                                   s.kv_host[d], s.moves[d], kv_lo, kv_hi)
+        s.next_chunk += 1
+        return not s.done
+
+    def abort(self) -> SwitchStats:
+        """Abandon the in-flight session: the staged host buffers become
+        garbage and every planned destination page dies with the session's
+        fresh allocators — the source world was never touched."""
+        s = self.session
+        assert s is not None, "no cross-world switch in progress"
+        self.session = None
+        return SwitchStats(direction=s.direction,
+                           total_s=time.perf_counter() - s.t_start,
+                           plan_s=s.plan_pause_s, kv_pages=s.kv_pages,
+                           chunks=s.next_chunk,
+                           live_requests=s.live_requests)
+
+    def _delta_moves(self, live_ids) -> tuple:
+        """Commit-time dirty-page moves per data group: pages decode wrote
+        after the plan snapshot, plus pages allocated during the window
+        (destination pages topped up here). CoW semantics mirror
+        `SwitchExecutor._delta_pairs`."""
+        s = self.session
+        page = self.cc.page_size
+        per = [[] for _ in range(self.Dd)]
+        n = 0
+        for a in s.assignments:
+            r = a.req
+            if r.rid not in live_ids or not r.pages:
+                continue
+            if (r.kv_len == a.snap_kv_len
+                    and len(a.new_pages) >= len(r.pages)
+                    and list(a.snap_pages) == r.pages):
+                continue
+            d = r.data_group
+            dst_pool = max(a.new_owner, 0)
+            while len(a.new_pages) < len(r.pages):
+                a.new_pages.append(s.new_alloc[d].alloc(dst_pool, 1)[0])
+            lo_idx = max(a.snap_kv_len - 1, 0) // page
+            hi_idx = min(len(r.pages) - 1, max(r.kv_len - 1, 0) // page)
+            for i in range(lo_idx, hi_idx + 1):
+                cowed = (i < len(a.snap_pages)
+                         and r.pages[i] != a.snap_pages[i])
+                if cowed and s.new_alloc[d].refcount(
+                        dst_pool, a.new_pages[i]) > 1:
+                    s.new_alloc[d].release(dst_pool, [a.new_pages[i]])
+                    a.new_pages[i] = s.new_alloc[d].alloc(dst_pool, 1)[0]
+                per[d].append((r.pool_rank, r.pages[i], dst_pool,
+                               a.new_pages[i]))
+                n += 1
+        return per, n
+
+    def commit(self, live, kv_flat, dst_mesh):
+        """Pause-phase: delta-copy dirty pages on host, apply metadata,
+        device_put the staged buffers onto the destination mesh. Returns
+        (experts', kv', alloc', caches', stats)."""
+        s = self.session
+        assert s is not None and s.done
+        t_pause0 = time.perf_counter()
+        live_ids = {r.rid for r in live}
+        for a in s.assignments:
+            if a.req.rid not in live_ids and a.new_pages:
+                s.new_alloc[a.req.data_group].release(
+                    max(a.new_owner, 0), a.new_pages)
+        delta_pages = 0
+        if s.kv_host is not None:
+            per, delta_pages = self._delta_moves(live_ids)
+            if delta_pages:
+                src_host = np.asarray(kv_flat)
+                for d in range(self.Dd):
+                    copy_kv_pages_host(self.cfg, self.cc, s.src, s.dst,
+                                       s.G_src, s.G_dst, src_host[d],
+                                       s.kv_host[d], per[d], 0, self.Lk)
+        apply_assignments([a for a in s.assignments
+                           if a.req.rid in live_ids])
+        experts = None
+        if self.cfg.is_moe:
+            w13 = np.concatenate([c[0] for c in s.experts_chunks], axis=0)
+            w2 = np.concatenate([c[1] for c in s.experts_chunks], axis=0)
+            dst_ax = s.dst.expert_axes((self.da,), self.m)
+            esh = NamedSharding(dst_mesh, P(None, dst_ax, None, None, None))
+            experts = {"w13": jax.device_put(jnp.asarray(w13), esh),
+                       "w2": jax.device_put(jnp.asarray(w2), esh)}
+        kv = None
+        if s.kv_host is not None:
+            kv = jax.device_put(jnp.asarray(s.kv_host),
+                                NamedSharding(dst_mesh, P(self.da, self.m)))
+            jax.block_until_ready(kv)
+        # prefix caches never migrate across worlds: the commit starts
+        # with fresh empty caches over the destination allocators
+        new_caches = s.caches
+        if s.caches is not None:
+            new_caches = [PrefixCache(s.new_alloc[d])
+                          for d in range(self.Dd)]
+        now = time.perf_counter()
+        stats = SwitchStats(
+            direction=s.direction, total_s=now - s.t_start,
+            pause_s=s.plan_pause_s + (now - t_pause0),
+            plan_s=s.plan_pause_s, kv_pages=s.kv_pages,
+            delta_pages=delta_pages, chunks=len(s.chunks),
+            live_requests=s.live_requests)
+        out = (experts, kv, s.new_alloc, new_caches, stats)
         self.session = None
         return out

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.layouts import EP, TP, group_info
+from repro.core.layouts import EP, TP, get_layout, group_info
 from repro.models.common import ModelConfig
 from repro.models.moe import make_expert_layout
 
@@ -39,7 +39,7 @@ def decode_collective_bytes(cfg: ModelConfig, layout: str, B: int, G: int,
                             bytes_per_el: int = 2) -> int:
     """Per-rank collective payload bytes for ONE decode step."""
     D, L = cfg.d_model, cfg.num_layers
-    if layout == TP:
+    if get_layout(layout).base is TP:
         # two ring all-reduces of the (B, D) hidden per layer
         per_layer = 2 * 2 * (G - 1) / G * B * D * bytes_per_el
         return int(L * per_layer)

@@ -8,6 +8,11 @@ Serving: a lost rank's KV is host-recoverable metadata + re-prefill: the
 affected requests' prompts are extended by their generated tokens (teacher-
 forced) and re-enter the prefill queue; no other rank's state is touched.
 The TP->EP greedy partitioner doubles as the rebalancing step afterwards.
+
+Rank failure is the degenerate case of a cross-world shrink (DESIGN.md
+§13): the blast-radius classification routes through the shared
+`core.switch.plan_rank_shrink` planner, the same ownership diff an
+elastic world-size switch uses.
 """
 from __future__ import annotations
 
@@ -80,13 +85,11 @@ def fail_rank(engine, data_group: int, rank: int) -> list:
     # writing KV through a stale block table into released pages)
     engine._drain_decode()
     per_rank = engine.active.kv_per_rank
-    hit = []
-    for r in list(engine.running.values()) + list(engine.prefilling):
-        if r.data_group != data_group:
-            continue
-        if per_rank and r.owner_rank != rank:
-            continue
-        hit.append(r)
+    # blast radius = the shared cross-world ownership diff's shrink case
+    from repro.core.switch import plan_rank_shrink
+    hit = plan_rank_shrink(
+        list(engine.running.values()) + list(engine.prefilling),
+        data_group, rank, per_rank)
     # the failed rank's cached prefixes are gone with its HBM: drop the
     # affected pool's index (per-rank pool under EP; whole group when the
     # pooled view sharded every page's heads across the rank)

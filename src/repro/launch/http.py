@@ -29,6 +29,12 @@ Endpoints:
       ServeMetrics.summary() as JSON — flat keys plus the per-class
       `by_class` breakdown (attainment, per-class p50/p99).
 
+  GET /v1/layouts
+      MoebiusEngine.layouts_summary() as JSON: the resident layouts with
+      their worlds (device counts), the active layout, degraded (dead)
+      pools, and switch/backoff state — the observability surface of
+      elastic world-size switching (DESIGN.md §13).
+
 Run it standalone via `python -m repro.launch.serve --http-port 8000`;
 quickstart curl lines are in the README.
 """
@@ -117,6 +123,8 @@ class HttpFrontend:
                 await self._generate(writer, body)
             elif method == "GET" and path == "/v1/metrics":
                 await self._json(writer, self.fe.metrics.summary())
+            elif method == "GET" and path == "/v1/layouts":
+                await self._json(writer, self.fe.engine.layouts_summary())
             else:
                 await self._json(writer, {"error": f"no route {method} "
                                                    f"{path}"},
@@ -204,5 +212,6 @@ async def serve_http(frontend, host: str = "127.0.0.1",
     """Blocking entrypoint for `repro.launch.serve --http-port`."""
     srv = await HttpFrontend(frontend, host, port).start()
     print(f"serving on http://{srv.host}:{srv.port} "
-          f"(POST /v1/generate, GET /v1/metrics)", flush=True)
+          f"(POST /v1/generate, GET /v1/metrics, GET /v1/layouts)",
+          flush=True)
     await srv.serve_forever()

@@ -5,16 +5,33 @@ from __future__ import annotations
 from repro import compat
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False,
+                         world: int | None = None):
     """Single pod: (data=16, model=16) = 256 chips. Multi-pod: leading
-    pod axis (2, 16, 16) = 512 chips; `pod` is pure DP."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    pod axis (2, 16, 16) = 512 chips; `pod` is pure DP. `world` overrides
+    the model-axis extent (elastic world sizes, DESIGN.md §13)."""
+    g = 16 if world is None else int(world)
+    shape = (2, 16, g) if multi_pod else (16, g)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     return compat.make_mesh(shape, axes)
+
+
+def submesh(mesh, world: int, model_axis: str = "model"):
+    """Sub-mesh over the first `world` ranks of `mesh`'s model axis —
+    the slicing every per-world geometry (executor meshes, sized-layout
+    step fns) derives from, so a "tp@4" run on an 8-rank launch uses a
+    true 4-rank SPMD mesh in-process."""
+    import numpy as np
+    from jax.sharding import Mesh
+    if not 0 < world <= mesh.shape[model_axis]:
+        raise ValueError(f"world {world} not in 1..{mesh.shape[model_axis]}")
+    ax = mesh.axis_names.index(model_axis)
+    dev = mesh.devices.take(np.arange(world), axis=ax)
+    return Mesh(dev, mesh.axis_names)
 
 
 def data_axes_of(mesh) -> tuple:

@@ -23,6 +23,10 @@ Examples (CPU, 8 host devices):
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload rollout --scale 0.02 --mesh 2x4 --policy static-tpep \
       --layouts tp,ep,tpep
+  # elastic world sizes (DESIGN.md §13): tp@2 is a 2-device operating
+  # point — the policy shrinks 4->2 when quiet, grows back on bursts
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+      --workload bursty --scale 0.05 --mesh 2x4 --layouts tp,ep,tp@2
   # multi-tenant QoS trace (DESIGN.md §11), 30% tagged interactive
   REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --workload bursty --scale 0.05 --mesh 1x4 --slo-class-mix 0.3
@@ -62,7 +66,12 @@ def main():
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--layouts", default="tp,ep",
                     help="comma-separated registered layouts the engine "
-                         "keeps resident (e.g. tp,ep,tpep)")
+                         "keeps resident (e.g. tp,ep,tpep). A name may "
+                         "carry a device count: tp@8,ep@8,tp@4 makes the "
+                         "4-device tp a reachable operating point, so the "
+                         "policy can shrink the serving world when the "
+                         "queue is quiet and grow it back under bursts "
+                         "(DESIGN.md §13)")
     ap.add_argument("--policy", default="interactive",
                     choices=["interactive", "rollout", "static-tp",
                              "static-ep", "static-tpep"])

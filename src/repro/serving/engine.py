@@ -29,7 +29,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-from repro.core.layouts import EP, TP, LayoutSpec, get_layout
+from repro.core.layouts import EP, TP, LayoutSpec, get_layout, world_of
 from repro.core.policy import PolicyConfig, SwitchCoordinator
 from repro.models.common import ModelConfig
 from repro.serving.executor import Executor
@@ -160,7 +160,9 @@ class MoebiusEngine:
         self.ex = Executor(cfg, mesh, cc, self.ecfg, self.layouts, start,
                            params_global=params_global, metrics=self.metrics,
                            data_axis=data_axis, model_axis=model_axis)
-        alloc = [PageAllocator(cc, cfg, self.G, start)
+        # allocators live at the START layout's world (a sized start like
+        # "tp@4" begins life on the sub-mesh)
+        alloc = [PageAllocator(cc, cfg, world_of(start, self.G), start)
                  for _ in range(self.Dd)]
         # prefix cache: one index per data group over that group's allocator
         prefix = ([PrefixCache(alloc[d]) for d in range(self.Dd)]
@@ -173,6 +175,7 @@ class MoebiusEngine:
                                alloc=alloc, prefix=prefix, spec=start,
                                clock=self.now, metrics=self.metrics,
                                qos=qos)
+        self.sched.set_layout(start)   # syncs sched.G with start's world
         self.sched.clear_slot = self.ex.clear_slot
         self.ex.on_finish = self.sched.finish_request
         # the policy runs on the engine's virtual clock (time_scale-aware),
@@ -383,9 +386,19 @@ class MoebiusEngine:
         assert target is not self.active, "switch target == active layout"
         assert target in self.layouts, \
             f"layout {target} not resident (EngineConfig.layouts)"
+        cross_world = self.ex._is_cross_world(target)
         # fused decode: fetch in-flight tokens so every request's kv_len and
         # pages sit at a step boundary before the plan snapshot
         self.ex.drain_decode()
+        if self.ex._is_cross_world(target):
+            # shrink feasibility gate, BEFORE any planning: the destination
+            # world's page pool must hold every live request's pages.
+            # Overflow holders are preempted through the normal requeue
+            # protocol (teacher-forced re-prefill) — never dropped.
+            w_dst = self.ex._world(target)
+            cap_pages = PageAllocator(self.cc, self.cfg, w_dst,
+                                      target).total_free()
+            self.sched.ensure_shrink_feasible(cap_pages)
         if self.ecfg.chunk_layers > 0:
             rec = self._execute_switch_chunked(target)
             if rec is None:                # aborted; source layout live
@@ -403,6 +416,8 @@ class MoebiusEngine:
                 pause_s=st.pause_s, chunks=st.chunks)
         self.switch_records.append(rec)
         self.metrics.switch(rec.t, rec.direction, rec.pause_s, rec.total_s)
+        if cross_world:
+            self.metrics.cross_world_switches += 1
         # sync the coordinator with the engine's real layout (benches call
         # execute_switch directly, bypassing observe) + reset its backoff
         self.coord.switch_completed(self.active)
@@ -479,7 +494,24 @@ class MoebiusEngine:
     # fault tolerance (DESIGN.md §12)
     # ------------------------------------------------------------------
     def switch_in_progress(self) -> bool:
-        return self.ex.switcher.session is not None
+        return self.ex.switch_in_progress()
+
+    def layouts_summary(self) -> dict:
+        """GET /v1/layouts payload: resident layouts with their worlds,
+        the active layout, degraded pools, and switch/backoff state."""
+        return {
+            "active": str(self.active),
+            "world": self.ex._world(self.active),
+            "launch_world": self.G,
+            "layouts": [{"name": str(l), "world": self.ex._world(l),
+                         "active": l is self.active}
+                        for l in self.layouts],
+            "dead_pools": sorted(self.sched.dead_pools),
+            "switch_in_progress": self.switch_in_progress(),
+            "switches": len(self.metrics.switch_events),
+            "switch_aborts": len(self.metrics.switch_abort_events),
+            "cooldown_backoff": self.coord.backoff_mult,
+        }
 
     def abort_switch(self, reason: str = "") -> bool:
         """Abandon the in-flight chunked switch at the current chunk

@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layouts import LayoutSpec, get_layout, group_info, pack_params
+from repro.core.layouts import (LayoutSpec, get_layout, group_info,
+                                pack_params, world_of)
 from repro.core.residency import ResidentRuntime
-from repro.core.switch_exec import SwitchExecutor
+from repro.core.switch_exec import CrossWorldSwitcher, SwitchExecutor
 from repro.models.common import ModelConfig
 from repro.models.registry import init_params
 from repro.serving.device_state import DeviceDecodeState
@@ -56,20 +57,41 @@ class Executor:
         self.layouts = layouts
         self.active = active
         self.metrics = metrics if metrics is not None else ServeMetrics()
-        # full-mesh layouts split each prefill chunk 1/G per rank
-        q = max(s.prefill_quantum(self.G) for s in layouts)
+        # --- world (device count) is a layout dimension: a resident layout
+        # may pin its own world w <= launch G ("tp@4"); each distinct world
+        # gets a sub-mesh slicing the launch mesh along the model axis ---
+        self.meshes: dict[int, object] = {self.G: mesh}
+        for spec in layouts:
+            w = world_of(spec, self.G)
+            if w > self.G:
+                raise ValueError(
+                    f"layout {str(spec)!r} wants world {w} > launch "
+                    f"world {self.G}")
+            if w not in self.meshes:
+                self.meshes[w] = self._submesh(w)
+        # full-mesh layouts split each prefill chunk 1/w per rank
+        q = max(s.prefill_quantum(world_of(s, self.G)) for s in layouts)
         self.prefill_chunk = -(-ecfg.prefill_chunk // q) * q
         if params_global is None:
             params_global = init_params(cfg, jax.random.PRNGKey(ecfg.seed))
+
+        # canonical unpacked experts kept on host: cross-world switches
+        # re-pack from this copy instead of resharding device buffers
+        # (experts are read-only in serving, so the copy is never stale)
+        self._moe_host = None
+        if cfg.is_moe:
+            moe_g = params_global["layers"]["moe"]
+            self._moe_host = {"w13": np.asarray(moe_g["w13"]),
+                              "w2": np.asarray(moe_g["w2"])}
 
         # --- N-resident control plane; single-copy expert data plane ---
         self.packs: dict[str, dict] = {}
         self._expert_store: dict[str, dict] = {}   # only active layout kept
         for spec in layouts:
-            stored = pack_params(cfg, params_global, spec, self.G,
-                                 expert_G=spec.expert_group(self.G,
-                                                            self.chips))
-            pk = build_decode_pack(cfg, stored, spec, self.G)
+            w = world_of(spec, self.G)
+            stored = pack_params(cfg, params_global, spec, w,
+                                 expert_G=spec.expert_group(w, self.Dd * w))
+            pk = build_decode_pack(cfg, stored, spec, w)
             if cfg.is_moe:
                 moe = pk["layers"]["moe"]
                 self._expert_store[spec] = {
@@ -83,17 +105,15 @@ class Executor:
         # --- unified KV buffer (committed to its serve-step sharding up
         # front: a lazily-committed buffer would change sharding signature
         # after the first dispatch and recompile every warmed executable) ---
-        self.NE = cc.nelems(cfg, self.G)
-        self.kv_flat = jax.device_put(
-            jnp.zeros((self.Dd, self.G, self.NE), cfg.param_dtype),
-            jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec(data_axis, model_axis)))
+        self.NE = cc.nelems(cfg, self.G)   # per-rank size, world-independent
+        self.kv_flat = self._zero_kv(world_of(active, self.G))
         self._copy_fns: dict = {}          # CoW page copier, per layout
 
         # --- resident runtimes (all layouts, ladder of decode rungs) ---
+        wmin = min(world_of(s, self.G) for s in layouts)
         self.rt = ResidentRuntime(ladder=tuple(
-            b for b in ecfg.ladder if b % self.G == 0 or b >= self.G
-        ) or (self.G,))
+            b for b in ecfg.ladder if b % wmin == 0 or b >= wmin
+        ) or (wmin,))
         self._pack_cache: dict = {}        # assembled packs, per layout
         # fused decode (decode_steps > 1): device-resident state + the
         # one-deep dispatch pipeline (outputs consumed one iteration late)
@@ -102,19 +122,68 @@ class Executor:
         # host staging buffers, reused across steps (keyed by (B, Sq) and
         # zeroed in place instead of reallocated every dispatch)
         self._stage_bufs: dict = {}
-        self.switcher = SwitchExecutor(
-            cfg, cc, mesh, model_axis=model_axis, data_axis=data_axis,
-            direct_reshard=ecfg.direct_reshard)
+        # same-world switch executors, lazily built per world; the
+        # cross-world switcher stages through host memory (no common mesh)
+        self._switchers: dict[int, SwitchExecutor] = {}
+        self.xw = CrossWorldSwitcher(
+            cfg, cc, self.Dd, self._moe_host,
+            model_axis=model_axis, data_axis=data_axis)
         self._key = jax.random.PRNGKey(ecfg.seed + 1)
         # completion sink for fused-pipeline retirements (the engine wires
         # this to Scheduler.finish_request)
         self.on_finish = lambda r: None
 
     # ------------------------------------------------------------------
+    # world geometry (device count as a layout dimension)
+    # ------------------------------------------------------------------
+    def _submesh(self, w: int):
+        """Sub-mesh over the first `w` ranks of the model axis."""
+        from repro.launch.mesh import submesh
+        return submesh(self.mesh, w, model_axis=self.m)
+
+    def _world(self, layout) -> int:
+        return world_of(layout, self.G)
+
+    def _mesh_for(self, layout):
+        return self.meshes[self._world(layout)]
+
+    def _zero_kv(self, w: int):
+        """Fresh zero KV buffer shaped/sharded for world `w` (per-rank
+        nelems is world-independent, so only the rank axis changes)."""
+        return jax.device_put(
+            jnp.zeros((self.Dd, w, self.NE), self.cfg.param_dtype),
+            jax.sharding.NamedSharding(
+                self.meshes[w],
+                jax.sharding.PartitionSpec(self.da, self.m)))
+
+    def _switcher_for(self, w: int) -> SwitchExecutor:
+        sw = self._switchers.get(w)
+        if sw is None:
+            sw = SwitchExecutor(
+                self.cfg, self.cc, self.meshes[w], model_axis=self.m,
+                data_axis=self.da, direct_reshard=self.ecfg.direct_reshard)
+            self._switchers[w] = sw
+        return sw
+
+    @property
+    def switcher(self) -> SwitchExecutor:
+        """Same-world switch executor for the ACTIVE layout's world."""
+        return self._switcher_for(self._world(self.active))
+
+    def _is_cross_world(self, target) -> bool:
+        return self._world(target) != self._world(self.active)
+
+    def switch_in_progress(self) -> bool:
+        return (self.xw.session is not None
+                or any(sw.session is not None
+                       for sw in self._switchers.values()))
+
+    # ------------------------------------------------------------------
     # step functions (resident; warmed at startup or first use)
     # ------------------------------------------------------------------
     def ladder_for(self, layout: LayoutSpec):
-        return get_layout(layout).decode_ladder(self.rt.ladder, self.G)
+        spec = get_layout(layout)
+        return spec.decode_ladder(self.rt.ladder, self._world(spec))
 
     def _mixed_fn(self, layout: LayoutSpec, B: int, Sq: int):
         """THE serve step (steps.build_mixed_step), cached by
@@ -125,7 +194,7 @@ class Executor:
         return self.rt.get_or_build(
             (layout, "mixed", B, Sq),
             lambda: build_mixed_step(
-                self.cfg, self.mesh, layout, self.cc, B, Sq=Sq,
+                self.cfg, self._mesh_for(layout), layout, self.cc, B, Sq=Sq,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
                 model_axis=self.m, attn_backend=self.ecfg.attn_backend))
 
@@ -136,12 +205,12 @@ class Executor:
         return self.rt.get_or_build(
             (layout, "decode_loop", B, N),
             lambda: build_decode_loop(
-                self.cfg, self.mesh, layout, self.cc, B, N,
+                self.cfg, self._mesh_for(layout), layout, self.cc, B, N,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
                 model_axis=self.m, attn_backend=self.ecfg.attn_backend))
 
     def _prefill_fn(self, layout: LayoutSpec):
-        Bp = get_layout(layout).prefill_width(self.G)
+        Bp = get_layout(layout).prefill_width(self._world(layout))
         return self._mixed_fn(layout, Bp, self.prefill_chunk)
 
     def warmup(self, layouts=None):
@@ -168,14 +237,20 @@ class Executor:
                 # compile the CoW page copier for EVERY resident layout
                 # outside the serving loop (a null plan: the reserved
                 # page 0 self-copies) — the first CoW after a live switch
-                # must select an executable, not build one
-                self.copy_pages(0, 0, [(0, 0)], layout=lo)
+                # must select an executable, not build one. Layouts at a
+                # different world compile on a throwaway zero buffer
+                # shaped for THEIR world (self.kv_flat has the active
+                # world's rank axis and is donated by the copier).
+                kv = None
+                if self._world(lo) != self._world(self.active):
+                    kv = self._zero_kv(self._world(lo))
+                self.copy_pages(0, 0, [(0, 0)], layout=lo, kv=kv)
             if lo is not self.active:
                 continue
             pk = self._assemble_pack(lo)
             key = jax.random.key_data(jax.random.PRNGKey(0))
             maxp = self.cc.max_pages_per_req
-            Bp = get_layout(lo).prefill_width(self.G)
+            Bp = get_layout(lo).prefill_width(self._world(lo))
             toks = jnp.zeros((self.Dd, Bp, self.prefill_chunk), jnp.int32)
             z2 = jnp.zeros((self.Dd, Bp), jnp.int32)
             bt = jnp.zeros((self.Dd, Bp, maxp), jnp.int32)
@@ -194,8 +269,8 @@ class Executor:
                                   jnp.int32), z2, z2, bt, key)
                 if self.ecfg.decode_steps > 1:
                     # match the live call's committed shardings exactly
-                    st = DeviceDecodeState(self.mesh, lo, self.Dd, b, maxp,
-                                           da=self.da, m=self.m)
+                    st = DeviceDecodeState(self._mesh_for(lo), lo, self.Dd,
+                                           b, maxp, da=self.da, m=self.m)
                     st.warm_scatters()
                     self._decode_loop_fn(lo, b, self.ecfg.decode_steps)(
                         pk, jnp.zeros_like(self.kv_flat), st.tokens,
@@ -222,29 +297,35 @@ class Executor:
     # device page copies (the Scheduler's CopyPages decisions)
     # ------------------------------------------------------------------
     def copy_pages(self, d: int, pool: int, pairs: list,
-                   layout: LayoutSpec | None = None) -> None:
+                   layout: LayoutSpec | None = None, kv=None):
         """Device page copy within the active view (the CoW mover). EP view:
         the pair applies to `pool`'s rank only; pooled views: every rank
         copies its head-slice of the page. `layout` overrides the view
         only for warmup (a null self-copy of the reserved page 0 is a
-        data no-op under any view, so inactive layouts compile safely)."""
-        spec = self.active if layout is None else layout
+        data no-op under any view, so inactive layouts compile safely);
+        `kv` overrides the buffer for cross-world warmup, where the live
+        buffer has the wrong rank-axis extent."""
+        spec = self.active if layout is None else get_layout(layout)
+        w = self._world(spec)
         fn = self._copy_fns.get(spec)
         if fn is None:
-            fn = make_copy_pages(self.cfg, self.cc, self.mesh, spec,
-                                 model_axis=self.m, data_axis=self.da)
+            fn = make_copy_pages(self.cfg, self.cc, self._mesh_for(spec),
+                                 spec, model_axis=self.m, data_axis=self.da)
             self._copy_fns[spec] = fn
-        rows = [pool] if spec.kv_per_rank else list(range(self.G))
+        rows = [pool] if spec.kv_per_rank else list(range(w))
+        buf = self.kv_flat if kv is None else kv
         for b in range(0, len(pairs), COPY_W):
             blk = pairs[b:b + COPY_W]
-            sp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
-            dp = np.zeros((self.Dd, self.G, COPY_W), np.int32)
-            vm = np.zeros((self.Dd, self.G, COPY_W), bool)
+            sp = np.zeros((self.Dd, w, COPY_W), np.int32)
+            dp = np.zeros((self.Dd, w, COPY_W), np.int32)
+            vm = np.zeros((self.Dd, w, COPY_W), bool)
             for g in rows:
                 for i, (a, bdst) in enumerate(blk):
                     sp[d, g, i], dp[d, g, i], vm[d, g, i] = a, bdst, True
-            self.kv_flat = fn(self.kv_flat, jnp.asarray(sp), jnp.asarray(dp),
-                              jnp.asarray(vm))
+            buf = fn(buf, jnp.asarray(sp), jnp.asarray(dp), jnp.asarray(vm))
+        if kv is None:
+            self.kv_flat = buf
+        return buf
 
     def run_copies(self, copies: list) -> None:
         """Execute drained CopyPages decisions in emission order (the order
@@ -307,7 +388,7 @@ class Executor:
         Scheduler.select_prefill_rows) as a prefill-only MixedPlan."""
         rows = tuple(MixedRow(r, d, row, r.prefill_pos, n, "prefill")
                      for r, d, row, n in picked)
-        plan = MixedPlan(B=self.active.prefill_width(self.G),
+        plan = MixedPlan(B=self.active.prefill_width(self._world(self.active)),
                          Sq=self.prefill_chunk, rows=rows,
                          prefill_tokens=sum(n for *_, n in picked))
         return self.run_mixed(plan, step_i)
@@ -345,7 +426,8 @@ class Executor:
         for r in sched.running.values():
             r.slot = None
             r.budget_dev = 0
-        self._dstate = DeviceDecodeState(self.mesh, self.active, self.Dd, B,
+        self._dstate = DeviceDecodeState(self._mesh_for(self.active),
+                                         self.active, self.Dd, B,
                                          self.cc.max_pages_per_req,
                                          da=self.da, m=self.m)
         return self._dstate
@@ -443,10 +525,34 @@ class Executor:
         self._dstate = None
         self._pack_cache.clear()
 
+    def _commit_cross_world(self, target: LayoutSpec, live: list[Request]):
+        """Commit the cross-world session: device_put the staged host
+        buffers onto the destination sub-mesh, swap the data plane."""
+        (experts, kv, alloc, caches, st) = self.xw.commit(
+            live, self.kv_flat, self._mesh_for(target))
+        if self.cfg.is_moe:
+            self._experts = experts
+        # attention-free models have no KV to migrate: re-zero at the
+        # destination world so the serve step sees the right rank axis
+        self.kv_flat = kv if kv is not None else self._zero_kv(
+            self._world(target))
+        self._post_switch(target)
+        return alloc, caches, st
+
     def switch_monolithic(self, target: LayoutSpec, live: list[Request],
                           alloc, caches):
         """Monolithic switch: decode paused for the whole migration.
         Returns (new_alloc, new_caches, stats)."""
+        target = get_layout(target)
+        if self._is_cross_world(target):
+            # monolithic == the chunked cross-world path with one giant
+            # chunk, driven to completion inline
+            self.xw.start(self.active, target, self._world(self.active),
+                          self._world(target), live, self.kv_flat,
+                          chunk_layers=10 ** 9, caches=caches)
+            while not self.xw.session.done:
+                self.xw.advance(self.kv_flat)
+            return self._commit_cross_world(target, live)
         experts = self._experts if self.cfg.is_moe else None
         (experts, self.kv_flat, alloc, caches, st) = self.switcher.monolithic(
             self.active, target, live, experts, self.kv_flat,
@@ -460,24 +566,38 @@ class Executor:
                      chunk_layers: int, alloc, caches):
         """Open a chunked switch session (destination staged layer-chunk by
         layer-chunk while decode keeps running on the source layout)."""
+        target = get_layout(target)
+        if self._is_cross_world(target):
+            return self.xw.start(
+                self.active, target, self._world(self.active),
+                self._world(target), live, self.kv_flat, chunk_layers,
+                caches=caches)
         return self.switcher.start(
             self.active, target, live,
             self._experts if self.cfg.is_moe else None,
             self.kv_flat, chunk_layers, cur_alloc=alloc, caches=caches)
 
     def switch_advance(self) -> None:
+        if self.xw.session is not None:
+            self.xw.advance(self.kv_flat)
+            return
         self.switcher.advance(
             self._experts if self.cfg.is_moe else None, self.kv_flat)
 
     def switch_abort(self):
-        """Abandon the chunked session (SwitchExecutor.abort): the active
-        layout, device decode state, and assembled packs are untouched —
-        decode never left the source buffers — so no _post_switch runs.
-        Returns the aborted attempt's SwitchStats."""
+        """Abandon the chunked session: the active layout, device decode
+        state, and assembled packs are untouched — decode never left the
+        source buffers — so no _post_switch runs. Returns the aborted
+        attempt's SwitchStats."""
+        if self.xw.session is not None:
+            return self.xw.abort()
         return self.switcher.abort()
 
     def switch_commit(self, target: LayoutSpec, live: list[Request]):
         """Dirty-page delta + commit; returns (new_alloc, new_caches, stats)."""
+        target = get_layout(target)
+        if self.xw.session is not None:
+            return self._commit_cross_world(target, live)
         (experts, self.kv_flat, alloc, caches,
          st) = self.switcher.commit(live, self.kv_flat)
         if self.cfg.is_moe:

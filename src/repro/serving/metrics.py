@@ -17,6 +17,11 @@ class ServeMetrics:
     slo_targets: dict = field(default_factory=dict)
     mode_samples: list = field(default_factory=list)  # (t, mode, running)
     switch_events: list = field(default_factory=list)  # (t, direction, pause_s, total_s)
+    # elastic world switching (DESIGN.md §13): switches whose source and
+    # destination layouts run on DIFFERENT device counts (8->4 shrink,
+    # 4->8 grow) — the host-bounce migration path, vs. same-world
+    # collective resharding
+    cross_world_switches: int = 0
     # decode control-plane accounting: one dispatch may cover many substeps
     # (fused decode loop); tokens = scheduled slot-substeps of the dispatch
     decode_dispatches: int = 0
@@ -201,6 +206,7 @@ class ServeMetrics:
             "makespan_s": float(max(fins)) if fins else float("nan"),
             "total_tokens": int(sum(n for *_, n in self.records)),
             "switches": len(self.switch_events),
+            "cross_world_switches": self.cross_world_switches,
             "switch_pause_mean_s": (float(pauses.mean()) if len(pauses)
                                     else float("nan")),
             "switch_pause_max_s": (float(pauses.max()) if len(pauses)

@@ -160,6 +160,7 @@ class Scheduler:
                  alloc=None, prefix=None, spec=None, clock=None,
                  metrics: ServeMetrics | None = None, qos=None):
         self.cc, self.Dd, self.G = cc, Dd, G
+        self._G0 = G                    # launch world (full mesh)
         self.ladder = tuple(ladder)
         self.alloc = alloc or []
         self.prefix = prefix
@@ -199,6 +200,10 @@ class Scheduler:
     # ------------------------------------------------------------------
     def set_layout(self, spec) -> None:
         self.spec = spec
+        # world is a layout dimension: the pool/rank count every placement
+        # and ladder computation sees follows the ACTIVE layout, not the
+        # launch mesh ("tp@4" on an 8-rank launch plans over 4 pools)
+        self.G = getattr(spec, "world", None) or self._G0
 
     def _ladder(self, spec=None) -> tuple:
         spec = spec or self.spec
@@ -507,6 +512,27 @@ class Scheduler:
                 out.append(self.preempt(victim))
             elif holders == [r]:
                 out.append(self.truncate(r))
+        return out
+
+    def ensure_shrink_feasible(self, capacity_pages: int) -> list:
+        """Make a world-shrink KV-feasible BEFORE it is planned: while a
+        data group's live pages exceed the destination world's per-group
+        page capacity, preempt the lowest-priority holder through the
+        normal requeue protocol (teacher-forced re-prefill after the
+        switch — requests are never dropped). Victim order matches
+        `handle_starvation` (lightest SLO class first, youngest within a
+        class). Requires a drained pipeline; returns the Preempts."""
+        out = []
+        vkey = (self.qos.victim_key if self.qos is not None
+                else (lambda q: (q.arrival_s, q.rid)))
+        for d in range(self.Dd):
+            while True:
+                holders = [q for q in
+                           list(self.running.values()) + self.prefilling
+                           if q.data_group == d and q.pages]
+                if sum(len(q.pages) for q in holders) <= capacity_pages:
+                    break
+                out.append(self.preempt(max(holders, key=vkey)))
         return out
 
     def clear_prefix_cache(self) -> None:

@@ -89,7 +89,7 @@ def _ssm_decode_layer(cfg: ModelConfig, lp, x, conv_st, ssm_st, layout, m):
 
 
 def ssm_pack_specs(cfg: ModelConfig, layout: str, m: str = "model"):
-    tp = layout == TP
+    tp = get_layout(layout).base is TP
     def sp(*s):
         return P(*s) if tp else P()
     layer = {
@@ -111,7 +111,7 @@ def build_ssm_serve_step(cfg: ModelConfig, mesh, layout: str, Bslot: int, *,
       conv: (Dd, B, L, 3, K-1, C) packed [x|B|C] tails (C = max channel dim)
       ssm:  (Dd, B, L, H, P, N)
     TP shards conv x-channels / heads; EP(DP) shards the batch dim."""
-    layout = get_layout(layout)
+    layout = get_layout(layout).base   # sized specs ("tp@4") dispatch as base
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     L = cfg.num_layers
@@ -199,7 +199,7 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
     TP: mamba channels + attn heads sharded. EP: full DP (batch sharded,
     weights replicated) — the attention stack replication of the paper's EP.
     """
-    layout = get_layout(layout)
+    layout = get_layout(layout).base   # sized specs ("tp@4") dispatch as base
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     L, k_every = cfg.num_layers, cfg.attn_every
@@ -320,7 +320,7 @@ def build_hybrid_serve_step(cfg: ModelConfig, mesh, layout: str,
 def hybrid_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
     """Hybrid stored params -> decode pack (rank-major shared attention)."""
     sp = dict(params["shared_attn"])
-    if layout == TP:
+    if get_layout(layout).base is TP:
         sp = dict(sp)
         sp["attn"] = attn_rank_major(cfg, params["shared_attn"]["attn"], G)
     pack = {
@@ -352,7 +352,7 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
     over the full encoder cache, so chunking needs no extra mask there.
     Sq == 1 is the classic decode step.
     """
-    layout = get_layout(layout)
+    layout = get_layout(layout).base   # sized specs ("tp@4") dispatch as base
     m, da = model_axis, data_axes
     G = mesh.shape[m]
     gi = group_info(cfg, G)
@@ -472,7 +472,7 @@ def build_encdec_serve_step(cfg: ModelConfig, mesh, layout: str,
 
 def encdec_decode_pack(cfg: ModelConfig, params: dict, layout: str, G: int):
     dec = dict(params["decoder"])
-    if layout == TP:
+    if get_layout(layout).base is TP:
         dec["attn"] = attn_rank_major(cfg, params["decoder"]["attn"], G)
         dec["xattn"] = attn_rank_major(cfg, params["decoder"]["xattn"], G)
     return {

@@ -14,6 +14,12 @@ DEFAULT_DEVICES = int(os.environ.get("REPRO_TEST_DEVICES", "8"))
 _COUNT_FLAG = "--xla_force_host_platform_device_count"
 
 
+def default_devices() -> int:
+    """REPRO_TEST_DEVICES read at CALL time, not import time, so a test
+    (or the elastic world sweep) can adjust it per subprocess."""
+    return int(os.environ.get("REPRO_TEST_DEVICES", str(DEFAULT_DEVICES)))
+
+
 def device_flags(devices: int, base: str = "") -> str:
     """Merge the host-device-count flag into an existing XLA_FLAGS string,
     preserving any unrelated flags the caller's environment already set."""
@@ -24,7 +30,7 @@ def device_flags(devices: int, base: str = "") -> str:
 
 def run_multidevice(code: str, devices: int | None = None,
                     timeout: int = 900) -> str:
-    devices = DEFAULT_DEVICES if devices is None else devices
+    devices = default_devices() if devices is None else devices
     env = dict(os.environ)
     env["XLA_FLAGS"] = device_flags(devices, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = str(REPO / "src")

@@ -1,0 +1,204 @@
+"""Elastic world-size unit tests (DESIGN.md §13) — no mesh, no engine.
+
+Covers the pure-host half of elastic switching: the sized layout
+registry ("tp@4" interning), the Scheduler following the active
+layout's world for pool counts, the feasibility-gated shrink that
+preempts (never drops) overflow page holders, and the world-aware
+cost scorer's quiet-queue preference for smaller worlds.
+"""
+from dataclasses import dataclass
+
+from repro.core.layouts import EP, TP, get_layout, world_of
+from repro.core.policy import CostModelScorer, PolicyObservation
+from repro.serving.metrics import ServeMetrics
+from repro.serving.paging import PagePoolAllocator
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Preempt, Scheduler
+
+
+@dataclass
+class FakeSpec:
+    """Duck-typed LayoutSpec: only what the Scheduler reads."""
+    kv_per_rank: bool = False
+    slots_sharded: bool = False
+    world: int | None = None
+
+    def decode_ladder(self, ladder, G):
+        return tuple(ladder)
+
+
+@dataclass
+class CC:
+    page_size: int = 4
+    max_pages_per_req: int = 8
+
+
+def make_sched(Dd=1, G=1, npages=17, per_rank=False, world=None,
+               ladder=(4, 8)):
+    spec = FakeSpec(kv_per_rank=per_rank, slots_sharded=per_rank,
+                    world=world)
+    npools = G if per_rank else 1
+    alloc = [PagePoolAllocator(npools, npages, per_rank=per_rank)
+             for _ in range(Dd)]
+    t = {"v": 0.0}
+    return Scheduler(CC(), Dd, G, ladder, alloc=alloc, spec=spec,
+                     clock=lambda: t["v"], metrics=ServeMetrics())
+
+
+def req(rid, plen=5, out=8, arrival=0.0, **kw):
+    return Request(rid=rid, prompt=list(range(1, plen + 1)),
+                   max_new_tokens=out, arrival_s=arrival, **kw)
+
+
+# ---------------------------------------------------------------------------
+# sized layout registry
+# ---------------------------------------------------------------------------
+
+def test_sized_registry_interning():
+    """"tp@4" is the tp scheme pinned to 4 devices: lazily derived from
+    the base on first lookup, interned like every registered spec."""
+    t4 = get_layout("tp@4")
+    assert t4.world == 4 and str(t4) == "tp@4"
+    assert t4 is get_layout("tp@4")          # interned value object
+    assert t4 is TP.sized(4)
+    assert t4.base is TP and t4.base_name == "tp"
+    assert t4.world is not None and TP.world is None
+    # the scheme itself is inherited unchanged from the base
+    assert t4.kv_view == TP.kv_view
+    assert t4.kv_per_rank == TP.kv_per_rank
+    assert t4.slots_sharded == TP.slots_sharded
+    e2 = get_layout("ep@2")
+    assert e2.base is EP and e2.world == 2 and e2.kv_per_rank
+    # sized specs are DISTINCT str values — equality with the base fails
+    # by design; comparisons must normalize through .base
+    assert t4 != TP and t4.base == TP
+
+
+def test_world_of_defaults_to_launch_world():
+    assert world_of(get_layout("tp@4"), 8) == 4
+    assert world_of("ep@2", 8) == 2
+    assert world_of(TP, 8) == 8              # unsized = full launch mesh
+    assert world_of("ep", 8) == 8
+
+
+# ---------------------------------------------------------------------------
+# scheduler: world follows the active layout
+# ---------------------------------------------------------------------------
+
+def test_set_layout_tracks_world():
+    s = make_sched(G=8)
+    s.set_layout(FakeSpec(world=4))
+    assert s.G == 4
+    s.set_layout(FakeSpec())                 # unsized: back to launch G
+    assert s.G == 8
+
+
+def test_placement_respects_shrunk_pool_count():
+    """Per-rank placement plans over the ACTIVE world's pools: after a
+    shrink to world=2 every new prefill lands in pools 0..1 even though
+    the launch mesh (and the allocator) has 4."""
+    s = make_sched(Dd=1, G=4, per_rank=True, npages=17)
+    s.set_layout(FakeSpec(kv_per_rank=True, slots_sharded=True, world=2))
+    assert s.G == 2
+    for i in range(4):
+        s.submit(req(i))
+    s.admit(t=0.0)
+    placed = [r for r in list(s.waiting) if s.start_prefill(r) is not None]
+    assert placed, "no prefill placed"
+    assert all(r.pool_rank in (0, 1) for r in placed), \
+        [(r.rid, r.pool_rank) for r in placed]
+
+
+# ---------------------------------------------------------------------------
+# feasibility-gated shrink: preempt, never drop
+# ---------------------------------------------------------------------------
+
+def _running_holder(s, rid, pages, arrival=0.0):
+    r = req(rid, arrival=arrival)
+    r.data_group = 0
+    r.state = State.RUNNING
+    r.pages = s.alloc[0].try_alloc(0, pages)
+    assert r.pages is not None
+    r.output = [7]                           # has decoded a token
+    s.running[r.rid] = r
+    return r
+
+
+def test_shrink_feasibility_preempts_never_drops():
+    """ensure_shrink_feasible: when the destination world's page pool
+    cannot hold every live request, the overflow holders are preempted
+    through the normal requeue protocol — pages released, generated
+    tokens folded into the prompt, request back in `waiting`. Nothing
+    is ever dropped."""
+    s = make_sched(Dd=1, npages=17)
+    rs = [_running_holder(s, i, pages=4) for i in range(3)]   # 12 held
+    decs = s.ensure_shrink_feasible(capacity_pages=8)
+    # one preemption suffices (12 -> 8); the youngest holder is victim
+    assert [type(d) for d in decs] == [Preempt]
+    victim = decs[0].req
+    assert victim is rs[2]                   # same arrival: max rid
+    assert victim in s.waiting and victim.rid not in s.running
+    assert victim.pages == [] and victim.output == []
+    assert victim.prompt[-1] == 7            # teacher-forced, not lost
+    held = sum(len(r.pages) for r in s.running.values())
+    assert held == 8
+    assert s.alloc[0].total_held() == 8
+    # every request is still alive somewhere
+    assert len(s.running) + len(s.waiting) == 3
+    assert s.metrics.preemptions == 1
+    # already feasible: a second call is a no-op
+    assert s.ensure_shrink_feasible(capacity_pages=8) == []
+
+
+def test_shrink_feasibility_already_fits_is_noop():
+    s = make_sched(Dd=1, npages=17)
+    _running_holder(s, 0, pages=4)
+    assert s.ensure_shrink_feasible(capacity_pages=4) == []
+    assert len(s.running) == 1 and s.metrics.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# world-aware cost scorer
+# ---------------------------------------------------------------------------
+
+class StubScorer(CostModelScorer):
+    """Scorer with a pinned step-time table (no perf model, no cfg):
+    isolates the world-preference ranking logic."""
+    TIMES = {"tp": 1.0, "tp@4": 1.6, "ep": 3.0, "ep@4": 3.2}
+
+    def _time(self, layout, count, kv_len):
+        return self.TIMES[str(layout)]
+
+
+def test_quiet_queue_prefers_smaller_world():
+    """At or below quiet_count in flight, a smaller-world layout within
+    world_slack of the best step time wins — the scale-down half of the
+    autoscaler. Above it, ranking is pure min-time (scale back up)."""
+    sc = StubScorer(cfg=None, G=8, layouts=("tp", "ep", "tp@4"),
+                    quiet_count=4)
+    cands = list(sc.layouts)
+    # quiet: tp@4 is 1.6x the best (within the 2.0 slack), world 4 < 8
+    assert sc._pick(2, cands, 4096) is get_layout("tp@4")
+    # loaded: min step time wins outright
+    assert sc._pick(64, cands, 4096) is TP
+    # small world gets the earliest onset, so the hysteresis down-walk
+    # reaches it first when the queue drains
+    assert sc.ordered[0] is get_layout("tp@4")
+
+
+def test_quiet_preference_disabled_without_quiet_count():
+    sc = StubScorer(cfg=None, G=8, layouts=("tp", "ep", "tp@4"),
+                    quiet_count=None)
+    assert sc._pick(2, list(sc.layouts), 4096) is TP
+
+
+def test_feasibility_scales_capacity_with_world():
+    """KV feasibility is checked at the CANDIDATE's world: the observed
+    EP capacity (always at launch G) scales by w/G, so a half-world
+    layout offers half the tokens — an infeasible shrink is ruled out
+    before the hysteresis walk ever proposes it."""
+    sc = StubScorer(cfg=None, G=8, layouts=("ep", "ep@4"))
+    obs = PolicyObservation(active=EP, in_flight=1, window_mean=None,
+                            live_tokens=600, ep_capacity_tokens=1000)
+    assert sc._feasible(EP, obs)             # 600 <= 1000
+    assert not sc._feasible(get_layout("ep@4"), obs)   # 600 > 500
