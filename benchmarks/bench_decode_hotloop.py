@@ -166,6 +166,68 @@ def _staged_rows(seed: int = 0):
     return rows
 
 
+def _skew_rows(smoke: bool, seed: int = 0):
+    """Hot-expert imbalance row: the decode expert FFN timed under balanced
+    vs skewed routing (workloads.router_weights), einsum formulation vs the
+    grouped-GEMM path of kernels/moe_gemm (DESIGN.md §14).
+
+    Shapes are static, so at a FIXED capacity bucket both formulations cost
+    the same flops — the imbalance shows up as (a) dropped assignments at
+    the balanced bucket and (b) the inflated bucket (C == T*k) a skewed
+    router forces you to provision, which both paths then pay for. Timings
+    use the serving backend (ref on CPU); grouped-vs-einsum outputs are
+    checked byte-identical under fp32 on every cell."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import bench_cfg, time_call
+    from benchmarks.workloads import router_weights, routed_dispatch
+    from repro.models.moe import _grouped_ffn_local
+
+    cfg = bench_cfg(num_layers=1, d_model=64 if smoke else 128, experts=8)
+    E, D = cfg.num_experts, cfg.d_model
+    W13, W2 = 2 * cfg.d_expert, cfg.d_expert
+    T = 64 if smoke else 256
+    rng = np.random.default_rng(seed)
+    # nonzero-mean tokens: the skew hook biases a router COLUMN, which only
+    # dominates the logit x @ w when x has a constant component (real
+    # activations do; zero-mean noise would cancel the bias)
+    x = jnp.asarray(rng.standard_normal((T, D)) + 1.0, jnp.float32)
+    w13 = jnp.asarray(rng.standard_normal((E, W13, D)) * 0.05, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((E, D, W2)) * 0.05, jnp.float32)
+
+    def einsum_ffn(xd):
+        # the pre-kernel inline formulation, verbatim
+        h = jnp.einsum("ecd,ewd->ecw", xd, w13,
+                       preferred_element_type=jnp.float32)
+        hg, hu = jnp.split(h, 2, axis=-1)
+        h = (jax.nn.silu(hg) * hu).astype(cfg.compute_dtype)
+        return jnp.einsum("ecw,edw->ecd", h, w2,
+                          preferred_element_type=jnp.float32)
+
+    grouped_ffn = jax.jit(
+        lambda xd: _grouped_ffn_local(cfg, w13, w2, xd))
+    einsum_ffn = jax.jit(einsum_ffn)
+
+    rows = []
+    for label, skew in (("balanced", 0.0), ("hot1", 6.0)):
+        rw = router_weights(cfg, skew=skew, seed=seed)
+        # balC: the bucket a balanced router needs (factor 2, the usual
+        # serving headroom); hotC: the worst-case bucket a hot expert
+        # forces you to provision (factor E)
+        for cap, capf in (("balC", 2.0), ("hotC", float(E))):
+            xd, _, _, dropped = routed_dispatch(cfg, rw, x, cap_factor=capf)
+            t_e = time_call(einsum_ffn, xd, warmup=2, iters=5)
+            t_g = time_call(grouped_ffn, xd, warmup=2, iters=5)
+            same = bool(jnp.array_equal(einsum_ffn(xd), grouped_ffn(xd)))
+            rows.append((
+                f"decode_hotloop.skew.{label}.{cap}.grouped_us", t_g * 1e6,
+                f"einsum_us={t_e*1e6:.1f} C={xd.shape[1]} "
+                f"dropped_frac={dropped:.3f} identical={same}"))
+            assert same, "grouped-GEMM diverged from einsum under skew"
+    return rows
+
+
 def _hotloop_cfg():
     """Minimal-but-real MoE (4 routed experts, top-2, swiglu) sized so the
     device substep stands in for a fast accelerator step: on ~10 ms real
@@ -205,6 +267,7 @@ def run(smoke: bool = False, seed: int = 0):
                  1.0 - 1.0 / max(speedup, 1e-9),
                  "of the N=1 per-token step time"))
     rows.extend(_staged_rows(seed=seed))
+    rows.extend(_skew_rows(smoke, seed=seed))
 
     if not smoke:
         mesh8 = make_mesh((1, 8), ("data", "model"))

@@ -33,7 +33,8 @@ def bench_cfg(num_layers: int = 2, d_model: int = 64, experts: int = 8):
 def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
                 pages_ep=512, page=16, maxp=64, prefill_chunk=64, seed=0,
                 time_scale=1.0, chunk_layers=0, decode_steps=1,
-                attn_backend=None, prefix_cache=True, clock=None,
+                attn_backend=None, moe_backend=None,
+                prefix_cache=True, clock=None,
                 mixed_batch=True, token_budget=0, dispatch_dt=0.0,
                 qos=True, faults=None, layouts=None):
     from repro.core.policy import PolicyConfig
@@ -47,7 +48,8 @@ def make_engine(cfg, mesh, *, start="tp", policy=None, ladder=(8, 16, 32),
         start_layout=start, ladder=ladder, prefill_chunk=prefill_chunk,
         temperature=0.0, policy=pol, seed=seed, time_scale=time_scale,
         chunk_layers=chunk_layers, decode_steps=decode_steps,
-        attn_backend=attn_backend, prefix_cache=prefix_cache, clock=clock,
+        attn_backend=attn_backend, moe_backend=moe_backend,
+        prefix_cache=prefix_cache, clock=clock,
         mixed_batch=mixed_batch, token_budget=token_budget,
         dispatch_dt=dispatch_dt, qos=qos, faults=faults, **kw))
 

@@ -1,0 +1,46 @@
+"""Shared workload construction for the dynamic benchmarks.
+
+Currently: the router-skew hook. MoE serving cost depends on the *realized*
+token->expert distribution, not just shapes — a hot expert inflates the
+capacity bucket every expert's GEMM is padded to (or drops tokens at the
+balanced bucket). Benches build skewed routing through these helpers so the
+imbalance knob is one number and identical across benchmarks.
+"""
+from __future__ import annotations
+
+
+def router_weights(cfg, *, skew: float = 0.0, hot: int = 0, seed: int = 0):
+    """(D, E) router weights; ``skew`` adds a constant logit bias toward
+    expert ``hot`` (skew=0 -> balanced random routing; skew >~ 4 routes
+    essentially every token's top-1 to the hot expert)."""
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((cfg.d_model, cfg.num_experts)) * 0.1
+    w[:, hot] = np.abs(w[:, hot]) + skew
+    return jnp.asarray(w, jnp.float32)
+
+
+def routed_dispatch(cfg, router_w, x, *, cap_factor: float | None = None):
+    """Route ``x`` (T, D) through the real router path and build the
+    capacity-bucketed dispatch tensors exactly as the decode FFN does.
+
+    Returns (xd (E, C, D), disp, gate_full, dropped_frac): the grouped-FFN
+    input, the combine tensors, and the fraction of (token, k) assignments
+    dropped by capacity overflow — the imbalance signal."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.moe import _dispatch_tensors, capacity, route
+    T, _ = x.shape
+    E = cfg.num_experts
+    C = capacity(T, cfg, cap_factor)
+    gates, eids, _ = route(cfg, router_w, x)
+    khot = jnp.sum(jax.nn.one_hot(eids, E, dtype=jnp.float32), axis=1)
+    gate_full = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], eids].add(gates)
+    disp, _ = _dispatch_tensors(khot, jnp.zeros((E,), jnp.float32), C)
+    xd = jnp.einsum("tec,td->ecd", disp,
+                    x.astype(jnp.float32)).astype(cfg.compute_dtype)
+    kept = float(disp.sum())
+    total = float(T * cfg.top_k)
+    return xd, disp, gate_full, 1.0 - kept / total

@@ -42,6 +42,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.layouts import EP, TP, get_layout, group_info
+from repro.kernels.expert_reshard.ops import (interleave_shards,
+                                              interleave_width_shards,
+                                              pack_peer_chunks,
+                                              pack_width_chunks)
+from repro.kernels.kv_pack.ops import gather_pages_rows, scatter_pages_rows
 from repro.models.common import ModelConfig
 from repro.models.moe import (ExpertLayout, make_expert_layout, pack_experts,
                               pack_w13, unpack_experts, unpack_w13)
@@ -154,7 +159,8 @@ def make_reshard_experts_pair(cfg: ModelConfig, mesh, src, dst, *,
 
 
 def reshard_experts_direct(cfg: ModelConfig, w13, w2, direction: str,
-                           axis: str, G: int):
+                           axis: str, G: int, *,
+                           backend: str | None = None):
     """Explicit shard_map body (pure EP groups): the paper's two-stage plan.
 
     Shapes (rank-local, leading G consumed by shard_map):
@@ -172,15 +178,19 @@ def reshard_experts_direct(cfg: ModelConfig, w13, w2, direction: str,
     if direction == "ep_to_tp":
         E_loc, W2, D = w13.shape[1], w13.shape[2], w13.shape[3]
         I = W2 // 2
-        # pack per-peer chunks on the (2, I) view so each peer gets matching
-        # gate/up halves: (L,E_loc,2,G,I/G,D) -> (G, L, E_loc, 2, I/G, D)
-        s13 = jnp.moveaxis(w13.reshape(L, E_loc, 2, G, I // G, D), 3, 0)
+        # local permute = the fused pack kernels: L folds into the expert
+        # dim, so the per-chunk stage is ONE launch per weight tensor
+        s13 = pack_peer_chunks(w13.reshape(L * E_loc, W2, D), G,
+                               backend=backend)
+        s13 = s13.reshape(G, L, E_loc, 2 * (I // G), D)
         r13 = lax.all_to_all(s13, axis, split_axis=0, concat_axis=0,
                              tiled=True)
-        # received (G_src, L, E_loc, 2, I/G, D) -> (L, E = G*E_loc, 2I/G, D)
+        # received (G_src, L, E_loc, 2I/G, D) -> (L, E = G*E_loc, 2I/G, D)
         n13 = jnp.moveaxis(r13, 0, 1).reshape(L, G * E_loc, 2 * (I // G), D)
         I2 = w2.shape[3]
-        s2 = jnp.moveaxis(w2.reshape(L, E_loc, D, G, I2 // G), 3, 0)
+        s2 = pack_width_chunks(w2.reshape(L * E_loc, D, I2), G,
+                               backend=backend)
+        s2 = s2.reshape(G, L, E_loc, D, I2 // G)
         r2 = lax.all_to_all(s2, axis, split_axis=0, concat_axis=0, tiled=True)
         n2 = jnp.moveaxis(r2.reshape(G, L, E_loc, D, I2 // G), 0, 1) \
             .reshape(L, G * E_loc, D, I2 // G)
@@ -189,22 +199,27 @@ def reshard_experts_direct(cfg: ModelConfig, w13, w2, direction: str,
     E, Wl, D = w13.shape[1], w13.shape[2], w13.shape[3]
     E_loc = E // G
     Il13 = Wl // 2
-    # exchange first: send each peer its expert block (my width slice)
+    # exchange first: send each peer its expert block (my width slice).
+    # The send side is a pure block split (no permute) -> plain moveaxis.
     s13 = jnp.moveaxis(w13.reshape(L, G, E_loc, 2, Il13, D), 1, 0)
     r13 = lax.all_to_all(s13, axis, split_axis=0, concat_axis=0, tiled=True)
     # received (G_src, L, E_loc, 2, I/G, D): src s holds I-block s ->
-    # interleave src-major inside each of the gate/up halves
-    n13 = jnp.moveaxis(r13, 0, 3).reshape(L, E_loc, 2 * G * Il13, D)
+    # the fused interleave kernel rebuilds complete experts per half
+    n13 = interleave_shards(
+        r13.reshape(G, L * E_loc, 2 * Il13, D),
+        backend=backend).reshape(L, E_loc, 2 * G * Il13, D)
     Il = w2.shape[3]
     s2 = jnp.moveaxis(w2.reshape(L, G, E_loc, D, Il), 1, 0)
     r2 = lax.all_to_all(s2, axis, split_axis=0, concat_axis=0, tiled=True)
-    n2 = jnp.moveaxis(r2.reshape(G, L, E_loc, D, Il), 0, 3) \
-        .reshape(L, E_loc, D, G * Il)
+    n2 = interleave_width_shards(
+        r2.reshape(G, L * E_loc, D, Il),
+        backend=backend).reshape(L, E_loc, D, G * Il)
     return n13, n2
 
 
 def make_reshard_experts_direct(cfg: ModelConfig, mesh, direction: str, *,
-                                model_axis: str = "model"):
+                                model_axis: str = "model",
+                                backend: str | None = None):
     """jit(shard_map(...)) wrapper for the direct path (pure EP only)."""
     G = mesh.shape[model_axis]
     lay_ep = make_expert_layout(cfg.num_experts, G, EP)
@@ -213,12 +228,15 @@ def make_reshard_experts_direct(cfg: ModelConfig, mesh, direction: str, *,
                          "use the XLA path for hybrid groups")
     rm = P(None, model_axis, None, None, None)   # (L, G, ...)
 
+    # check_vma=False: the Pallas permute kernels have no replication
+    # rule; the specs are fully explicit, nothing is replicated
     @functools.partial(shard_map, mesh=mesh, in_specs=(rm, rm),
-                       out_specs=(rm, rm))
+                       out_specs=(rm, rm), check_vma=False)
     def body(w13, w2):
         # local (L, 1, ...) -> squeeze the G dim
         n13, n2 = reshard_experts_direct(
-            cfg, w13.squeeze(1), w2.squeeze(1), direction, model_axis, G)
+            cfg, w13.squeeze(1), w2.squeeze(1), direction, model_axis, G,
+            backend=backend)
         return n13[:, None], n2[:, None]
 
     return jax.jit(body, donate_argnums=(0, 1))
@@ -567,7 +585,7 @@ def plan_tp_to_ep(requests, cfg: ModelConfig, cc: CacheConfig,
 
 def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
                      direction: str, pmax: int, lo: int, hi: int,
-                     model_axis: str):
+                     model_axis: str, backend: str | None = None):
     """Per-rank KV migration body for layers [lo, hi): three-stage
     gather -> all_to_all -> scatter from the source view into a provided
     destination buffer. Shared by the monolithic mover ((lo, hi) = (0, L)
@@ -590,7 +608,10 @@ def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
         r = lax.axis_index(model_axis)
         pool = kv_src.reshape((1, 1) + ep_shape)[0, 0][lo:hi]
         sp = src_pages[0][r]                          # my row (Pmax,)
-        gathered = pool[:, :, sp]                     # (Lc,2,Pmax,page,K,dh)
+        # fused page pack: every (layer, K/V) row of the chunk in ONE launch
+        gathered = gather_pages_rows(
+            pool.reshape(Lc * 2, ep_shape[2], page * K * dh), sp,
+            backend=backend).reshape(Lc, 2, pmax, page, K, dh)
         # heads -> per-dst slices: K = (G/kv_rep) blocks of Kl, tiled kv_rep
         g = gathered.reshape(Lc, 2, pmax, page, K // Kl, Kl, dh)
         g = jnp.moveaxis(g, 4, 0)                     # (K/Kl,Lc,2,P,page,Kl,dh)
@@ -601,9 +622,11 @@ def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
         dp = jnp.where(valid[0], dst_pages[0], 0)     # (G, Pmax); invalid->null
         flat_dst = dp.reshape(-1)
         moved = jnp.moveaxis(recv, 0, 2)              # (Lc,2,G,P,page,Kl,dh)
-        moved = moved.reshape(Lc, 2, G * pmax, page, Kl, dh)
+        moved = moved.reshape(Lc * 2, G * pmax, page * Kl * dh)
         dst = kv_dst.reshape((1, 1) + tp_shape)[0, 0]
-        dst = dst.at[lo:hi, :, flat_dst].set(moved)
+        dst = scatter_pages_rows(
+            dst.reshape(dst.shape[0] * 2, tp_shape[2], page * Kl * dh),
+            flat_dst, moved, row0=lo * 2, backend=backend)
         return dst.reshape(1, 1, NE)
 
     def tp_to_ep(kv_src, kv_dst, src_pages, dst_pages, valid):
@@ -611,7 +634,9 @@ def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
         pool = kv_src.reshape((1, 1) + tp_shape)[0, 0][lo:hi]
         # every rank holds head-slices of ALL pages; send dst d its pages
         sp = jnp.where(valid[0], src_pages[0], 0)     # (G, Pmax)
-        gathered = pool[:, :, sp.reshape(-1)].reshape(
+        gathered = gather_pages_rows(
+            pool.reshape(Lc * 2, tp_shape[2], page * Kl * dh),
+            sp.reshape(-1), backend=backend).reshape(
             Lc, 2, G, pmax, page, Kl, dh)
         send = jnp.moveaxis(gathered, 2, 0)           # (G_dst,Lc,2,P,page,Kl,dh)
         recv = lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
@@ -622,7 +647,10 @@ def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
         full = full.reshape(Lc, 2, pmax, page, K, dh)
         dp = jnp.where(valid[0][r], dst_pages[0][r], 0)   # my new pages
         dst = kv_dst.reshape((1, 1) + ep_shape)[0, 0]
-        dst = dst.at[lo:hi, :, dp].set(full)
+        dst = scatter_pages_rows(
+            dst.reshape(dst.shape[0] * 2, ep_shape[2], page * K * dh),
+            dp, full.reshape(Lc * 2, pmax, page * K * dh),
+            row0=lo * 2, backend=backend)
         return dst.reshape(1, 1, NE)
 
     return ep_to_tp if direction == "ep_to_tp" else tp_to_ep
@@ -630,13 +658,14 @@ def _kv_migrate_body(cfg: ModelConfig, cc: CacheConfig, G: int,
 
 def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
                     pmax: int, *, model_axis: str = "model",
-                    data_axis: str = "data"):
+                    data_axis: str = "data", backend: str | None = None):
     """Build the jitted monolithic KV migration for a fixed plan width
     `pmax`: the shared body over all layers, scattering into a fresh zero
     buffer; the source is donated (single resident copy)."""
     G = mesh.shape[model_axis]
     L = cc.view_shape(cfg, G, EP)[0]
-    inner = _kv_migrate_body(cfg, cc, G, direction, pmax, 0, L, model_axis)
+    inner = _kv_migrate_body(cfg, cc, G, direction, pmax, 0, L, model_axis,
+                             backend)
 
     def body(kv_flat, src_pages, dst_pages, valid):
         dst = jnp.zeros_like(kv_flat)
@@ -646,7 +675,7 @@ def make_migrate_kv(cfg: ModelConfig, cc: CacheConfig, mesh, direction: str,
     rep_spec = P(data_axis, None, None)          # plans replicated over model
     smapped = shard_map(body, mesh=mesh,
                         in_specs=(flat_spec, rep_spec, rep_spec, rep_spec),
-                        out_specs=flat_spec)
+                        out_specs=flat_spec, check_vma=False)
     return jax.jit(smapped, donate_argnums=(0,))
 
 
@@ -709,7 +738,8 @@ def make_reshard_experts_pair_chunk(cfg: ModelConfig, mesh, src, dst,
 
 def make_reshard_experts_direct_chunk(cfg: ModelConfig, mesh, direction: str,
                                       lo: int, hi: int, *,
-                                      model_axis: str = "model"):
+                                      model_axis: str = "model",
+                                      backend: str | None = None):
     """Direct-path chunk mover (pure EP groups): the two-stage shard_map
     plan of `reshard_experts_direct`, restricted to layers [lo, hi)."""
     G = mesh.shape[model_axis]
@@ -720,11 +750,11 @@ def make_reshard_experts_direct_chunk(cfg: ModelConfig, mesh, direction: str,
     rm = P(None, model_axis, None, None, None)
 
     @functools.partial(shard_map, mesh=mesh, in_specs=(rm, rm, rm, rm),
-                       out_specs=(rm, rm))
+                       out_specs=(rm, rm), check_vma=False)
     def body(w13, w2, d13, d2):
         n13, n2 = reshard_experts_direct(
             cfg, w13[lo:hi].squeeze(1), w2[lo:hi].squeeze(1), direction,
-            model_axis, G)
+            model_axis, G, backend=backend)
         return d13.at[lo:hi].set(n13[:, None]), d2.at[lo:hi].set(n2[:, None])
 
     return jax.jit(body, donate_argnums=(2, 3))
@@ -732,7 +762,8 @@ def make_reshard_experts_direct_chunk(cfg: ModelConfig, mesh, direction: str,
 
 def make_migrate_kv_chunk(cfg: ModelConfig, cc: CacheConfig, mesh,
                           direction: str, pmax: int, lo: int, hi: int, *,
-                          model_axis: str = "model", data_axis: str = "data"):
+                          model_axis: str = "model", data_axis: str = "data",
+                          backend: str | None = None):
     """Chunked KV migration: move plan pages of KV layers [lo, hi) from the
     live source buffer into the (donated) staged destination buffer.
 
@@ -742,11 +773,12 @@ def make_migrate_kv_chunk(cfg: ModelConfig, cc: CacheConfig, mesh,
     serves as the commit-time dirty-page delta pass.
     """
     G = mesh.shape[model_axis]
-    body = _kv_migrate_body(cfg, cc, G, direction, pmax, lo, hi, model_axis)
+    body = _kv_migrate_body(cfg, cc, G, direction, pmax, lo, hi, model_axis,
+                            backend)
     flat_spec = P(data_axis, model_axis)
     rep_spec = P(data_axis, None, None)
     smapped = shard_map(
         body, mesh=mesh,
         in_specs=(flat_spec, flat_spec, rep_spec, rep_spec, rep_spec),
-        out_specs=flat_spec)
+        out_specs=flat_spec, check_vma=False)
     return jax.jit(smapped, donate_argnums=(1,))

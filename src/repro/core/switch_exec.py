@@ -46,8 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.layouts import EP, TP, get_layout
-from repro.core.switch import (apply_assignments, copy_kv_pages_host,
+from repro.core.layouts import EP, TP, get_layout, group_info
+from repro.core.switch import (apply_assignments,
                                expert_pair_dst_struct, kv_migration_direction,
                                make_migrate_kv, make_migrate_kv_chunk,
                                make_reshard_experts_direct,
@@ -56,6 +56,7 @@ from repro.core.switch import (apply_assignments, copy_kv_pages_host,
                                make_reshard_experts_pair_chunk,
                                pack_experts_host, pair_expert_layouts,
                                pairs_to_plan, plan_cross_world, plan_switch)
+from repro.kernels.kv_pack.ops import gather_pages_rows
 from repro.models.common import ModelConfig
 from repro.models.moe import make_expert_layout
 from repro.serving.kvcache import (CacheConfig, PageAllocator, PrefixCache,
@@ -124,9 +125,12 @@ class SwitchExecutor:
 
     def __init__(self, cfg: ModelConfig, cc: CacheConfig, mesh, *,
                  model_axis: str = "model", data_axis: str = "data",
-                 direct_reshard: bool = True):
+                 direct_reshard: bool = True, backend: str | None = None):
         self.cfg, self.cc, self.mesh = cfg, cc, mesh
         self.m, self.da = model_axis, data_axis
+        # kernel backend for the fused staging movers (kv_pack page
+        # gather/scatter + expert_reshard permutes); None = auto
+        self.backend = backend
         self.G = mesh.shape[model_axis]
         self.Dd = mesh.shape[data_axis]
         self.chips = self.Dd * self.G
@@ -161,7 +165,8 @@ class SwitchExecutor:
                     "direct",
                     make_reshard_experts_direct(self.cfg, self.mesh,
                                                 self._direct_direction(src),
-                                                model_axis=self.m))
+                                                model_axis=self.m,
+                                                backend=self.backend))
             else:
                 build = make_reshard_experts_pair(
                     self.cfg, self.mesh, src, dst, model_axis=self.m,
@@ -176,7 +181,7 @@ class SwitchExecutor:
         if key not in self._migrate_fns:
             self._migrate_fns[key] = make_migrate_kv(
                 self.cfg, self.cc, self.mesh, direction, pmax,
-                model_axis=self.m, data_axis=self.da)
+                model_axis=self.m, data_axis=self.da, backend=self.backend)
         return self._migrate_fns[key]
 
     def chunk_reshard_fn(self, src, dst, lo: int, hi: int):
@@ -185,7 +190,7 @@ class SwitchExecutor:
             if self._use_direct(src, dst):
                 fn = make_reshard_experts_direct_chunk(
                     self.cfg, self.mesh, self._direct_direction(src), lo, hi,
-                    model_axis=self.m)
+                    model_axis=self.m, backend=self.backend)
             else:
                 fn = make_reshard_experts_pair_chunk(
                     self.cfg, self.mesh, src, dst, lo, hi,
@@ -198,7 +203,7 @@ class SwitchExecutor:
         if key not in self._chunk_migrate_fns:
             self._chunk_migrate_fns[key] = make_migrate_kv_chunk(
                 self.cfg, self.cc, self.mesh, direction, pmax, lo, hi,
-                model_axis=self.m, data_axis=self.da)
+                model_axis=self.m, data_axis=self.da, backend=self.backend)
         return self._chunk_migrate_fns[key]
 
     def _zeros(self, shape, dtype, spec):
@@ -376,6 +381,37 @@ class SwitchExecutor:
             s.kv_dst = mfn(kv_flat, s.kv_dst, sp, dp, vm)
         s.next_chunk += 1
         return not s.done
+
+    def warmup_movers(self, src, dst, experts, kv_flat,
+                      chunk_layers: int) -> None:
+        """Compile every chunked-switch mover for src->dst before traffic:
+        a dry start/advance/abort with an EMPTY plan (pmax = the standard
+        minimum width) plus the commit-time delta executable, so the first
+        LIVE switch selects executables, never compiles (paper §4.4).
+
+        Read-only on the live state: start() stages fresh zero destination
+        buffers (the only donated arguments), plans with no requests, and
+        the session is aborted — request metadata, allocators, and the
+        source buffers are untouched by construction."""
+        src, dst = get_layout(src), get_layout(dst)
+        self.start(src, dst, [], experts, kv_flat, chunk_layers)
+        s = self.session
+        while self.advance(experts, kv_flat):
+            pass
+        if s.kv_dst is not None:
+            # the commit-time dirty-page delta mover (all layers, fixed
+            # DELTA_PMAX width) only runs when a window got dirty — warm
+            # it on a throwaway zero buffer so a dirty commit never compiles
+            mfn = self.chunk_migrate_fn(s.kv_dir, 0, self.Lk, DELTA_PMAX)
+            sp, dp, vm = s.plan_arrays
+            scratch = self._zeros(kv_flat.shape, kv_flat.dtype,
+                                  (self.da, self.m))
+            jax.block_until_ready(mfn(kv_flat, scratch, sp, dp, vm))
+        if s.experts_dst is not None:
+            jax.block_until_ready(s.experts_dst["w13"])
+        if s.kv_dst is not None:
+            jax.block_until_ready(s.kv_dst)
+        self.abort()
 
     def abort(self) -> SwitchStats:
         """Abandon the in-flight chunked session at a chunk boundary
@@ -591,11 +627,13 @@ class CrossWorldSwitcher:
 
     def __init__(self, cfg: ModelConfig, cc: CacheConfig, Dd: int,
                  moe_host: dict | None, *, model_axis: str = "model",
-                 data_axis: str = "data"):
+                 data_axis: str = "data", backend: str | None = None):
         self.cfg, self.cc, self.Dd = cfg, cc, Dd
         self.moe_host = moe_host        # canonical {"w13": (L,E,..)} np
         self.m, self.da = model_axis, data_axis
+        self.backend = backend          # kv_pack backend for staged gathers
         self.Lk = num_kv_layers(cfg)
+        self._stage_fns: dict = {}      # (view, lo, hi, W) -> jitted gather
         self.session: CrossWorldSession | None = None
 
     def _layer_chunks(self, chunk_layers: int) -> list:
@@ -639,6 +677,79 @@ class CrossWorldSwitcher:
             plan_pause_s=time.perf_counter() - t0, caches=caches)
         return self.session
 
+    def _stage_fn(self, view: tuple, lo: int, hi: int, W: int):
+        """Jitted fused page gather for one source rank's flat (NE,) row:
+        layers [lo, hi) of the pool, W planned pages, ONE kv_pack kernel
+        launch -> (Lc, 2, W, page, Kh, dh). Cached per (view, layer range,
+        pow2 plan width) so later chunks/switches reuse the executable."""
+        key = (view, lo, hi, W)
+        fn = self._stage_fns.get(key)
+        if fn is None:
+            Lc, pages, tail = hi - lo, view[2], view[3:]
+            backend = self.backend
+
+            def stage(kv_row, idx):
+                pool = kv_row.reshape(view)[lo:hi].reshape(Lc * 2, pages, -1)
+                out = gather_pages_rows(pool, idx, backend=backend)
+                return out.reshape((Lc, 2, W) + tail)
+
+            fn = self._stage_fns[key] = jax.jit(stage)
+        return fn
+
+    def _stage_kv_chunk(self, d: int, kv_flat, s, moves, lo: int,
+                        hi: int) -> None:
+        """One data group's planned page copies for KV layers [lo, hi).
+
+        The fused replacement for the device_get-everything + per-page
+        host loop (`copy_kv_pages_host`, kept as the oracle): planned
+        pages are grouped per (source pool, destination pool) and pulled
+        out of the LIVE device buffer by one fused kv_pack row gather per
+        group, so only the moved pages ever cross to the host. The packed
+        block then lands in the staged host buffer through the same
+        full-head canonicalization: per-rank (EP) source pages already
+        hold all K heads; a pooled (TP) source page is reassembled from
+        its kv_rep representative ranks; per-rank dst lands whole pages
+        in the owner pool, pooled dst lands each rank's kv_block slice."""
+        if not moves:
+            return
+        src_s, dst_s = s.src, s.dst
+        gs = group_info(self.cfg, s.G_src)
+        gd = group_info(self.cfg, s.G_dst)
+        sv = self.cc.view_shape(self.cfg, s.G_src, src_s)
+        dv = self.cc.view_shape(self.cfg, s.G_dst, dst_s)
+        dst_views = [s.kv_host[d, g].reshape(dv) for g in range(s.G_dst)]
+        groups: dict = {}
+        for spool, sp, dpool, dp in moves:
+            # pooled sides ignore their pool id (reads span the
+            # representative ranks; writes span every rank's view)
+            key = (spool if src_s.kv_per_rank else 0,
+                   dpool if dst_s.kv_per_rank else 0)
+            if key not in groups:
+                groups[key] = ([], [])
+            groups[key][0].append(sp)
+            groups[key][1].append(dp)
+        for (spool, dpool), (sps, dps) in groups.items():
+            n = len(sps)
+            W = _pow2_pad(n)
+            idx = np.zeros(W, np.int32)
+            idx[:n] = sps
+            idxj = jnp.asarray(idx)
+            fn = self._stage_fn(sv, lo, hi, W)
+            if src_s.kv_per_rank:
+                data = np.asarray(fn(kv_flat[d, spool], idxj))[:, :, :n]
+            else:
+                data = np.concatenate(
+                    [np.asarray(fn(kv_flat[d, g], idxj))[:, :, :n]
+                     for g in range(0, s.G_src, gs.kv_rep)], axis=4)
+            dparr = np.asarray(dps)
+            if dst_s.kv_per_rank:
+                dst_views[dpool][lo:hi, :, dparr] = data
+            else:
+                for g in range(s.G_dst):
+                    kb = gd.kv_block(g)
+                    dst_views[g][lo:hi, :, dparr] = \
+                        data[..., kb:kb + gd.kv_local, :]
+
     def advance(self, kv_flat) -> bool:
         """Stage the next layer chunk on host (decode may keep running on
         the source in between). Returns True while chunks remain."""
@@ -651,11 +762,9 @@ class CrossWorldSwitcher:
                 pack_experts_host(self.cfg, self.moe_host, s.dst, eg,
                                   w_lo, w_hi))
         if s.kv_host is not None and kv_hi > kv_lo:
-            src_host = np.asarray(kv_flat)             # (Dd, G_src, NE)
             for d in range(self.Dd):
-                copy_kv_pages_host(self.cfg, self.cc, s.src, s.dst,
-                                   s.G_src, s.G_dst, src_host[d],
-                                   s.kv_host[d], s.moves[d], kv_lo, kv_hi)
+                self._stage_kv_chunk(d, kv_flat, s, s.moves[d],
+                                     kv_lo, kv_hi)
         s.next_chunk += 1
         return not s.done
 
@@ -723,11 +832,8 @@ class CrossWorldSwitcher:
         if s.kv_host is not None:
             per, delta_pages = self._delta_moves(live_ids)
             if delta_pages:
-                src_host = np.asarray(kv_flat)
                 for d in range(self.Dd):
-                    copy_kv_pages_host(self.cfg, self.cc, s.src, s.dst,
-                                       s.G_src, s.G_dst, src_host[d],
-                                       s.kv_host[d], per[d], 0, self.Lk)
+                    self._stage_kv_chunk(d, kv_flat, s, per[d], 0, self.Lk)
         apply_assignments([a for a in s.assignments
                            if a.req.rid in live_ids])
         experts = None

@@ -1,0 +1,74 @@
+"""Shared backend resolution for the four kernel packages.
+
+Every ``ops.py`` dispatcher funnels through :func:`resolve_backend`, so the
+policy lives in exactly one place:
+
+  explicit "ref"                 -> pure-jnp oracle
+  explicit "kernel" / "pallas"   -> Pallas (compiled on TPU, interpret mode
+                                    elsewhere — a *debugging* path off-TPU)
+  explicit "interpret"           -> Pallas interpret mode, even on TPU
+  None (auto)                    -> REPRO_FORCE_REF=1 forces ref; otherwise
+                                    kernel on TPU, ref on CPU/GPU hosts
+
+The auto default is deliberately ref off-TPU: interpret-mode Pallas is
+orders of magnitude slower than the jnp oracle and is only ever wanted
+explicitly (parity tests, roofline bench).
+
+The module also keeps trace-time dispatch counters so tests can assert that
+a given code path (e.g. chunked switch staging) actually routes through the
+kernel ops rather than generic XLA gathers.  Counters tick once per *trace*,
+not per execution — sufficient to prove routing.
+"""
+from __future__ import annotations
+
+import os
+from collections import Counter
+
+import jax
+
+#: (op_name, resolved_backend) -> number of traces since last reset_counts().
+COUNTS: Counter[tuple[str, str]] = Counter()
+
+
+def reset_counts() -> None:
+    COUNTS.clear()
+
+
+def record(op: str, resolved: str) -> None:
+    """Called by ops.py at trace time, once per dispatcher invocation."""
+    COUNTS[(op, resolved)] += 1
+
+
+def calls(op: str, resolved: str | None = None) -> int:
+    """Total recorded traces for `op` (optionally for one backend)."""
+    if resolved is not None:
+        return COUNTS[(op, resolved)]
+    return sum(n for (o, _), n in COUNTS.items() if o == op)
+
+
+def resolve_backend(explicit: str | None = None, *,
+                    env: str | None = None,
+                    platform: str | None = None) -> str:
+    """Collapse (explicit request, env override, platform) to one of
+    {"ref", "pallas", "interpret"}.
+
+    `env`/`platform` default to the real environment; tests inject them to
+    pin a branch without monkeypatching the process.
+    """
+    if env is None:
+        env = os.environ.get("REPRO_FORCE_REF", "0")
+    if explicit == "ref":
+        return "ref"
+    if platform is None:
+        platform = jax.default_backend()
+    if explicit in ("kernel", "pallas"):
+        return "pallas" if platform == "tpu" else "interpret"
+    if explicit == "interpret":
+        return "interpret"
+    if explicit is not None:
+        raise ValueError(
+            f"unknown kernel backend {explicit!r}; expected one of "
+            "'ref', 'kernel', 'pallas', 'interpret', or None (auto)")
+    if env == "1":
+        return "ref"
+    return "pallas" if platform == "tpu" else "ref"

@@ -39,6 +39,49 @@ def pack_peer_chunks_pallas(w13: jax.Array, G: int, *,
     return out.reshape(G, E_loc, 2 * (I // G), D)
 
 
+def _pack_w_kernel(w_ref, o_ref):
+    # w (1, D, G, I/G) block for one expert -> o (1, 1, D, I/G)
+    g = pl.program_id(0)
+    o_ref[0, 0] = w_ref[0, :, g]
+
+
+def pack_width_chunks_pallas(w2: jax.Array, G: int, *,
+                             interpret: bool = True) -> jax.Array:
+    """w2 (E_loc, D, I) -> (G, E_loc, D, I/G): per-peer down-proj chunks."""
+    E_loc, D, I = w2.shape
+    wv = w2.reshape(E_loc, D, G, I // G)
+    return pl.pallas_call(
+        _pack_w_kernel,
+        grid=(G, E_loc),
+        in_specs=[pl.BlockSpec((1, D, G, I // G),
+                               lambda g, e: (e, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, D, I // G),
+                               lambda g, e: (g, e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, E_loc, D, I // G), w2.dtype),
+        interpret=interpret,
+    )(wv)
+
+
+def _interleave_w_kernel(c_ref, o_ref):
+    # c (G, 1, D, Ic) all peers' shards of one expert -> o (1, D, G, Ic)
+    o_ref[0] = jnp.moveaxis(c_ref[:, 0], 0, 1)
+
+
+def interleave_width_shards_pallas(chunks: jax.Array, *,
+                                   interpret: bool = True) -> jax.Array:
+    """chunks (G, E_loc, D, Ic) -> (E_loc, D, G*Ic): inverse of pack_width."""
+    G, E_loc, D, Ic = chunks.shape
+    out = pl.pallas_call(
+        _interleave_w_kernel,
+        grid=(E_loc,),
+        in_specs=[pl.BlockSpec((G, 1, D, Ic), lambda e: (0, e, 0, 0))],
+        out_specs=pl.BlockSpec((1, D, G, Ic), lambda e: (e, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E_loc, D, G, Ic), chunks.dtype),
+        interpret=interpret,
+    )(chunks)
+    return out.reshape(E_loc, D, G * Ic)
+
+
 def _interleave_kernel(c_ref, o_ref):
     # c (G, 1, 2, half, D) all peers' shards of one expert -> o (1, 2, G, half, D)
     o_ref[0] = jnp.moveaxis(c_ref[:, 0], 0, 1)

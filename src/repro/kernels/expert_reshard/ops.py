@@ -1,29 +1,46 @@
 """Jit'd dispatcher for the expert-permute kernels."""
 from __future__ import annotations
 
-import os
-
-import jax
-
-from repro.kernels.expert_reshard.kernel import (interleave_shards_pallas,
-                                                 pack_peer_chunks_pallas)
-from repro.kernels.expert_reshard.ref import (interleave_shards_ref,
-                                              pack_peer_chunks_ref)
-
-
-def _ref() -> bool:
-    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+from repro.kernels import dispatch
+from repro.kernels.expert_reshard.kernel import (
+    interleave_shards_pallas, interleave_width_shards_pallas,
+    pack_peer_chunks_pallas, pack_width_chunks_pallas)
+from repro.kernels.expert_reshard.ref import (
+    interleave_shards_ref, interleave_width_shards_ref,
+    pack_peer_chunks_ref, pack_width_chunks_ref)
 
 
 def pack_peer_chunks(w13, G: int, *, backend: str | None = None):
-    if backend == "ref" or (backend is None and _ref()):
+    """w13 (E_loc, 2I, D) -> (G, E_loc, 2*(I/G), D): per-peer gate/up halves."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("expert_reshard.pack_peer_chunks", b)
+    if b == "ref":
         return pack_peer_chunks_ref(w13, G)
-    return pack_peer_chunks_pallas(w13, G,
-                                   interpret=jax.default_backend() != "tpu")
+    return pack_peer_chunks_pallas(w13, G, interpret=(b == "interpret"))
 
 
 def interleave_shards(chunks, *, backend: str | None = None):
-    if backend == "ref" or (backend is None and _ref()):
+    """chunks (G, E_loc, 2*(I/G), D) -> (E_loc, 2I, D): inverse of pack."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("expert_reshard.interleave_shards", b)
+    if b == "ref":
         return interleave_shards_ref(chunks)
-    return interleave_shards_pallas(chunks,
-                                    interpret=jax.default_backend() != "tpu")
+    return interleave_shards_pallas(chunks, interpret=(b == "interpret"))
+
+
+def pack_width_chunks(w2, G: int, *, backend: str | None = None):
+    """w2 (E_loc, D, I) -> (G, E_loc, D, I/G): down-proj peer chunks."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("expert_reshard.pack_width_chunks", b)
+    if b == "ref":
+        return pack_width_chunks_ref(w2, G)
+    return pack_width_chunks_pallas(w2, G, interpret=(b == "interpret"))
+
+
+def interleave_width_shards(chunks, *, backend: str | None = None):
+    """chunks (G, E_loc, D, Ic) -> (E_loc, D, G*Ic): inverse of pack_width."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("expert_reshard.interleave_width_shards", b)
+    if b == "ref":
+        return interleave_width_shards_ref(chunks)
+    return interleave_width_shards_pallas(chunks, interpret=(b == "interpret"))

@@ -14,6 +14,20 @@ def pack_peer_chunks_ref(w13: jax.Array, G: int) -> jax.Array:
     return jnp.moveaxis(w, 2, 0).reshape(G, E_loc, 2 * (I // G), D)
 
 
+def pack_width_chunks_ref(w2: jax.Array, G: int) -> jax.Array:
+    """EP->TP local permute for down-proj: w2 (E_loc, D, I) ->
+    (G, E_loc, D, I/G)."""
+    E_loc, D, I = w2.shape
+    return jnp.moveaxis(w2.reshape(E_loc, D, G, I // G), 2, 0)
+
+
+def interleave_width_shards_ref(chunks: jax.Array) -> jax.Array:
+    """TP->EP local permute for down-proj: chunks (G, E_loc, D, Ic) ->
+    (E_loc, D, G*Ic), src-major inside the width axis."""
+    G, E_loc, D, Ic = chunks.shape
+    return jnp.moveaxis(chunks, 0, 2).reshape(E_loc, D, G * Ic)
+
+
 def interleave_shards_ref(chunks: jax.Array) -> jax.Array:
     """TP->EP local permute: received per-peer width shards -> complete
     experts. chunks (G, E_loc, 2*(I/G), D) -> (E_loc, 2I, D)."""

@@ -12,6 +12,8 @@ moved with a dynamic slice.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -38,6 +40,67 @@ def gather_pages_pallas(pool: jax.Array, idx: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((n, page, K, dh), pool.dtype),
         interpret=interpret,
     )(idx, pool)
+
+
+def _pack_rows_kernel(idx_ref, pool_ref, o_ref):
+    r = pl.program_id(0)
+    pid = idx_ref[0]
+    o_ref[...] = pool_ref[pl.ds(r, 1), pl.ds(pid, 1)]
+
+
+def gather_pages_rows_pallas(pool: jax.Array, idx: jax.Array, *,
+                             interpret: bool = True) -> jax.Array:
+    """Row-batched gather: pool (R, pages, M); idx (n,) -> (R, n, M).
+
+    One launch stages every (layer, K/V) row of a chunk's pool view — the
+    fused per-chunk mover of the switch staging path.  Grid (R, n): each
+    step moves one page of one row with a dynamic slice out of HBM.
+    """
+    R, _, M = pool.shape
+    n = idx.shape[0]
+    return pl.pallas_call(
+        _pack_rows_kernel,
+        grid=(R, n),
+        in_specs=[
+            pl.BlockSpec((1,), lambda r, i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M), lambda r, i: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, n, M), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+def _scatter_rows_kernel(idx_ref, vals_ref, pool_in_ref, pool_out_ref, *,
+                         row0: int):
+    del pool_in_ref   # aliased with pool_out_ref
+    r = pl.program_id(0)
+    pid = idx_ref[0]
+    pool_out_ref[pl.ds(row0 + r, 1), pl.ds(pid, 1)] = vals_ref[...]
+
+
+def scatter_pages_rows_pallas(pool: jax.Array, idx: jax.Array,
+                              vals: jax.Array, *, row0: int = 0,
+                              interpret: bool = True) -> jax.Array:
+    """Row-batched scatter: pool[row0 + r, idx[i]] = vals[r, i].
+
+    pool (R, pages, M), idx (n,), vals (Rv, n, M) with row0 + Rv <= R.
+    Input/output aliased: one in-place HBM pass commits a whole chunk.
+    """
+    Rv, n, M = vals.shape
+    return pl.pallas_call(
+        partial(_scatter_rows_kernel, row0=row0),
+        grid=(Rv, n),
+        in_specs=[
+            pl.BlockSpec((1,), lambda r, i: (i,)),
+            pl.BlockSpec((1, 1, M), lambda r, i: (r, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, vals, pool)
 
 
 def _scatter_kernel(idx_ref, vals_ref, pool_in_ref, pool_out_ref):

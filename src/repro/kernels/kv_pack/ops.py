@@ -1,28 +1,52 @@
 """Jit'd dispatcher for the KV page pack/unpack kernels."""
 from __future__ import annotations
 
-import os
-
-import jax
-
+from repro.kernels import dispatch
 from repro.kernels.kv_pack.kernel import (gather_pages_pallas,
-                                          scatter_pages_pallas)
-from repro.kernels.kv_pack.ref import gather_pages_ref, scatter_pages_ref
-
-
-def _ref() -> bool:
-    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+                                          gather_pages_rows_pallas,
+                                          scatter_pages_pallas,
+                                          scatter_pages_rows_pallas)
+from repro.kernels.kv_pack.ref import (gather_pages_ref,
+                                       gather_pages_rows_ref,
+                                       scatter_pages_ref,
+                                       scatter_pages_rows_ref)
 
 
 def gather_pages(pool, idx, *, backend: str | None = None):
-    if backend == "ref" or (backend is None and _ref()):
+    """pool (pages, page, K, dh), idx (n,) -> (n, page, K, dh)."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("kv_pack.gather_pages", b)
+    if b == "ref":
         return gather_pages_ref(pool, idx)
-    return gather_pages_pallas(pool, idx,
-                               interpret=jax.default_backend() != "tpu")
+    return gather_pages_pallas(pool, idx, interpret=(b == "interpret"))
 
 
 def scatter_pages(pool, idx, vals, *, backend: str | None = None):
-    if backend == "ref" or (backend is None and _ref()):
+    """pool.at[idx].set(vals) with pool (pages, page, K, dh)."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("kv_pack.scatter_pages", b)
+    if b == "ref":
         return scatter_pages_ref(pool, idx, vals)
-    return scatter_pages_pallas(pool, idx, vals,
-                                interpret=jax.default_backend() != "tpu")
+    return scatter_pages_pallas(pool, idx, vals, interpret=(b == "interpret"))
+
+
+def gather_pages_rows(pool, idx, *, backend: str | None = None):
+    """Row-batched gather for switch staging: pool (R, pages, M), idx (n,)
+    -> (R, n, M). One fused launch replaces R generic XLA gathers."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("kv_pack.gather_pages_rows", b)
+    if b == "ref":
+        return gather_pages_rows_ref(pool, idx)
+    return gather_pages_rows_pallas(pool, idx, interpret=(b == "interpret"))
+
+
+def scatter_pages_rows(pool, idx, vals, *, row0: int = 0,
+                       backend: str | None = None):
+    """Row-batched scatter: pool (R, pages, M) with
+    pool[row0 + r, idx[i]] = vals[r, i] for vals (Rv, n, M)."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("kv_pack.scatter_pages_rows", b)
+    if b == "ref":
+        return scatter_pages_rows_ref(pool, idx, vals, row0=row0)
+    return scatter_pages_rows_pallas(pool, idx, vals, row0=row0,
+                                     interpret=(b == "interpret"))

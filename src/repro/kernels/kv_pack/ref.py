@@ -14,3 +14,14 @@ def scatter_pages_ref(pool: jax.Array, idx: jax.Array,
                       vals: jax.Array) -> jax.Array:
     """Inverse: write vals (n, page, K, dh) at idx into pool."""
     return pool.at[idx].set(vals)
+
+
+def gather_pages_rows_ref(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """pool (R, pages, M); idx (n,) -> (R, n, M)."""
+    return pool[:, idx]
+
+
+def scatter_pages_rows_ref(pool: jax.Array, idx: jax.Array, vals: jax.Array,
+                           *, row0: int = 0) -> jax.Array:
+    """pool[row0 + r, idx[i]] = vals[r, i] for vals (Rv, n, M)."""
+    return pool.at[row0:row0 + vals.shape[0], idx].set(vals)

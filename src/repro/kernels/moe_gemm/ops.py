@@ -1,18 +1,18 @@
 """Jit'd dispatcher for the grouped expert GEMM."""
 from __future__ import annotations
 
-import os
-
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.moe_gemm.kernel import grouped_matmul_pallas
 from repro.kernels.moe_gemm.ref import grouped_matmul_ref
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, *,
                    backend: str | None = None) -> jax.Array:
-    if backend == "ref" or (backend is None and
-                            os.environ.get("REPRO_FORCE_REF", "0") == "1"):
+    """x (E,C,D) @ w (E,W,D) -> (E,C,W), fp32 accumulation per expert."""
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("moe_gemm.grouped_matmul", b)
+    if b == "ref":
         return grouped_matmul_ref(x, w)
-    interpret = jax.default_backend() != "tpu"
-    return grouped_matmul_pallas(x, w, interpret=interpret)
+    return grouped_matmul_pallas(x, w, interpret=(b == "interpret"))

@@ -31,6 +31,11 @@ def _paged_attn_kernel(q_ref, bt_ref, kvlen_ref, qoff_ref, kpool_ref,
     scale = 1.0 / math.sqrt(dh)
 
     q = q_ref[0].astype(jnp.float32) * scale          # (Sq, H, dh)
+    # GQA without materializing repeated KV: the score/accumulate einsums
+    # contract each KV head against its `rep` query heads directly, so the
+    # chunk tile stays (P, K, dh) instead of (P, H, dh). Query head
+    # h == k * rep + r, matching the repeat-based expansion head order.
+    q4 = q.reshape(Sq, K, rep, dh)
     kv_len = kvlen_ref[0]
     q_pos = qoff_ref[0] + lax.iota(jnp.int32, Sq)     # (Sq,)
 
@@ -50,11 +55,10 @@ def _paged_attn_kernel(q_ref, bt_ref, kvlen_ref, qoff_ref, kpool_ref,
         kb, vb = lax.fori_loop(0, page_chunk, load_page, (kb0, kb0))
         kc = kb.reshape(page_chunk * page, K, dh).astype(jnp.float32)
         vc = vb.reshape(page_chunk * page, K, dh).astype(jnp.float32)
-        kc = jnp.repeat(kc, rep, axis=1)               # (P, H, dh)
-        vc = jnp.repeat(vc, rep, axis=1)
         kv_pos = j * page_chunk * page + lax.iota(jnp.int32, page_chunk * page)
 
-        s = jnp.einsum("qhd,khd->hqk", q, kc)          # (H, Sq, P)
+        s = jnp.einsum("qkrd,pkd->krqp", q4, kc)       # (K, rep, Sq, P)
+        s = s.reshape(H, Sq, page_chunk * page)
         ok = (kv_pos[None, None, :] < kv_len) \
             & (kv_pos[None, None, :] <= q_pos[None, :, None])
         if window > 0:
@@ -64,13 +68,24 @@ def _paged_attn_kernel(q_ref, bt_ref, kvlen_ref, qoff_ref, kpool_ref,
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l = l * corr + p.sum(-1)
-        acc = acc * corr[..., None] + jnp.einsum("hqk,khd->hqd", p, vc)
+        p4 = p.reshape(K, rep, Sq, page_chunk * page)
+        acc = acc * corr[..., None] \
+            + jnp.einsum("krqp,pkd->krqd", p4, vc).reshape(H, Sq, dh)
         return m_new, l, acc
 
     m0 = jnp.full((H, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((H, Sq), jnp.float32)
     a0 = jnp.zeros((H, Sq, dh), jnp.float32)
-    m, l, acc = lax.fori_loop(0, nchunk, chunk_body, (m0, l0, a0))
+    # chunk-level early exit: every valid position needs kv_pos < kv_len
+    # AND kv_pos <= max q_pos, so chunks at or past that bound are fully
+    # masked — their contribution would be exp(NEG_INF - m) == 0 (identity
+    # on the carry). Rows with NO valid position at all (kv_len == 0, or
+    # q_pos >= kv_len) are unspecified in every backend; the engine masks
+    # them downstream.
+    span = page_chunk * page
+    bound = jnp.minimum(kv_len, qoff_ref[0] + Sq)
+    nlive = jnp.minimum(nchunk, (bound + span - 1) // span)
+    m, l, acc = lax.fori_loop(0, nlive, chunk_body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)[..., None]       # (H, Sq, dh)
     o_ref[0] = jnp.moveaxis(out, 0, 1).astype(o_ref.dtype)
 

@@ -1,20 +1,16 @@
-"""Jit'd dispatcher for paged attention: Pallas on TPU, interpret elsewhere.
+"""Jit'd dispatcher for paged attention.
 
-Set REPRO_FORCE_REF=1 to bypass the kernel entirely (pure-jnp oracle).
+Backend policy lives in repro.kernels.dispatch: explicit "ref"/"kernel"/
+"pallas"/"interpret", or None = auto (REPRO_FORCE_REF=1 forces ref; kernel
+on TPU, ref elsewhere).
 """
 from __future__ import annotations
 
-import os
-from functools import partial
-
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.paged_attention.kernel import paged_attention_pallas
 from repro.kernels.paged_attention.ref import paged_attention_ref
-
-
-def use_ref() -> bool:
-    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
 
 
 def paged_attention(q, k_pool, v_pool, block_table, kv_lens, *, q_offset,
@@ -22,11 +18,13 @@ def paged_attention(q, k_pool, v_pool, block_table, kv_lens, *, q_offset,
                     backend: str | None = None) -> jax.Array:
     """q (B,Sq,H,dh); pools (pages,page,K,dh); block_table (B,maxp);
     kv_lens (B,); q_offset (B,). See ref.py for masking semantics."""
-    if backend == "ref" or (backend is None and use_ref()):
+    b = dispatch.resolve_backend(backend)
+    dispatch.record("paged_attention.paged_attention", b)
+    if b == "ref":
         return paged_attention_ref(q, k_pool, v_pool, block_table, kv_lens,
                                    q_offset=q_offset, window=window,
                                    page_chunk=page_chunk)
-    interpret = jax.default_backend() != "tpu"
     return paged_attention_pallas(q, k_pool, v_pool, block_table, kv_lens,
                                   q_offset=q_offset, window=window,
-                                  page_chunk=page_chunk, interpret=interpret)
+                                  page_chunk=page_chunk,
+                                  interpret=(b == "interpret"))

@@ -112,6 +112,13 @@ def main():
                     help="serve the HTTP/SSE frontend on this port "
                          "instead of replaying a trace (POST /v1/generate"
                          ", GET /v1/metrics; 0 = pick a free port)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["ref", "kernel", "pallas", "interpret"],
+                    help="paged-attention backend (default: auto — kernel "
+                         "on TPU, ref elsewhere)")
+    ap.add_argument("--moe-backend", default=None,
+                    choices=["ref", "kernel", "pallas", "interpret"],
+                    help="grouped MoE GEMM backend (same auto policy)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=5000)
     args = ap.parse_args()
@@ -145,6 +152,8 @@ def main():
                                           decode_steps=args.decode_steps,
                                           prefix_cache=not args.no_prefix_cache,
                                           qos=args.qos,
+                                          attn_backend=args.attn_backend,
+                                          moe_backend=args.moe_backend,
                                           seed=args.seed))
     if args.http_port is not None:
         # live HTTP/SSE mode: no trace — requests arrive over the wire

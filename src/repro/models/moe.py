@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.moe_gemm.ops import grouped_matmul
 from repro.models.common import ModelConfig, dense_init, split_keys
 
 
@@ -265,18 +266,25 @@ def shared_expert_forward(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
 # Explicit per-rank decode paths (inside shard_map over `axis`)
 # ---------------------------------------------------------------------------
 
-def _grouped_ffn_local(cfg: ModelConfig, w13, w2, xd):
-    """xd (E_loc, C, D); w13 (E_loc, W13_loc, D); w2 (E_loc, D, W2_loc)."""
-    h = jnp.einsum("ecd,ewd->ecw", xd, w13,
-                   preferred_element_type=jnp.float32)
+def _grouped_ffn_local(cfg: ModelConfig, w13, w2, xd, *,
+                       backend: str | None = None):
+    """xd (E_loc, C, D); w13 (E_loc, W13_loc, D); w2 (E_loc, D, W2_loc).
+
+    Both GEMMs route through kernels/moe_gemm.grouped_matmul; w2 stores its
+    width axis last, so the same (E,C,D)x(E,W,D)->(E,C,W) contraction fits
+    both.  With fp32 compute_dtype the ref backend is bit-identical to the
+    old inline einsums; sub-fp32 compute pays one fp32->compute round-trip
+    per GEMM on the kernel path (tolerance policy: DESIGN.md §14).
+    """
+    h = grouped_matmul(xd, w13, backend=backend).astype(jnp.float32)
     hg, hu = jnp.split(h, 2, axis=-1)
     h = (jax.nn.silu(hg) * hu).astype(cfg.compute_dtype)
-    return jnp.einsum("ecw,edw->ecd", h, w2,
-                      preferred_element_type=jnp.float32)
+    return grouped_matmul(h, w2, backend=backend).astype(jnp.float32)
 
 
 def moe_decode_tp(cfg: ModelConfig, p: dict, x: jax.Array, axis: str | None,
-                  *, cap_factor: float | None = None):
+                  *, cap_factor: float | None = None,
+                  moe_backend: str | None = None):
     """TP decode: x (T, D) replicated over `axis`; w13/w2 are this rank's
     (E, W_loc) slices (leading G dim already consumed by shard_map).
     Output is a *partial* sum — caller psums together with attention output.
@@ -291,7 +299,8 @@ def moe_decode_tp(cfg: ModelConfig, p: dict, x: jax.Array, axis: str | None,
     disp, _ = _dispatch_tensors(khot, jnp.zeros((E,), jnp.float32), C)
     xd = jnp.einsum("tec,td->ecd", disp,
                     x.astype(jnp.float32)).astype(cfg.compute_dtype)
-    y = _grouped_ffn_local(cfg, p["w13"], p["w2"], xd)       # partial over axis
+    y = _grouped_ffn_local(cfg, p["w13"], p["w2"], xd,
+                           backend=moe_backend)              # partial over axis
     out = jnp.einsum("tec,ecd->td", disp * gate_full[..., None], y)
     out = out.astype(cfg.compute_dtype)
     if cfg.num_shared_experts:
@@ -301,7 +310,8 @@ def moe_decode_tp(cfg: ModelConfig, p: dict, x: jax.Array, axis: str | None,
 
 
 def moe_decode_ep(cfg: ModelConfig, p: dict, x: jax.Array, axis: str,
-                  lay: ExpertLayout, *, cap_factor: float | None = None):
+                  lay: ExpertLayout, *, cap_factor: float | None = None,
+                  moe_backend: str | None = None):
     """EP decode under shard_map: x (T_loc, D) is this rank's token slice.
 
     Dispatch entries (token, k, tp-replica) -> per-dest buffers -> all_to_all
@@ -352,7 +362,8 @@ def moe_decode_ep(cfg: ModelConfig, p: dict, x: jax.Array, axis: str,
                            dtype=jnp.float32)                 # (G*Cd, C2)
     xd = jnp.einsum("te,tc,td->ecd", ehot_f, slot2,
                     rx.reshape(G * Cd, D)).astype(cfg.compute_dtype)
-    y = _grouped_ffn_local(cfg, p["w13"], p["w2"], xd)        # (E_loc,C2,D)
+    y = _grouped_ffn_local(cfg, p["w13"], p["w2"], xd,
+                           backend=moe_backend)               # (E_loc,C2,D)
     y_back = jnp.einsum("te,tc,ecd->td", ehot_f, slot2,
                         y.astype(jnp.float32)).reshape(G, Cd, D)
     y_ret = lax.all_to_all(y_back, axis, split_axis=0, concat_axis=0,

@@ -75,10 +75,24 @@ class EngineConfig:
     # iteration late, and the engine drains to a step boundary before any
     # switch. N == 1 keeps the classic per-token host loop.
     decode_steps: int = 1
-    # paged-attention backend for the step fns (None = auto: Pallas on TPU,
-    # interpret elsewhere; "ref" = the pure-jnp oracle — the fast path on
-    # CPU hosts, where interpret-mode Pallas is a debugging mode)
+    # kernel backends for the step fns (kernels/dispatch.resolve_backend):
+    # None = auto (kernel on TPU, ref elsewhere; REPRO_FORCE_REF=1 forces
+    # ref), "ref" = pure-jnp oracle, "kernel"/"pallas" = the Pallas kernel
+    # (interpret mode off-TPU — a debugging path), "interpret" = interpret
+    # mode everywhere. attn_backend picks paged attention; moe_backend picks
+    # the grouped expert GEMM inside _ffn (DESIGN.md §14).
     attn_backend: str | None = None
+    moe_backend: str | None = None
+    # backend for the fused switch-staging movers (kv_pack page
+    # gather/scatter + expert_reshard permutes inside the jitted movers
+    # and the cross-world staged gathers); same resolution rules
+    switch_backend: str | None = None
+    # opt-in: warmup() also dry-runs the chunked switch movers for every
+    # active->other same-world layout pair, so the FIRST live switch
+    # selects compiled executables instead of compiling inside its window
+    # (paper §4.4). Off by default — tests and non-switching servers
+    # shouldn't pay the mover compiles.
+    warm_switches: bool = False
     # share page-aligned prompt prefixes across requests (refcounted pages
     # + CoW; DESIGN.md §6). Greedy outputs are byte-identical with the
     # cache on or off — it only removes redundant prefill compute/bytes.

@@ -127,7 +127,8 @@ class Executor:
         self._switchers: dict[int, SwitchExecutor] = {}
         self.xw = CrossWorldSwitcher(
             cfg, cc, self.Dd, self._moe_host,
-            model_axis=model_axis, data_axis=data_axis)
+            model_axis=model_axis, data_axis=data_axis,
+            backend=ecfg.switch_backend)
         self._key = jax.random.PRNGKey(ecfg.seed + 1)
         # completion sink for fused-pipeline retirements (the engine wires
         # this to Scheduler.finish_request)
@@ -161,7 +162,8 @@ class Executor:
         if sw is None:
             sw = SwitchExecutor(
                 self.cfg, self.cc, self.meshes[w], model_axis=self.m,
-                data_axis=self.da, direct_reshard=self.ecfg.direct_reshard)
+                data_axis=self.da, direct_reshard=self.ecfg.direct_reshard,
+                backend=self.ecfg.switch_backend)
             self._switchers[w] = sw
         return sw
 
@@ -196,7 +198,8 @@ class Executor:
             lambda: build_mixed_step(
                 self.cfg, self._mesh_for(layout), layout, self.cc, B, Sq=Sq,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend,
+                moe_backend=self.ecfg.moe_backend))
 
     def _decode_fn(self, layout: LayoutSpec, B: int):
         return self._mixed_fn(layout, B, 1)
@@ -207,7 +210,8 @@ class Executor:
             lambda: build_decode_loop(
                 self.cfg, self._mesh_for(layout), layout, self.cc, B, N,
                 temperature=self.ecfg.temperature, data_axes=(self.da,),
-                model_axis=self.m, attn_backend=self.ecfg.attn_backend))
+                model_axis=self.m, attn_backend=self.ecfg.attn_backend,
+                moe_backend=self.ecfg.moe_backend))
 
     def _prefill_fn(self, layout: LayoutSpec):
         Bp = get_layout(layout).prefill_width(self._world(layout))
@@ -275,6 +279,20 @@ class Executor:
                     self._decode_loop_fn(lo, b, self.ecfg.decode_steps)(
                         pk, jnp.zeros_like(self.kv_flat), st.tokens,
                         st.positions, st.budgets, st.block_tables, key)
+        if self.ecfg.warm_switches and self.ecfg.chunk_layers > 0:
+            # dry-run the chunked switch movers for every active->other
+            # same-world pair: the fused kv_pack/expert_reshard staging
+            # kernels compile here, so the first LIVE switch selects
+            # executables, never compiles (paper §4.4). Only pairs FROM
+            # the active layout are warmable — the movers trace over the
+            # resident expert buffers, which are stored in its layout.
+            sw = self.switcher
+            experts = self._experts if self.cfg.is_moe else None
+            for lo in (self.layouts if layouts is None else layouts):
+                if lo is self.active or self._is_cross_world(lo):
+                    continue
+                sw.warmup_movers(self.active, lo, experts, self.kv_flat,
+                                 self.ecfg.chunk_layers)
 
     def _assemble_pack(self, layout: str) -> dict:
         """Assembled (control-plane pack + resident experts) pytree, cached

@@ -168,12 +168,13 @@ def _write_pages(pool_l, k, v, page_ids, slots):
 
 
 def _ffn(cfg, lpk, h_flat, spec: LayoutSpec, m, lay_exp, cap_factor,
-         ep_axes=None):
+         ep_axes=None, moe_backend=None):
     """h_flat (T, D) -> (T, D) ffn output; TP-style paths return AFTER psum."""
     if cfg.is_moe:
         if spec.expert_kind == "tp":
             part = moe_decode_tp(cfg, lpk["moe"], h_flat, m,
-                                 cap_factor=cap_factor)
+                                 cap_factor=cap_factor,
+                                 moe_backend=moe_backend)
             return lax.psum(part, m)
         if spec.expert_full_mesh:
             # TP attention feeds a replicated batch; each model rank owns
@@ -184,10 +185,10 @@ def _ffn(cfg, lpk, h_flat, spec: LayoutSpec, m, lay_exp, cap_factor,
             Tl = T // Gm
             mine = lax.dynamic_slice_in_dim(h_flat, r * Tl, Tl, 0)
             y = moe_decode_ep(cfg, lpk["moe"], mine, ep_axes, lay_exp,
-                              cap_factor=cap_factor)
+                              cap_factor=cap_factor, moe_backend=moe_backend)
             return lax.all_gather(y, m, axis=0, tiled=True)
         return moe_decode_ep(cfg, lpk["moe"], h_flat, m, lay_exp,
-                             cap_factor=cap_factor)
+                             cap_factor=cap_factor, moe_backend=moe_backend)
     mlp = lpk["mlp"]
     if spec.dense_tp:
         if cfg.mlp_type == "swiglu":
@@ -261,7 +262,7 @@ def _squeeze_pack(cfg, spec: LayoutSpec, pack: dict) -> dict:
 
 def _chunk_core(cfg, spec: LayoutSpec, pack, pool, tokens, positions,
                 valid_len, bt, key, *, m, lay_exp, ep_axes, attn_backend,
-                temperature, page, maxp, Sq):
+                moe_backend, temperature, page, maxp, Sq):
     """One Sq-token step on squeezed per-rank params (inside shard_map).
 
     tokens (bs, Sq); positions/valid_len (bs,); bt (bs, maxp); pool = the
@@ -307,7 +308,7 @@ def _chunk_core(cfg, spec: LayoutSpec, pack, pool, tokens, positions,
         h = h + attn.astype(h.dtype)
         hn = apply_norm(cfg, h, lpk["mlp_norm"])
         y = _ffn(cfg, lpk, hn.reshape(bs * Sq, -1), spec, m, lay_exp,
-                 cap_factor=None, ep_axes=ep_axes)
+                 cap_factor=None, ep_axes=ep_axes, moe_backend=moe_backend)
         h = h + y.reshape(bs, Sq, -1).astype(h.dtype)
         pool = lax.dynamic_update_index_in_dim(pool, pool_l, li, axis=0)
         return (h, pool), None
@@ -353,6 +354,7 @@ def build_mixed_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
                      Bslot: int, Sq: int = 1, *, temperature: float = 0.0,
                      data_axes=("data",), model_axis: str = "model",
                      attn_backend: str | None = None,
+                     moe_backend: str | None = None,
                      return_logits: bool = False, donate: bool = True):
     """Build THE jitted serve step: one dispatch whose rows each carry a
     per-row `(start_pos, n_tokens)`, so decode rows (n_tokens == 1) and
@@ -389,8 +391,8 @@ def build_mixed_step(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
         nxt, new_pool, xl = _chunk_core(
             cfg, spec, pack, pool, tokens, positions, valid_len, bt, key,
             m=m, lay_exp=g["lay_exp"], ep_axes=g["ep_axes"],
-            attn_backend=attn_backend, temperature=temperature,
-            page=g["page"], maxp=maxp, Sq=Sq)
+            attn_backend=attn_backend, moe_backend=moe_backend,
+            temperature=temperature, page=g["page"], maxp=maxp, Sq=Sq)
         out = (nxt.reshape(1, bs), new_pool.reshape(1, 1, -1))
         if return_logits:
             head = pack["embed"] if cfg.tie_embeddings else pack["lm_head"]
@@ -422,7 +424,8 @@ build_serve_step = build_mixed_step
 def build_decode_loop(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
                       Bslot: int, steps: int, *, temperature: float = 0.0,
                       data_axes=("data",), model_axis: str = "model",
-                      attn_backend: str | None = None, donate: bool = True):
+                      attn_backend: str | None = None,
+                      moe_backend: str | None = None, donate: bool = True):
     """Fuse `steps` decode substeps under ONE dispatch (DESIGN.md §5).
 
     A `lax.fori_loop` over the single-step body: the sampled token is fed
@@ -466,8 +469,8 @@ def build_decode_loop(cfg: ModelConfig, mesh, layout: str, cc: CacheConfig,
                 cfg, spec, pack, pool, tok[:, None], pos, active, bt,
                 jax.random.fold_in(key, i),
                 m=m, lay_exp=g["lay_exp"], ep_axes=g["ep_axes"],
-                attn_backend=attn_backend, temperature=temperature,
-                page=g["page"], maxp=maxp, Sq=1)
+                attn_backend=attn_backend, moe_backend=moe_backend,
+                temperature=temperature, page=g["page"], maxp=maxp, Sq=1)
             live = active > 0
             out = out.at[:, i].set(jnp.where(live, nxt, 0))
             return (pool, jnp.where(live, nxt, tok), pos + active,

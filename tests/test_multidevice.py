@@ -653,3 +653,40 @@ for layout in (TP, EP):
     assert out == ref, (layout, out, ref)
 print("OK")
 """, timeout=900)
+
+
+def test_moe_backend_parity_across_live_switch():
+    """moe_backend="kernel" (interpret off-TPU) must reproduce the einsum
+    decode path token-for-token on the real (2, 4) mesh, including across
+    a live tp->ep chunked switch (DESIGN.md §14 acceptance)."""
+    run_multidevice(COMMON + """
+from repro.core.layouts import EP, TP
+from repro.core.policy import PolicyConfig
+from repro.serving.engine import EngineConfig, MoebiusEngine
+from repro.serving.kvcache import CacheConfig
+from repro.serving.request import Request
+cc = CacheConfig(page_size=4, pages_ep=32, max_pages_per_req=16)
+def make_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=list(rng.integers(5, 200,
+            int(rng.integers(3, 10)))), max_new_tokens=int(rng.integers(4, 12)),
+            arrival_s=0.0) for i in range(6)]
+def run(backend, switch_at=None):
+    pol = PolicyConfig(t_high=10**9, t_low=-1, window=1, cooldown_s=10**9)
+    eng = MoebiusEngine(cfg, mesh, cc, ecfg=EngineConfig(
+        start_layout=TP, ladder=(4, 8), prefill_chunk=8, temperature=0.0,
+        policy=pol, seed=0, chunk_layers=1, moe_backend=backend))
+    for r in make_reqs(): eng.submit(r)
+    i = 0
+    while eng.pending or eng.waiting or eng.prefilling or eng.running:
+        if switch_at is not None and i == switch_at:
+            eng.execute_switch(EP)
+        eng.step(); i += 1
+        assert i < 500
+    return {r.rid: r.output for r in eng.finished}
+for at in (None, 4):
+    ref = run("ref", at)
+    ker = run("kernel", at)
+    assert ker == ref, f"kernel MoE diverged on mesh (switch_at={at})"
+print("OK")
+""", timeout=1200)
